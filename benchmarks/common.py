@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: synthetic payloads, latency injection, CSV."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Callable, Iterable, Iterator
+
+import numpy as np
+
+
+def payload_stream(n_items: int, item_bytes: int, *, latency_s: float = 0.0,
+                   jitter_every: int = 1, seed: int = 0
+                   ) -> Iterator[np.ndarray]:
+    """Items of `item_bytes`, with optional per-item source latency
+    (the tc-netem analogue: injected delay on the producing side)."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 255, max(item_bytes, 1), dtype=np.uint8)
+    for i in range(n_items):
+        if latency_s and i % jitter_every == 0:
+            time.sleep(latency_s)
+        yield base
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+    sys.stdout.flush()
+
+
+def time_it(fn: Callable[[], Any], *, repeats: int = 3) -> tuple[float, Any]:
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        out = fn()
+        best = min(best, time.monotonic() - t0)
+    return best, out

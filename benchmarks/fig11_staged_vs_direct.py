@@ -1,0 +1,28 @@
+"""Fig. 11 — the zx-vs-aws-cli contrast: a co-designed staged path vs the
+abstracted synchronous path, both with integrity on (the paper's transfer
+carried full checksumming).  The staged path overlaps hash + staging +
+delivery; the direct path serializes them — the 'cloud abstraction
+penalty' (§3.6: 30-50%)."""
+
+from repro.core.mover import MoverConfig, UnifiedDataMover
+
+from .common import emit, payload_stream
+
+N, ITEM = 24, 1 << 20
+
+
+def run() -> None:
+    mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
+                                         staging_workers=4, checksum=True))
+    staged = mover.bulk_transfer(
+        payload_stream(N, ITEM, latency_s=5e-3), lambda x: None)
+    direct = mover.direct_transfer(
+        payload_stream(N, ITEM, latency_s=5e-3), lambda x: None)
+    assert staged.checksum == direct.checksum, "integrity mismatch"
+    penalty = 1.0 - (direct.throughput_bytes_per_s
+                     / staged.throughput_bytes_per_s)
+    emit("fig11/staged_zx_like", staged.elapsed_s / N * 1e6,
+         f"{staged.throughput_bytes_per_s / 1e6:.1f} MB/s (checksummed)")
+    emit("fig11/direct_cli_like", direct.elapsed_s / N * 1e6,
+         f"{direct.throughput_bytes_per_s / 1e6:.1f} MB/s "
+         f"abstraction_penalty={penalty:.1%}")

@@ -1,0 +1,37 @@
+"""Figs. 4-6 — transfer sweeps across item sizes x transport schedules.
+
+The paper's finding: with a co-designed path, the CCA choice (BBR vs
+CUBIC vs Reno) is immaterial — throughput is flat across file sizes from
+KiB to TiB.  The ICI-era analogue of the 'transport algorithm' knob is
+the staging schedule (worker count / buffer depth).  A balanced staged
+path should show the same insensitivity: varying the schedule barely
+moves throughput, while item size only matters at the tiny end
+(per-item latency amortization, §3.4).
+"""
+
+from repro.core.mover import MoverConfig, UnifiedDataMover
+
+from .common import emit, payload_stream
+
+TOTAL = 24 << 20   # 24 MiB per sweep point
+SCHEDULES = {"reno-like": (2, 1), "cubic-like": (4, 2), "bbr-like": (8, 4)}
+
+
+def run() -> None:
+    for size_kib in (1, 16, 256, 4096):
+        item = size_kib << 10
+        n = max(4, TOTAL // item)
+        rates = {}
+        for sched, (cap, workers) in SCHEDULES.items():
+            mover = UnifiedDataMover(MoverConfig(staging_capacity=cap,
+                                                 staging_workers=workers,
+                                                 checksum=False))
+            rep = mover.bulk_transfer(payload_stream(n, item, latency_s=2e-4),
+                                      lambda x: None)
+            rates[sched] = rep.throughput_bytes_per_s
+            emit(f"fig4/item_{size_kib}KiB_{sched}",
+                 rep.elapsed_s / n * 1e6,
+                 f"{rep.throughput_bytes_per_s / 1e6:.1f} MB/s")
+        spread = (max(rates.values()) - min(rates.values())) / max(rates.values())
+        emit(f"fig4/item_{size_kib}KiB_schedule_spread", 0.0,
+             f"{spread:.2%} (co-designed path is schedule-insensitive)")

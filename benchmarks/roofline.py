@@ -1,0 +1,43 @@
+"""Roofline table — reads the dry-run artifacts (experiments/dryrun/) and
+emits the three-term analysis per (arch x shape x mesh) cell.  This is
+the §Roofline deliverable's machine-readable form; EXPERIMENTS.md renders
+the same records."""
+
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run() -> None:
+    if not os.path.isdir(DRYRUN_DIR):
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all` first")
+        return
+    records = []
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, name)) as f:
+            records.append(json.load(f))
+    n_ok = n_skip = n_err = 0
+    for r in records:
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            emit(f"roofline/{cell}", 0.0, "ERROR " + r.get("error", "?")[:80])
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        step_us = rf["step_time_s"] * 1e6
+        emit(f"roofline/{cell}", step_us,
+             f"dom={rf['dominant']} compute={rf['t_compute']*1e3:.1f}ms "
+             f"mem={rf['t_memory']*1e3:.1f}ms coll={rf['t_collective']*1e3:.1f}ms "
+             f"frac={rf['roofline_fraction']:.3f} "
+             f"useful={rf.get('useful_compute_fraction') or 0:.2f}")
+    emit("roofline/summary", 0.0, f"{n_ok} ok, {n_skip} skipped, {n_err} errors")

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows.  Roofline terms come from the
+dry-run artifacts (compile-time analysis, CPU container); host-path
+numbers (staging/mover) are measured wall-clock and used for *relative*
+claims mirroring the paper's figures.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
+"""
+
+import argparse
+import sys
+import traceback
+
+from . import (fig2_latency_sweep, fig4_cca_sweep, fig8_bulk_streaming,
+               fig10_storage_bound, fig11_staged_vs_direct, global_tuning,
+               kernel_bench, roofline, table5_basin_volumes)
+
+SUITES = {
+    "table5": table5_basin_volumes,
+    "fig2": fig2_latency_sweep,
+    "fig4": fig4_cca_sweep,
+    "fig8": fig8_bulk_streaming,
+    "fig10": fig10_storage_bound,
+    "fig11": fig11_staged_vs_direct,
+    "global_tuning": global_tuning,
+    "kernels": kernel_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            SUITES[name].run()
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table 5 — daily data volume achievable at common network speeds,
+computed from the basin model (and the TPU-side equivalents)."""
+
+from repro.core.basin import GBPS, daily_volume_bytes, paper_basin, recommend_tier
+
+from .common import emit
+
+
+def run() -> None:
+    for gbps, note in [(1, "edge/5G"), (10, "hp-edge"), (100, "core-1PB/day")]:
+        vol_tb = daily_volume_bytes(gbps * GBPS) / 1e12
+        emit(f"table5/daily_volume_{gbps}gbps", 0.0,
+             f"{vol_tb:.1f} TB/day tier={recommend_tier(gbps * GBPS).value}")
+    # end-to-end: what the full paper basin actually sustains at 100G
+    b = paper_basin(link_gbps=100.0, storage_gbps=40.0)
+    rep = b.bottleneck()
+    emit("table5/paper_basin_achievable", 0.0,
+         f"{rep.achievable_bytes_per_s / GBPS:.1f} Gbps achieved "
+         f"(bottleneck={rep.element} gap={rep.fidelity_gap:.2f})")
+    b2 = paper_basin(link_gbps=100.0, storage_gbps=250.0)
+    emit("table5/codesigned_basin_achievable", 0.0,
+         f"{b2.bottleneck().achievable_bytes_per_s / GBPS:.1f} Gbps "
+         f"(balanced storage: gap={b2.bottleneck().fidelity_gap:.2f})")

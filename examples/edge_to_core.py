@@ -1,0 +1,67 @@
+"""The paper's own scenario, executable: move a dataset from an erratic
+edge source to a core sink across a latency-bearing channel, staged
+through burst buffers, with integrity on — then read the fidelity report
+and the basin model's verdict side by side.
+
+    PYTHONPATH=src python examples/edge_to_core.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.basin import GBPS, paper_basin, recommend_tier
+from repro.core.mover import MoverConfig, UnifiedDataMover
+
+
+def main() -> None:
+    # --- plan: the basin model predicts the path ---------------------------
+    basin = paper_basin(link_gbps=100.0, rtt_ms=74.0, storage_gbps=40.0)
+    plan = basin.bottleneck()
+    print(f"[basin] bottleneck: {plan.element} "
+          f"({plan.achievable_bytes_per_s / GBPS:.1f} Gbps achievable, "
+          f"fidelity gap {plan.fidelity_gap:.0%})")
+    print(f"[basin] appliance tier: "
+          f"{recommend_tier(plan.achievable_bytes_per_s).value}; "
+          f"buffer >= {basin.buffer_bytes_required() / 2**20:.0f} MiB; "
+          f"prefetch depth {basin.prefetch_depth(64 << 20)}")
+
+    # --- execute: staged, checksummed bulk transfer across the "WAN" --------
+    import time
+    n_items, item = 32, 1 << 20
+    rng = np.random.default_rng(0)
+    dataset = [rng.integers(0, 255, item, dtype=np.uint8)
+               for _ in range(n_items)]
+
+    def wan_hop(chunk):
+        time.sleep(0.01)                # per-item link latency
+        return chunk
+
+    received = []
+    mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
+                                         staging_workers=4, checksum=True),
+                             basin=basin)
+    report = mover.bulk_transfer(iter(dataset), received.append,
+                                 transforms=[("wan", wan_hop)])
+    print(f"[mover] {report.items} items, "
+          f"{report.bytes / 2**20:.0f} MiB in {report.elapsed_s:.2f}s "
+          f"({report.throughput_bytes_per_s / 1e6:.0f} MB/s)")
+    print(f"[mover] checksum {report.checksum[:16]}…; "
+          f"bottleneck stage: {report.bottleneck_stage().name}")
+
+    # --- compare against the unstaged single-stream path --------------------
+    t0 = time.monotonic()
+    for chunk in dataset:
+        wan_hop(chunk)                  # every item pays the RTT serially
+    direct_s = time.monotonic() - t0
+    direct_bps = n_items * item / direct_s
+    speedup = report.throughput_bytes_per_s / direct_bps
+    print(f"[mover] staged vs single-stream: {speedup:.2f}x "
+          f"(the co-design dividend) — OK")
+
+
+if __name__ == "__main__":
+    main()

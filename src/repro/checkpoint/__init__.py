@@ -1,0 +1,5 @@
+from .manager import (CheckpointManager, CheckpointMeta, latest_step,
+                      load_checkpoint, save_checkpoint, verify_checkpoint)
+
+__all__ = ["CheckpointManager", "CheckpointMeta", "latest_step",
+           "load_checkpoint", "save_checkpoint", "verify_checkpoint"]

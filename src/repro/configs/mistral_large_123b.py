@@ -1,0 +1,24 @@
+"""mistral-large-123b — the largest assigned dense decoder.
+
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified] 88L d_model=12288
+96H (GQA kv=8) d_ff=28672 vocab=32768.  FSDP x TP sharding is mandatory
+at this size (see launch/sharding defaults).  Pure full attention ->
+long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=32768,
+    rope_theta=1_000_000.0,
+    max_seq_len=131072,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)

@@ -1,0 +1,21 @@
+"""phi3-mini-3.8b — dense decoder, RoPE/SwiGLU, MHA (GQA kv=32).
+
+[arXiv:2404.14219; unverified] 32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064.  Pure full attention -> long_500k skipped (DESIGN.md §5).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+    rope_theta=10000.0,
+    max_seq_len=131072,
+    source="arXiv:2404.14219",
+)

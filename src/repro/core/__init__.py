@@ -1,0 +1,60 @@
+"""Core: the paper's contribution as composable modules.
+
+* :mod:`repro.core.basin` — Drainage Basin Pattern (analytic path model)
+* :mod:`repro.core.burst_buffer` — low-jitter staging buffer
+* :mod:`repro.core.staging` — staging workers / pipelines
+* :mod:`repro.core.mover` — unified bulk/streaming data mover
+* :mod:`repro.core.fidelity` — fidelity-gap / roofline engine over compiled HLO
+* :mod:`repro.core.codesign` — co-design plan enumeration + analytic ranking
+"""
+
+from .basin import (
+    ApplianceTier,
+    BottleneckReport,
+    DrainageBasin,
+    Link,
+    Tier,
+    TierKind,
+    daily_volume_bytes,
+    paper_basin,
+    recommend_tier,
+    tpu_input_basin,
+    GBPS,
+    MIB,
+    GIB,
+    TIB,
+)
+from .burst_buffer import BufferClosed, BufferStats, BurstBuffer
+from .codesign import (
+    CodesignPlan,
+    PlanPrediction,
+    WorkloadSpec,
+    enumerate_plans,
+    predict,
+    rank_plans,
+    workload_from_config,
+)
+from .fidelity import (
+    HardwareSpec,
+    HloCost,
+    RooflineReport,
+    TPU_V5E,
+    analyze_hlo_text,
+    model_flops_dense,
+    roofline,
+)
+from .mover import MoverConfig, TransferReport, UnifiedDataMover
+from .staging import Stage, StagePipeline, StageReport
+
+__all__ = [
+    "ApplianceTier", "BottleneckReport", "DrainageBasin", "Link", "Tier",
+    "TierKind", "daily_volume_bytes", "paper_basin", "recommend_tier",
+    "tpu_input_basin", "GBPS", "MIB", "GIB", "TIB",
+    "BufferClosed", "BufferStats", "BurstBuffer",
+    "CodesignPlan", "PlanPrediction", "WorkloadSpec", "enumerate_plans",
+    "predict", "rank_plans", "workload_from_config",
+    "HardwareSpec", "HloCost", "RooflineReport", "TPU_V5E",
+    "analyze_hlo_text", "model_flops_dense", "roofline",
+    "MoverConfig", "TransferReport", "UnifiedDataMover",
+    "Stage", "StagePipeline", "StageReport",
+]

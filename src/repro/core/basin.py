@@ -1,0 +1,287 @@
+"""Drainage Basin Pattern — the paper's conceptual model, made executable.
+
+The paper (Fig. 1) models the full data-movement spectrum as a drainage
+basin: *headwaters* (edge sources, 1-10 Gbps, erratic), *tributaries*
+(aggregation points), and the *main channel* (core, >= 100 Gbps,
+deterministic).  Matching the appliance tier (Mini / Mini+ / Core) to the
+basin position - network position x burst-buffer capacity x compute - is
+the paper's planning discipline.
+
+This module is the executable form of that model.  A :class:`DrainageBasin`
+is an ordered chain of :class:`Tier` nodes joined by :class:`Link` edges.
+From it we derive, analytically:
+
+* the end-to-end *achievable throughput* (min over the path - the paper's
+  "a chain is only as strong as its weakest link", section 3.4),
+* the *fidelity gap* of any link (section 1: theoretical capacity vs.
+  application throughput),
+* burst-buffer sizing via Little's law (buffer >= bandwidth x jitter
+  window - section 2.1's "low-jitter interface"),
+* the appliance tier recommendation (Fig. 3).
+
+Inside a TPU installation the same pattern recurs (DESIGN.md section 2):
+dataset store -> host RAM staging -> HBM -> ICI/DCN.  The training data
+pipeline, the checkpoint engine and the co-design planner all size their
+buffers and schedules from this model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterable, Sequence
+
+# ---------------------------------------------------------------------------
+# Units
+# ---------------------------------------------------------------------------
+
+GBPS = 1e9 / 8.0        # bytes/s per Gbit/s
+MIB = 1024 ** 2
+GIB = 1024 ** 3
+TIB = 1024 ** 4
+
+
+class TierKind(enum.Enum):
+    """Role of a node in the basin."""
+
+    SOURCE = "source"            # production storage / instrument / dataset store
+    BURST_BUFFER = "burst_buffer"  # staging layer (NVMe in the paper; host RAM here)
+    CHANNEL = "channel"          # a network hop (WAN in the paper; ICI/DCN/PCIe here)
+    SINK = "sink"                # destination storage / device HBM
+
+
+class ApplianceTier(enum.Enum):
+    """Fig. 3 appliance spectrum."""
+
+    MINI = "mini"          # edge, 1-10 Gbps
+    MINI_PLUS = "mini+"    # aggregation, 10-100 Gbps
+    CORE = "core"          # core, >= 100 Gbps
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """One node in the drainage basin.
+
+    ``bandwidth_bytes_per_s`` is the *sustained* rate the tier can absorb or
+    emit.  ``jitter_s`` is the width of the stochastic service-time window
+    (the paper's "erratic production storage"); deterministic tiers have
+    ~zero jitter.  ``latency_s`` is per-operation setup latency.
+    """
+
+    name: str
+    kind: TierKind
+    bandwidth_bytes_per_s: float
+    latency_s: float = 0.0
+    jitter_s: float = 0.0
+    capacity_bytes: float = math.inf
+
+    def __post_init__(self) -> None:
+        if self.bandwidth_bytes_per_s <= 0:
+            raise ValueError(f"tier {self.name!r}: bandwidth must be > 0")
+        if self.latency_s < 0 or self.jitter_s < 0:
+            raise ValueError(f"tier {self.name!r}: latency/jitter must be >= 0")
+
+    def effective_bandwidth(self, item_bytes: float) -> float:
+        """Bandwidth observed when moving items of ``item_bytes``.
+
+        Per-item latency amortizes over the item size - this is the paper's
+        small-file penalty (section 3.4: "per-file overheads ... disrupt
+        effective pipelining").
+        """
+        if item_bytes <= 0:
+            raise ValueError("item_bytes must be > 0")
+        t = item_bytes / self.bandwidth_bytes_per_s + self.latency_s
+        return item_bytes / t
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """Directed edge between two tiers (a hop on the data path)."""
+
+    src: str
+    dst: str
+    bandwidth_bytes_per_s: float
+    rtt_s: float = 0.0
+
+    def bdp_bytes(self) -> float:
+        """Bandwidth-delay product (section 3.1) - the in-flight window
+        required to keep the link full."""
+        return self.bandwidth_bytes_per_s * self.rtt_s
+
+
+@dataclasses.dataclass
+class BottleneckReport:
+    """Where the basin chokes and by how much."""
+
+    element: str                 # tier or link name
+    kind: str                    # "tier" | "link"
+    bandwidth_bytes_per_s: float
+    achievable_bytes_per_s: float
+    theoretical_bytes_per_s: float  # fastest element on the path
+
+    @property
+    def fidelity_gap(self) -> float:
+        """Paper section 1: 1 - achieved / theoretical-capacity.  0 = perfect."""
+        if self.theoretical_bytes_per_s <= 0:
+            return 0.0
+        return 1.0 - self.achievable_bytes_per_s / self.theoretical_bytes_per_s
+
+
+class DrainageBasin:
+    """An ordered data path: SOURCE -> [BURST_BUFFER|CHANNEL]* -> SINK."""
+
+    def __init__(self, tiers: Sequence[Tier], links: Sequence[Link] | None = None):
+        if len(tiers) < 2:
+            raise ValueError("a basin needs at least a source and a sink")
+        names = [t.name for t in tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        self.tiers = list(tiers)
+        self._by_name = {t.name: t for t in tiers}
+        if links is None:
+            # implicit infinite-bandwidth adjacency; bandwidth limited by tiers
+            links = [
+                Link(a.name, b.name, min(a.bandwidth_bytes_per_s, b.bandwidth_bytes_per_s))
+                for a, b in zip(tiers, tiers[1:])
+            ]
+        for l in links:
+            if l.src not in self._by_name or l.dst not in self._by_name:
+                raise ValueError(f"link {l.src}->{l.dst} references unknown tier")
+        self.links = list(links)
+
+    # -- analysis ----------------------------------------------------------
+
+    def path_elements(self) -> Iterable[tuple[str, str, float]]:
+        for t in self.tiers:
+            yield (t.name, "tier", t.bandwidth_bytes_per_s)
+        for l in self.links:
+            yield (f"{l.src}->{l.dst}", "link", l.bandwidth_bytes_per_s)
+
+    def achievable_throughput(self, item_bytes: float | None = None) -> float:
+        """Sustained end-to-end rate = min over every tier and link.
+
+        With ``item_bytes`` given, tier latencies amortize per item
+        (small-item regimes choke on latency, not bandwidth).
+        """
+        rates = []
+        for t in self.tiers:
+            rates.append(
+                t.effective_bandwidth(item_bytes) if item_bytes else t.bandwidth_bytes_per_s
+            )
+        rates.extend(l.bandwidth_bytes_per_s for l in self.links)
+        return min(rates)
+
+    def bottleneck(self, item_bytes: float | None = None) -> BottleneckReport:
+        best_name, best_kind, best_bw = None, None, math.inf
+        theoretical = 0.0
+        for t in self.tiers:
+            bw = t.effective_bandwidth(item_bytes) if item_bytes else t.bandwidth_bytes_per_s
+            theoretical = max(theoretical, t.bandwidth_bytes_per_s)
+            if bw < best_bw:
+                best_name, best_kind, best_bw = t.name, "tier", bw
+        for l in self.links:
+            theoretical = max(theoretical, l.bandwidth_bytes_per_s)
+            if l.bandwidth_bytes_per_s < best_bw:
+                best_name, best_kind, best_bw = f"{l.src}->{l.dst}", "link", l.bandwidth_bytes_per_s
+        return BottleneckReport(
+            element=best_name,
+            kind=best_kind,
+            bandwidth_bytes_per_s=best_bw,
+            achievable_bytes_per_s=best_bw,
+            theoretical_bytes_per_s=theoretical,
+        )
+
+    def fidelity_gap(self, achieved_bytes_per_s: float, against: str | None = None) -> float:
+        """Measured-vs-provisioned gap for the whole basin or one element."""
+        if against is None:
+            capacity = max(bw for _, _, bw in self.path_elements())
+        else:
+            matches = [bw for n, _, bw in self.path_elements() if n == against]
+            if not matches:
+                raise KeyError(f"no element named {against!r}")
+            capacity = matches[0]
+        return 1.0 - achieved_bytes_per_s / capacity
+
+    def transfer_time_s(self, total_bytes: float, item_bytes: float | None = None) -> float:
+        return total_bytes / self.achievable_throughput(item_bytes)
+
+    # -- planning ----------------------------------------------------------
+
+    def buffer_bytes_required(self, link_name: str | None = None) -> float:
+        """Little's-law burst-buffer sizing (section 2.1).
+
+        The staging buffer in front of a channel must hold at least
+        ``channel_bandwidth x (source jitter window + channel RTT)`` so the
+        deterministic sink never starves while the stochastic source stalls.
+        """
+        channel_bw = self.achievable_throughput()
+        jitter = max((t.jitter_s for t in self.tiers), default=0.0)
+        rtt = max((l.rtt_s for l in self.links), default=0.0)
+        return channel_bw * (jitter + rtt) * 2.0  # x2: double buffering
+
+    def prefetch_depth(self, item_bytes: float) -> int:
+        """Number of in-flight items to keep the channel full (>= 2)."""
+        need = self.buffer_bytes_required()
+        return max(2, math.ceil(need / max(item_bytes, 1.0)))
+
+
+def recommend_tier(target_bytes_per_s: float) -> ApplianceTier:
+    """Fig. 3: match the appliance tier to the basin position."""
+    gbps = target_bytes_per_s / GBPS
+    if gbps < 10.0:
+        return ApplianceTier.MINI
+    if gbps < 100.0:
+        return ApplianceTier.MINI_PLUS
+    return ApplianceTier.CORE
+
+
+def daily_volume_bytes(rate_bytes_per_s: float) -> float:
+    """Table 5: daily data volume achievable at a sustained rate."""
+    return rate_bytes_per_s * 86400.0
+
+
+# ---------------------------------------------------------------------------
+# Pre-built basins
+# ---------------------------------------------------------------------------
+
+def paper_basin(link_gbps: float = 100.0, rtt_ms: float = 74.0,
+                storage_gbps: float = 40.0, storage_jitter_ms: float = 50.0) -> DrainageBasin:
+    """The paper's canonical path: production storage -> burst buffer ->
+    WAN -> burst buffer -> production storage (defaults: the Switzerland ->
+    California 100 Gbps production link, ~74 ms latency, section 3.3)."""
+    bb_bw = 2.0 * link_gbps * GBPS  # NVMe staging provisioned above line rate
+    return DrainageBasin(
+        tiers=[
+            Tier("prod-storage-src", TierKind.SOURCE, storage_gbps * GBPS,
+                 latency_s=2e-3, jitter_s=storage_jitter_ms / 1e3),
+            Tier("burst-buffer-src", TierKind.BURST_BUFFER, bb_bw, latency_s=50e-6),
+            Tier("wan", TierKind.CHANNEL, link_gbps * GBPS, latency_s=rtt_ms / 2e3),
+            Tier("burst-buffer-dst", TierKind.BURST_BUFFER, bb_bw, latency_s=50e-6),
+            Tier("prod-storage-dst", TierKind.SINK, storage_gbps * GBPS,
+                 latency_s=2e-3, jitter_s=storage_jitter_ms / 1e3),
+        ],
+        links=[
+            Link("prod-storage-src", "burst-buffer-src", storage_gbps * GBPS),
+            Link("burst-buffer-src", "wan", link_gbps * GBPS, rtt_s=rtt_ms / 1e3),
+            Link("wan", "burst-buffer-dst", link_gbps * GBPS, rtt_s=rtt_ms / 1e3),
+            Link("burst-buffer-dst", "prod-storage-dst", storage_gbps * GBPS),
+        ],
+    )
+
+
+def tpu_input_basin(*, dataset_gbps: float = 8.0, dataset_jitter_ms: float = 20.0,
+                    host_staging_gbps: float = 200.0, pcie_gbps: float = 128.0,
+                    hbm_gbps: float = 819.0 * 8.0) -> DrainageBasin:
+    """The training-input path on one host: dataset store -> host RAM burst
+    buffer -> PCIe -> device HBM (DESIGN.md section 2 mapping)."""
+    return DrainageBasin(
+        tiers=[
+            Tier("dataset-store", TierKind.SOURCE, dataset_gbps * GBPS,
+                 latency_s=5e-3, jitter_s=dataset_jitter_ms / 1e3),
+            Tier("host-burst-buffer", TierKind.BURST_BUFFER, host_staging_gbps * GBPS,
+                 latency_s=10e-6),
+            Tier("pcie", TierKind.CHANNEL, pcie_gbps * GBPS, latency_s=20e-6),
+            Tier("hbm", TierKind.SINK, hbm_gbps * GBPS, latency_s=1e-6),
+        ]
+    )

@@ -1,0 +1,532 @@
+"""Fidelity gap / roofline engine — the paper's headline metric, quantified.
+
+Paper section 1 defines the *fidelity gap*: the discrepancy between
+theoretical link capacity and actual application-level throughput.  For a
+compiled TPU step the same three-way decomposition applies (DESIGN.md
+section 6):
+
+    t_compute    = FLOPs            / peak FLOP/s          (the MXU "link")
+    t_memory     = HBM bytes        / HBM bandwidth        (the HBM "link")
+    t_collective = collective bytes / ICI link bandwidth   (the ICI "link")
+
+The dominant term is the bottleneck tier of the on-chip drainage basin;
+the ratio of useful model FLOPs to compiled FLOPs is the fidelity of the
+compute path itself (catching remat/redundancy waste).
+
+``jax``'s ``compiled.cost_analysis()`` reports *per-device* numbers and
+counts ``while`` bodies **once** (verified empirically — see DESIGN.md),
+which under-counts scan-over-layers models by a factor of ``n_layers``.
+This module therefore walks the optimized HLO text directly:
+
+* per-computation symbol tables give every operand shape,
+* ``dot`` FLOPs   = 2 x |out| x contracted-dims (from the lhs shape),
+* bytes accessed  = operand+output bytes of every materializing top-level
+  op (fusion internals are free — fusion boundaries approximate HBM
+  traffic, the TPU accounting convention),
+* ``while`` ops carry ``backend_config known_trip_count`` — costs inside
+  the body are multiplied through, recursively,
+* collective ops (incl. ``-start`` async forms) are tallied separately
+  with their replica-group sizes.
+
+Everything is pure text parsing: no device execution, usable on the
+CPU-only dry-run container against the 512-device emulated mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import Counter, defaultdict
+from typing import Any, Optional
+
+# ---------------------------------------------------------------------------
+# Hardware model (TPU v5e, per task spec)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bandwidth: float = 819e9     # bytes/s per chip
+    ici_bandwidth: float = 50e9      # bytes/s per ICI link (~spec)
+    hbm_bytes: float = 16 * 1024**3  # capacity per chip
+
+
+TPU_V5E = HardwareSpec()
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+# top-level opcodes that materialize HBM traffic (fusion internals are free)
+_MATERIALIZING = _COLLECTIVES | {
+    "fusion", "dot", "convolution", "custom-call", "copy", "reduce", "sort",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice", "broadcast",
+    "iota", "transpose", "concatenate", "slice", "pad", "reverse", "rng",
+    "reduce-window", "select-and-scatter", "cholesky", "triangular-solve",
+    "convert", "select", "compare", "add", "multiply", "subtract", "divide",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "maximum",
+    "minimum", "negate", "abs", "clamp", "floor", "ceil", "sign",
+}
+
+
+def _leaf_shapes(shape_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All array leaves of a (possibly tuple) HLO shape string."""
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0.0
+    for dtype, shape in _leaf_shapes(shape_str):
+        total += _DTYPE_BYTES[dtype] * math.prod(shape) if shape else _DTYPE_BYTES[dtype]
+    return int(total)
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: list[str]
+    line: str
+
+    def attr(self, pattern: str) -> Optional[str]:
+        m = re.search(pattern, self.line)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: list[_Instr]
+    symbols: dict[str, str]  # instr name -> shape string
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-~]+)\s*\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-~]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)\("
+)
+
+
+def parse_hlo_module(text: str) -> tuple[dict[str, _Computation], Optional[str], int]:
+    """Parse optimized HLO text into computations.
+
+    Returns (computations, entry_name, num_partitions).
+    """
+    num_partitions = 1
+    m = re.search(r"num_partitions=(\d+)", text)
+    if m:
+        num_partitions = int(m.group(1))
+
+    comps: dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    current: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            hm = _COMP_HEADER_RE.match(line)
+            if hm:
+                name = hm.group(1)
+                current = _Computation(name=name, instrs=[], symbols={})
+                if line.startswith("ENTRY"):
+                    entry = name
+            continue
+        if line == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, shape_str, opcode = im.group(1), im.group(2), im.group(3)
+        # operand names: %refs inside the first balanced paren group after opcode
+        paren_start = line.find(opcode + "(") + len(opcode)
+        depth, end = 0, len(line)
+        for i in range(paren_start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_region = line[paren_start:end + 1]
+        operands = re.findall(r"%([\w\.\-~]+)", operand_region)
+        instr = _Instr(name=name, shape_str=shape_str, opcode=opcode,
+                       operands=operands, line=line)
+        current.instrs.append(instr)
+        current.symbols[name] = shape_str
+    return comps, entry, num_partitions
+
+
+def _dot_flops(instr: _Instr, symbols: dict[str, str]) -> float:
+    out_elems = sum(math.prod(s) if s else 1 for _, s in _leaf_shapes(instr.shape_str))
+    cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    if not cdims_m or not instr.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_shape_str = symbols.get(instr.operands[0], "")
+    leaves = _leaf_shapes(lhs_shape_str)
+    if not leaves:
+        return 2.0 * out_elems
+    lhs_shape = leaves[0][1]
+    k = 1
+    for d in cdims_m.group(1).split(","):
+        if d and int(d) < len(lhs_shape):
+            k *= lhs_shape[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _group_size(instr: _Instr, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[([\d,]+)\]<=", instr.line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if dims else num_partitions
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", instr.line)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Per-device cost totals extracted from one compiled SPMD module."""
+
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0                     # sum of operand bytes (spec formula)
+    collective_link_bytes: float = 0.0                # ring-model per-device link traffic
+    collective_by_type: dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: dict[str, int] = dataclasses.field(default_factory=dict)
+    flops_by_op: dict[str, float] = dataclasses.field(default_factory=dict)
+    flashable_bytes: float = 0.0      # bytes inside kernel-fusable regions
+    flashable_flops: float = 0.0
+    bytes_by_op: dict[str, float] = dataclasses.field(default_factory=dict)
+    num_partitions: int = 1
+    unknown_trip_counts: int = 0
+
+    def merge_scaled(self, other: "HloCost", mult: float) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.collective_link_bytes += other.collective_link_bytes * mult
+        for k, v in other.collective_by_type.items():
+            self.collective_by_type[k] = self.collective_by_type.get(k, 0.0) + v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = self.collective_count.get(k, 0) + int(v * mult)
+        for k, v in other.flops_by_op.items():
+            self.flops_by_op[k] = self.flops_by_op.get(k, 0.0) + v * mult
+        self.flashable_bytes += other.flashable_bytes * mult
+        self.flashable_flops += other.flashable_flops * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+
+# ring-model per-device link bytes factor for `n`-way collective on `b` operand bytes
+def _link_bytes(opcode: str, operand_bytes: float, output_bytes: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if opcode == "all-reduce":
+        return 2.0 * operand_bytes * frac          # reduce-scatter + all-gather ring
+    if opcode == "all-gather":
+        return output_bytes * frac                 # each device receives (g-1)/g of out
+    if opcode == "reduce-scatter":
+        return operand_bytes * frac
+    if opcode in ("all-to-all", "ragged-all-to-all"):
+        return operand_bytes * frac
+    if opcode == "collective-permute":
+        return operand_bytes
+    if opcode == "collective-broadcast":
+        return output_bytes
+    return operand_bytes
+
+
+def _fusion_flops(comp: _Computation, comps: dict[str, _Computation]) -> float:
+    """FLOPs of dots living inside a fusion body (bytes are free inside)."""
+    total = 0.0
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            total += _dot_flops(ins, comp.symbols)
+        elif ins.opcode == "fusion":
+            called = ins.attr(r"calls=%([\w\.\-~]+)")
+            if called and called in comps:
+                total += _fusion_flops(comps[called], comps)
+    return total
+
+
+def _op_label(instr: _Instr) -> str:
+    m = re.search(r'op_name="([^"]+)"', instr.line)
+    if not m:
+        return instr.opcode
+    parts = m.group(1).split("/")
+    return "/".join(parts[:3]) if parts else instr.opcode
+
+
+def _walk(comp: _Computation, comps: dict[str, _Computation],
+          num_partitions: int, cost: HloCost, mult: float) -> None:
+    for ins in comp.instrs:
+        op = ins.opcode
+        base = op[:-6] if op.endswith("-start") else op
+        out_bytes = _shape_bytes(ins.shape_str)
+        opnd_bytes = sum(_shape_bytes(comp.symbols.get(o, "")) for o in ins.operands)
+        flashable = "flashable" in ins.line
+
+        if base in _COLLECTIVES:
+            g = _group_size(ins, num_partitions)
+            cost.collective_bytes += opnd_bytes * mult
+            cost.collective_link_bytes += _link_bytes(base, opnd_bytes, out_bytes, g) * mult
+            cost.collective_by_type[base] = (
+                cost.collective_by_type.get(base, 0.0) + opnd_bytes * mult)
+            cost.collective_count[base] = cost.collective_count.get(base, 0) + max(1, int(mult))
+            cost.bytes_accessed += (opnd_bytes + out_bytes) * mult
+            continue
+        if op.endswith("-done"):
+            continue
+        if op == "while":
+            tc = ins.attr(r'known_trip_count[^}]*?"n":"(\d+)"')
+            if tc is None:
+                cost.unknown_trip_counts += 1
+                trip = 1.0
+            else:
+                trip = float(tc)
+            body = ins.attr(r"body=%([\w\.\-~]+)")
+            cond = ins.attr(r"condition=%([\w\.\-~]+)")
+            if body and body in comps:
+                _walk(comps[body], comps, num_partitions, cost, mult * trip)
+            if cond and cond in comps:
+                _walk(comps[cond], comps, num_partitions, cost, mult * trip)
+            continue
+        if op == "dynamic-update-slice":
+            # XLA executes dus in place (input/output aliasing): traffic is
+            # the update read + written, not the whole buffer copied.
+            first = _shape_bytes(comp.symbols.get(ins.operands[0], "")) \
+                if ins.operands else 0
+            upd = max(opnd_bytes - first, 0)
+            cost.bytes_accessed += 2 * upd * mult
+            lblb = _op_label(ins)
+            cost.bytes_by_op[lblb] = cost.bytes_by_op.get(lblb, 0.0) + 2 * upd * mult
+            if flashable:
+                cost.flashable_bytes += 2 * upd * mult
+            continue
+        if op == "conditional":
+            for branch in re.findall(r"%([\w\.\-~]+)", ins.line.split("branch_computations", 1)[-1]) \
+                    if "branch_computations" in ins.line else []:
+                if branch in comps:
+                    _walk(comps[branch], comps, num_partitions, cost, mult)
+            continue
+        if op == "call" or op == "async-start":
+            called = ins.attr(r"(?:to_apply|calls|called_computation)=%([\w\.\-~]+)")
+            if called and called in comps:
+                _walk(comps[called], comps, num_partitions, cost, mult)
+            continue
+        if op == "fusion":
+            called = ins.attr(r"calls=%([\w\.\-~]+)")
+            f = _fusion_flops(comps[called], comps) if called and called in comps else 0.0
+            if f:
+                cost.flops += f * mult
+                lbl = _op_label(ins)
+                cost.flops_by_op[lbl] = cost.flops_by_op.get(lbl, 0.0) + f * mult
+                if flashable:
+                    cost.flashable_flops += f * mult
+            cost.bytes_accessed += (opnd_bytes + out_bytes) * mult
+            lblb = _op_label(ins)
+            cost.bytes_by_op[lblb] = cost.bytes_by_op.get(lblb, 0.0) + (opnd_bytes + out_bytes) * mult
+            if flashable:
+                cost.flashable_bytes += (opnd_bytes + out_bytes) * mult
+            continue
+        if op == "dot":
+            f = _dot_flops(ins, comp.symbols)
+            cost.flops += f * mult
+            lbl = _op_label(ins)
+            cost.flops_by_op[lbl] = cost.flops_by_op.get(lbl, 0.0) + f * mult
+            cost.bytes_accessed += (opnd_bytes + out_bytes) * mult
+            cost.bytes_by_op[lbl] = cost.bytes_by_op.get(lbl, 0.0) + (opnd_bytes + out_bytes) * mult
+            if flashable:
+                cost.flashable_flops += f * mult
+                cost.flashable_bytes += (opnd_bytes + out_bytes) * mult
+            continue
+        if op in _MATERIALIZING:
+            cost.bytes_accessed += (opnd_bytes + out_bytes) * mult
+            lblb = _op_label(ins)
+            cost.bytes_by_op[lblb] = cost.bytes_by_op.get(lblb, 0.0) + (opnd_bytes + out_bytes) * mult
+            if flashable:
+                cost.flashable_bytes += (opnd_bytes + out_bytes) * mult
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    """Walk one compiled SPMD module; return per-device cost totals."""
+    comps, entry, num_partitions = parse_hlo_module(text)
+    cost = HloCost(num_partitions=num_partitions)
+    if entry and entry in comps:
+        _walk(comps[entry], comps, num_partitions, cost, 1.0)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Roofline report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """Three-term roofline for one (arch x shape x mesh) cell."""
+
+    label: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float       # spec formula (operand-bytes sum)
+    collective_link_bytes_per_device: float  # ring model
+    t_compute: float
+    t_memory: float                          # flash-adjusted (headline)
+    t_collective: float
+    t_memory_raw: float = 0.0                # unfused-HLO memory term
+    flashable_bytes_per_device: float = 0.0
+    flash_ideal_bytes_per_device: float = 0.0
+    model_flops: Optional[float] = None      # 6*N*D global useful FLOPs
+    hw: HardwareSpec = TPU_V5E
+    collective_by_type: dict[str, float] = dataclasses.field(default_factory=dict)
+    memory_per_device_bytes: Optional[float] = None  # from memory_analysis()
+    unknown_trip_counts: int = 0
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time under perfect overlap = max of the terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the step is to being compute-bound at peak: 1.0 means
+        the MXU term dominates (no fidelity gap on the chip's fast path)."""
+        return self.t_compute / self.step_time_s if self.step_time_s > 0 else 0.0
+
+    @property
+    def useful_compute_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs (global) — catches remat/redundant work."""
+        if self.model_flops is None:
+            return None
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total > 0 else None
+
+    @property
+    def fidelity_gap(self) -> float:
+        """Paper section 1 gap for the step: 1 - achieved/peak on the
+        dominant resource (i.e. how much of the provisioned roofline the
+        non-dominant resources waste is 0 by definition; the gap is in the
+        compute term's distance to the envelope)."""
+        return 1.0 - self.roofline_fraction
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.pop("hw")
+        d["hw_name"] = self.hw.name
+        d["dominant"] = self.dominant
+        d["step_time_s"] = self.step_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        d["useful_compute_fraction"] = self.useful_compute_fraction
+        return d
+
+    def summary(self) -> str:
+        mf = (f" useful={self.useful_compute_fraction:.2f}"
+              if self.useful_compute_fraction is not None else "")
+        return (
+            f"{self.label}: compute {self.t_compute*1e3:.2f} ms | "
+            f"memory {self.t_memory*1e3:.2f} ms | "
+            f"collective {self.t_collective*1e3:.2f} ms | "
+            f"dominant={self.dominant} roofline={self.roofline_fraction:.2f}{mf}"
+        )
+
+
+def roofline(
+    cost: HloCost,
+    *,
+    label: str = "",
+    n_devices: Optional[int] = None,
+    model_flops: Optional[float] = None,
+    memory_per_device_bytes: Optional[float] = None,
+    flash_ideal_bytes_global: Optional[float] = None,
+    hw: HardwareSpec = TPU_V5E,
+) -> RooflineReport:
+    """Build the three-term roofline from per-device HLO costs.
+
+    ``collective term`` uses the spec's formula: summed collective operand
+    bytes (per device, i.e. global/chips) over per-chip link bandwidth.
+
+    ``flash_ideal_bytes_global``: if given, the memory term substitutes
+    the kernel-fusable regions' raw HLO traffic with the fused kernel's
+    ideal IO (q/k/v/o only) — the TPU-real number once the Pallas
+    flash-attention / SSD kernels replace the unfused oracle graphs.  The
+    raw term is kept alongside (t_memory_raw).
+    """
+    n = n_devices or cost.num_partitions
+    t_compute = cost.flops / hw.peak_flops
+    t_memory_raw = cost.bytes_accessed / hw.hbm_bandwidth
+    if flash_ideal_bytes_global is not None:
+        ideal_dev = flash_ideal_bytes_global / n
+        adj_bytes = max(cost.bytes_accessed - cost.flashable_bytes, 0.0) + ideal_dev
+        t_memory = adj_bytes / hw.hbm_bandwidth
+        flash_dev = ideal_dev
+    else:
+        t_memory = t_memory_raw
+        flash_dev = 0.0
+    t_collective = cost.collective_bytes / hw.ici_bandwidth
+    return RooflineReport(
+        label=label,
+        n_devices=n,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes_accessed,
+        collective_bytes_per_device=cost.collective_bytes,
+        collective_link_bytes_per_device=cost.collective_link_bytes,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_collective,
+        t_memory_raw=t_memory_raw,
+        flashable_bytes_per_device=cost.flashable_bytes,
+        flash_ideal_bytes_per_device=flash_dev,
+        model_flops=model_flops,
+        hw=hw,
+        collective_by_type=dict(cost.collective_by_type),
+        memory_per_device_bytes=memory_per_device_bytes,
+        unknown_trip_counts=cost.unknown_trip_counts,
+    )
+
+
+def model_flops_dense(n_params: float, n_tokens: float, *, backward: bool = True) -> float:
+    """6*N*D (train) or 2*N*D (inference) useful-FLOPs convention."""
+    return (6.0 if backward else 2.0) * n_params * n_tokens

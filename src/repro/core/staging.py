@@ -1,0 +1,222 @@
+"""Data staging — the coordinating process between mismatched tiers.
+
+Paper section 2.1: "Data staging ... is a critical coordinating process.
+This operation must be straightforward, predictable, and highly efficient,
+as any delay in staging fundamentally negates the performance benefits of
+burst buffering."
+
+A :class:`Stage` is a worker (or pool of workers) that moves items from an
+upstream source (an iterator or another stage's burst buffer) into its own
+:class:`~repro.core.burst_buffer.BurstBuffer`, optionally applying a
+transform (decode, shard, checksum, quantize, host-to-device put).
+Chaining stages yields a :class:`StagePipeline` — the executable form of a
+drainage-basin path.
+
+Design points lifted from the paper:
+
+* **No central scheduler** — each stage runs free and coordinates only
+  through buffer state (backpressure), section 2.2.
+* **Concurrency as the latency antidote** — multiple workers per stage
+  overlap erratic upstream service times, the host-side mirror of the
+  paper's concurrent data mover (section 3.1: latency insensitivity).
+* **Measurability** — per-stage stall/throughput stats expose where the
+  basin actually chokes, so the fidelity gap can be attributed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import traceback
+from typing import Any, Callable, Generic, Iterable, Iterator, Optional, Sequence, TypeVar
+
+from .burst_buffer import BufferClosed, BurstBuffer
+
+T = TypeVar("T")
+U = TypeVar("U")
+
+
+@dataclasses.dataclass
+class StageReport:
+    name: str
+    items: int
+    bytes: int
+    elapsed_s: float
+    stall_up_s: float      # waiting on upstream (source starvation)
+    stall_down_s: float    # waiting on our buffer (downstream backpressure)
+    errors: int
+
+    @property
+    def throughput_bytes_per_s(self) -> float:
+        return self.bytes / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+
+class Stage(Generic[T, U]):
+    """One staging hop: pull from upstream, transform, stage into a buffer."""
+
+    def __init__(
+        self,
+        name: str,
+        *,
+        capacity: int = 4,
+        workers: int = 1,
+        transform: Optional[Callable[[T], U]] = None,
+        sizeof: Optional[Callable[[Any], int]] = None,
+    ):
+        self.name = name
+        self.buffer: BurstBuffer[U] = BurstBuffer(capacity, name=f"{name}.buf")
+        self.workers = workers
+        self.transform = transform
+        self.sizeof = sizeof or _default_sizeof
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._items = 0
+        self._bytes = 0
+        self._stall_up_s = 0.0
+        self._errors = 0
+        self._error_tb: Optional[str] = None
+        self._finished = 0
+        self._t_start: Optional[float] = None
+        self._t_end: Optional[float] = None
+
+    # -- execution ----------------------------------------------------------
+
+    def start(self, upstream: Callable[[], Optional[T]]) -> None:
+        """Begin staging.  ``upstream()`` returns the next item or ``None``
+        at end-of-stream; it must be thread-safe for ``workers > 1``."""
+        self._t_start = time.monotonic()
+
+        def run() -> None:
+            try:
+                while True:
+                    t0 = time.monotonic()
+                    item = upstream()
+                    with self._lock:
+                        self._stall_up_s += time.monotonic() - t0
+                    if item is None:
+                        break
+                    out = self.transform(item) if self.transform else item
+                    try:
+                        self.buffer.put(out)
+                    except BufferClosed:
+                        break
+                    with self._lock:
+                        self._items += 1
+                        self._bytes += self.sizeof(out)
+            except Exception:
+                with self._lock:
+                    self._errors += 1
+                    self._error_tb = traceback.format_exc()
+            finally:
+                with self._lock:
+                    # last worker out closes the buffer (explicit counter:
+                    # checking thread liveness races when several workers
+                    # exit together and nobody closes)
+                    self._finished += 1
+                    if self._finished == len(self._threads):
+                        self._t_end = time.monotonic()
+                        self.buffer.close()
+
+        self._threads = [
+            threading.Thread(target=run, name=f"{self.name}-{i}", daemon=True)
+            for i in range(self.workers)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for t in self._threads:
+            t.join(timeout)
+        if self._error_tb:
+            raise RuntimeError(f"stage {self.name} failed:\n{self._error_tb}")
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> StageReport:
+        end = self._t_end or time.monotonic()
+        start = self._t_start or end
+        return StageReport(
+            name=self.name,
+            items=self._items,
+            bytes=self._bytes,
+            elapsed_s=end - start,
+            stall_up_s=self._stall_up_s,
+            stall_down_s=self.buffer.stats.producer_stall_s,
+            errors=self._errors,
+        )
+
+
+class StagePipeline:
+    """A chain of stages: source iterator -> stage_1 -> ... -> stage_n.
+
+    The caller consumes from ``pipeline.output`` (the last stage's buffer)
+    or via iteration.  Every hop runs concurrently; throughput settles at
+    the basin bottleneck and each hop's report shows whether it starved
+    (upstream too slow) or backpressured (downstream too slow).
+    """
+
+    def __init__(self, source: Iterable[Any], stages: Sequence[Stage]):
+        if not stages:
+            raise ValueError("need at least one stage")
+        self.stages = list(stages)
+        self._source_iter = iter(source)
+        self._source_lock = threading.Lock()
+        self._started = False
+
+    def _source_pull(self) -> Optional[Any]:
+        with self._source_lock:
+            return next(self._source_iter, None)
+
+    @staticmethod
+    def _buffer_pull(buf: BurstBuffer) -> Callable[[], Optional[Any]]:
+        def pull() -> Optional[Any]:
+            try:
+                return buf.get()
+            except BufferClosed:
+                return None
+        return pull
+
+    def start(self) -> "StagePipeline":
+        if self._started:
+            raise RuntimeError("pipeline already started")
+        self._started = True
+        upstream: Callable[[], Optional[Any]] = self._source_pull
+        for stage in self.stages:
+            stage.start(upstream)
+            upstream = self._buffer_pull(stage.buffer)
+        return self
+
+    @property
+    def output(self) -> BurstBuffer:
+        return self.stages[-1].buffer
+
+    def __iter__(self) -> Iterator[Any]:
+        if not self._started:
+            self.start()
+        return self.output.drain()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for stage in self.stages:
+            stage.join(timeout)
+
+    def reports(self) -> list[StageReport]:
+        return [s.report() for s in self.stages]
+
+    def bottleneck(self) -> StageReport:
+        """The slowest stage by observed throughput (ties to basin model)."""
+        reps = self.reports()
+        return min(reps, key=lambda r: r.throughput_bytes_per_s or float("inf"))
+
+
+def _default_sizeof(x: Any) -> int:
+    nbytes = getattr(x, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    if isinstance(x, (bytes, bytearray, memoryview)):
+        return len(x)
+    if isinstance(x, (tuple, list)):
+        return sum(_default_sizeof(e) for e in x)
+    if isinstance(x, dict):
+        return sum(_default_sizeof(v) for v in x.values())
+    return 0

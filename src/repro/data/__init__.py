@@ -1,0 +1,5 @@
+from .pipeline import (FileTokenSource, InputPipeline, PipelineConfig,
+                       SyntheticTokenSource, make_batch_sharding)
+
+__all__ = ["FileTokenSource", "InputPipeline", "PipelineConfig",
+           "SyntheticTokenSource", "make_batch_sharding"]

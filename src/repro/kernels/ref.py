@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) -> (B, Hq, Sq, hd)."""
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * hd ** -0.5
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    keep = jnp.ones((Sq, Sk), bool)
+    if causal:
+        keep &= kp <= qp
+    if window > 0:
+        keep &= kp > qp - window
+    s = jnp.where(keep[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(keep[None, None, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_pos: jax.Array, q_pos: jax.Array, *,
+                         window: int = 0) -> jax.Array:
+    """q: (B, Hq, hd); k/v: (B, Hkv, S, hd); k_pos (B,S); q_pos (B,)."""
+    B, Hq, hd = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32)) * hd ** -0.5
+    keep = jnp.logical_and(k_pos >= 0, k_pos <= q_pos[:, None])
+    if window > 0:
+        keep = jnp.logical_and(keep, k_pos > (q_pos[:, None] - window))
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(keep[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, *, chunk: int) -> jax.Array:
+    """Kernel-layout wrapper over models.ssm.ssd_chunked.
+    x: (B, H, S, P); dt: (B, H, S); Bm/Cm: (B, G, S, N)."""
+    from repro.models.ssm import ssd_chunked
+    xs = jnp.moveaxis(x, 1, 2)            # (B, S, H, P)
+    dts = jnp.moveaxis(dt, 1, 2)          # (B, S, H)
+    Bs = jnp.moveaxis(Bm, 1, 2)           # (B, S, G, N)
+    Cs = jnp.moveaxis(Cm, 1, 2)
+    y, _ = ssd_chunked(xs, dts.astype(jnp.float32), A.astype(jnp.float32),
+                       Bs, Cs, chunk)
+    return jnp.moveaxis(y, 2, 1)
+
+
+def quantize_ref(x: jax.Array, block: int = 256):
+    from repro.optim.compression import quantize_int8_blockwise
+    return quantize_int8_blockwise(x, block)
+
+
+def dequantize_ref(q, s, shape):
+    from repro.optim.compression import dequantize_int8_blockwise
+    return dequantize_int8_blockwise(q, s, shape)

@@ -1,0 +1,102 @@
+"""SSD (Mamba2) scan — Pallas TPU kernel.
+
+Full chunked SSD in one kernel: grid (B, H, nc) with the minor-most chunk
+axis sequential, so the recurrent (P, N) state lives in VMEM scratch and
+flows across chunks — the inter-chunk recurrence costs zero HBM traffic.
+Per chunk the dual quadratic form runs on the MXU:
+
+    y_intra = (tril(exp(cum_i - cum_j)) * dt_j * (C_i . B_j)) @ x
+    y_inter = exp(cum_i) * (C_i @ state_in)
+    state   = exp(total) * state_in + B^T @ (exp(total - cum) * dt * x)
+
+The pure-jnp oracle is :func:`repro.models.ssm.ssd_chunked`; tests sweep
+(B, S, H, P, N, chunk) in interpret mode.
+
+VMEM per step (Q=256, P=64, N<=128): x (Q,P) 64 KiB, B/C (Q,N) 128 KiB,
+L/CB (Q,Q) f32 256 KiB each, state (P,N) 32 KiB — well under budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                Q: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)         # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)       # (Q,)
+    A = a_ref[0].astype(jnp.float32)               # scalar (per head)
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)        # (Q, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)        # (Q, N)
+
+    dA = dt * A                                    # (Q,) negatives
+    cum = jnp.cumsum(dA)                           # inclusive
+    total = cum[Q - 1]
+
+    li = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(mask, jnp.exp(li), 0.0) * dt[None, :]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    W = CB * L
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())))      # (Q, P)
+
+    # inter-chunk: y += exp(cum) * (C @ state_in);  state: (P, N)
+    state = state_ref[...]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())))
+    # state update
+    wdt = jnp.exp(total - cum) * dt                               # (Q,)
+    state_ref[...] = jnp.exp(total) * state + jax.lax.dot_general(
+        x * wdt[:, None], Bm, (((0,), (0,)), ((), ())))           # (P, N)
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bhsd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                  Cm: jax.Array, *, chunk: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """x: (B, H, S, P); dt: (B, H, S) f32; A: (H,) f32;
+    Bm/Cm: (B, G, S, N) (groups broadcast to heads) -> y (B, H, S, P)."""
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    assert H % G == 0
+    rep = H // G
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xc = x.reshape(B, H, nc, chunk, P)
+    dtc = dt.reshape(B, H, nc, chunk)
+    Bc = Bm.reshape(B, G, nc, chunk, N)
+    Cc = Cm.reshape(B, G, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_kernel, Q=chunk, nc=nc)
+    from jax.experimental.pallas import tpu as pltpu
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, P),
+                               lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, chunk, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, A, Bc, Cc)
+    return y.reshape(B, H, S, P)

@@ -1,0 +1,121 @@
+"""Serving driver: batched prefill + streaming decode through the mover.
+
+The serving path is the paper's two workload classes composed:
+
+* **bulk** — prefill: the prompt batch moves through the stack once and
+  the KV cache is staged (the "data at rest" transfer),
+* **streaming** — decode: tokens are produced step by step and move to
+  the client sink *while being generated*, staged through a burst buffer
+  so a slow client never stalls the accelerator (the low-jitter
+  decoupling of §2.1).
+
+Usage (CPU smoke):
+  python -m repro.launch.serve --arch repro-100m --smoke --batch 4 \
+      --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.burst_buffer import BurstBuffer
+from repro.core.codesign import CodesignPlan
+from repro.core.mover import MoverConfig, UnifiedDataMover
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models.api import ShapeSpec, build
+from repro.models.blocks import ShardCtx
+
+
+class Server:
+    """Holds params + compiled prefill/decode; streams tokens out through
+    a burst buffer."""
+
+    def __init__(self, cfg, mesh=None, *, max_len: int = 512,
+                 plan: Optional[CodesignPlan] = None):
+        self.cfg = cfg
+        self.api = build(cfg)
+        self.mesh = mesh
+        self.max_len = max_len
+        self.plan = plan or CodesignPlan(sharding="tp", seq_parallel=False)
+        self.ctx = (steps_lib.make_ctx(self.api, mesh, self.plan)
+                    if mesh is not None else ShardCtx())
+        self.params = None
+        self._prefill = jax.jit(
+            lambda p, b: self.api.prefill(p, b, self.ctx, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t: self.api.decode_step(p, c, t, self.ctx))
+
+    def load(self, seed: int = 0) -> None:
+        self.params = self.api.init(jax.random.PRNGKey(seed))
+
+    def generate(self, batch: dict, n_tokens: int,
+                 sink=None) -> np.ndarray:
+        """Greedy-decode ``n_tokens``; each step's tokens stream to ``sink``
+        through the unified mover (streaming transfer)."""
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        stream = BurstBuffer(capacity=8, name="token-stream")
+        mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
+                                             staging_workers=1,
+                                             checksum=False))
+
+        def produce() -> Iterator[np.ndarray]:
+            nonlocal tok, cache
+            for _ in range(n_tokens - 1):
+                logits_i, cache = self._decode(self.params, cache, tok)
+                tok = jnp.argmax(logits_i[:, -1], axis=-1,
+                                 keepdims=True).astype(jnp.int32)
+                yield np.asarray(tok)
+
+        collected: list[np.ndarray] = []
+        report = mover.streaming_transfer(
+            produce(), sink or collected.append)
+        out.extend(collected)
+        self.last_report = report
+        return np.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    server = Server(cfg, max_len=args.prompt_len + args.gen + 1)
+    server.load()
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab,
+                                    (args.batch, args.prompt_len),
+                                    dtype=np.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)
+    if cfg.frontend:
+        batch["extra_embeds"] = rng.standard_normal(
+            (args.batch, cfg.frontend_len, cfg.d_model)).astype(np.float32)
+
+    t0 = time.monotonic()
+    tokens = server.generate(batch, args.gen)
+    dt = time.monotonic() - t0
+    tps = args.batch * args.gen / dt
+    print(f"[serve] generated {tokens.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
+    print(f"[serve] stream fidelity: throughput="
+          f"{server.last_report.throughput_bytes_per_s:.0f} B/s "
+          f"bottleneck={server.last_report.bottleneck_stage().name if server.last_report.stage_reports else 'n/a'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: pure-JAX scan-over-layers implementations of the assigned
+architectures (dense GQA / MoE / Mamba2-SSD / hybrid / enc-dec / VLM)."""
+
+from .api import SHAPES, ModelApi, ShapeSpec, build
+from .blocks import ShardCtx
+from .config import ModelConfig, MoEConfig, SSMConfig, smoke_variant
+
+__all__ = [
+    "SHAPES", "ModelApi", "ShapeSpec", "build", "ShardCtx",
+    "ModelConfig", "MoEConfig", "SSMConfig", "smoke_variant",
+]

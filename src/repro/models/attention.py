@@ -1,0 +1,191 @@
+"""Attention: GQA with causal / sliding-window / local:global masking.
+
+One implementation covers every assigned pattern:
+
+* full causal (phi3, smollm, mistral-large, qwen3, llava, seamless-dec),
+* sliding window (mixtral, window=4096),
+* 5:1 local:global interleave (gemma3 — per-layer window passed as data
+  through the layer scan, so the stacked-layer scan stays homogeneous),
+* bidirectional (seamless encoder), cross-attention (seamless decoder),
+* single-query decode against a (possibly ring) KV cache.
+
+Positions are explicit everywhere: a KV slot with position < 0 is invalid
+(empty ring-buffer slot).  Window masking is relative: key valid iff
+``q_pos - window < k_pos <= q_pos`` (window == 0 means unbounded), which
+makes ring-buffer caches correct without any index shuffling.
+
+``impl="pallas"`` routes the train/prefill path through the Pallas flash
+kernel (kernels/flash_attention.py); ``"ref"`` is the pure-jnp oracle the
+kernel is validated against.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _build_mask(
+    q_pos: jax.Array,        # (B?, Sq) or (Sq,)
+    k_pos: jax.Array,        # (B?, Sk) or (Sk,)
+    *,
+    causal: bool,
+    window: int | jax.Array = 0,
+) -> jax.Array:
+    """Boolean keep-mask broadcastable to (..., Sq, Sk)."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = k_pos[..., None, :].astype(jnp.int32)
+    keep = kp >= 0
+    if causal:
+        keep = jnp.logical_and(keep, kp <= qp)
+    # window as traced scalar supports per-layer windows through scan
+    w = jnp.asarray(window, jnp.int32)
+    keep = jnp.logical_and(keep, jnp.where(w > 0, kp > qp - w, True))
+    return keep
+
+
+# score tensors above this many elements trigger query-chunked evaluation
+# (bounds the live (Sq x Sk) softmax workspace — the pure-jnp analogue of
+# flash attention's tiling; the Pallas kernel does this in VMEM natively)
+ATTN_CHUNK_ELEMS = 1 << 22
+
+
+def _attn_core(q, k, v, *, q_pos, k_pos, causal, window) -> jax.Array:
+    # named_scope tags every op in here as belonging to a region a fused
+    # flash-attention kernel replaces on TPU: core/fidelity.py separates
+    # these bytes so the roofline can report raw vs. kernel-fused memory
+    # traffic (the Pallas kernel in kernels/flash_attention.py is the
+    # fused implementation; this is its oracle).
+    with jax.named_scope("flashable_attention"):
+        B, Sq, Hq, hd = q.shape
+        _, Sk, Hkv, _ = k.shape
+        assert Hq % Hkv == 0, (Hq, Hkv)
+        G = Hq // Hkv
+        qg = q.reshape(B, Sq, Hkv, G, hd)
+        scale = hd ** -0.5
+        # mixed-precision dot: bf16 operands, f32 accumulation — native on
+        # the TPU MXU (avoids materializing f32 casts of the K cache)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = _build_mask(q_pos, k_pos, causal=causal, window=window)
+        # mask broadcast: (.., Sq, Sk) -> (B?, 1, 1, Sq, Sk)
+        while mask.ndim < scores.ndim:
+            mask = mask[..., None, :, :] if mask.ndim >= 2 else mask
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        return out.reshape(B, Sq, Hq, hd)
+
+
+def attention(
+    q: jax.Array,            # (B, Sq, Hq, hd)
+    k: jax.Array,            # (B, Sk, Hkv, hd)
+    v: jax.Array,            # (B, Sk, Hkv, hd)
+    *,
+    q_pos: jax.Array,        # (Sq,) or (B, Sq)
+    k_pos: jax.Array,        # (Sk,) or (B, Sk)
+    causal: bool = True,
+    window: int | jax.Array = 0,
+    impl: str = "ref",
+    q_chunk: int | None = None,
+) -> jax.Array:
+    """Grouped-query attention; returns (B, Sq, Hq, hd).
+
+    q_chunk: None = auto (chunk when the score workspace is large),
+    0 = never chunk (caller bounds memory another way, e.g. sequence-
+    parallel sharding), >0 = explicit chunk length.
+    """
+    if impl == "pallas":
+        out = _try_pallas(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                          window=window)
+        if out is not None:
+            return out
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    if (q_chunk == 0 or Sq * Sk <= ATTN_CHUNK_ELEMS or q_pos.ndim != 1):
+        return _attn_core(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                          window=window)
+    # query-chunked evaluation: scan over Sq blocks; the body is
+    # checkpointed so backward recomputes each block's scores instead of
+    # saving the full (Sq, Sk) probability tensor.
+    if q_chunk is None:
+        q_chunk = max(128, ATTN_CHUNK_ELEMS // Sk)
+    while Sq % q_chunk:
+        q_chunk //= 2
+    nq = Sq // q_chunk
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, Hq, hd), 1, 0)
+    qpc = q_pos.reshape(nq, q_chunk)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qi, qpi = inp
+        return None, _attn_core(qi, k, v, q_pos=qpi, k_pos=k_pos,
+                                causal=causal, window=window)
+
+    _, outs = jax.lax.scan(body, None, (qc, qpc))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, hd)
+
+
+def _try_pallas(q, k, v, *, q_pos, k_pos, causal, window) -> Optional[jax.Array]:
+    """Route to the Pallas flash kernel when the shape regime fits it
+    (train/prefill: Sq == Sk, static positions)."""
+    if q.shape[1] != k.shape[1] or q.shape[1] < 128:
+        return None
+    try:
+        from repro.kernels import ops as kops
+    except Exception:
+        return None
+    try:
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    window=int(window) if not isinstance(window, jax.Array) else 0)
+    except (NotImplementedError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+def cache_update_full(k_cache: jax.Array, v_cache: jax.Array,
+                      k_new: jax.Array, v_new: jax.Array,
+                      pos: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Write step-`pos` K/V into a full-length cache (B, S_max, Hkv, hd)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    return k_cache, v_cache
+
+
+def cache_positions_full(s_max: int, pos: jax.Array) -> jax.Array:
+    """Absolute positions of full-cache slots; > pos slots invalid (-1)."""
+    idx = jnp.arange(s_max, dtype=jnp.int32)
+    return jnp.where(idx <= pos, idx, -1)
+
+
+def cache_update_ring(k_cache: jax.Array, v_cache: jax.Array,
+                      k_new: jax.Array, v_new: jax.Array,
+                      pos: jax.Array, window: int) -> tuple[jax.Array, jax.Array]:
+    """Write into a ring cache of length `window` at slot pos % window."""
+    slot = jnp.mod(pos, window)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    return k_cache, v_cache
+
+
+def cache_positions_ring(window: int, pos: jax.Array) -> jax.Array:
+    """Absolute position held by each ring slot after writing step `pos`.
+
+    Slot j holds the largest p <= pos with p === j (mod window); slots that
+    would be negative are invalid (-1).
+    """
+    j = jnp.arange(window, dtype=jnp.int32)
+    p = pos - jnp.mod(pos - j, window)
+    return jnp.where(p >= 0, p, -1)

@@ -1,0 +1,71 @@
+"""Shared model primitives: norms, RoPE, initializers, dtype policy."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 statistics (numerics policy: reductions in f32)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings (half-split convention)."""
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S) absolute ids.
+    Half-split (LLaMA) convention: rotate [x1, x2] halves.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_dim: int,
+               dtype=PARAM_DTYPE) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(in_dim))."""
+    std = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...], dtype=PARAM_DTYPE) -> jax.Array:
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None,
+                       z_loss_coef: float = 1e-4) -> jax.Array:
+    """Token-mean CE in f32 with optional z-loss (logit drift control)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss_coef:
+        ce = ce + z_loss_coef * jnp.square(lse)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)

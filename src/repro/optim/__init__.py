@@ -1,0 +1,13 @@
+from .adamw import (AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+                    warmup_cosine)
+from .compression import (CompressionState, compress_decompress,
+                          error_feedback_init, error_feedback_step,
+                          quantize_int8_blockwise, dequantize_int8_blockwise)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "warmup_cosine",
+    "CompressionState", "compress_decompress", "error_feedback_init",
+    "error_feedback_step", "quantize_int8_blockwise",
+    "dequantize_int8_blockwise",
+]

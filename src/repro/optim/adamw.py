@@ -1,0 +1,98 @@
+"""AdamW with fp32 master weights over bf16 compute params.
+
+Mixed-precision convention (production standard): the *model* params are
+bf16 (what matmuls consume); the optimizer holds an fp32 master copy plus
+fp32 first/second moments.  The update runs in fp32 and re-casts.  The
+optimizer state therefore shards exactly like the params (the sharding
+rules in parallel/sharding.py apply leaf-wise to the whole state tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () i32
+    master: Any              # fp32 copy of params
+    m: Any                   # fp32 first moment
+    v: Any                   # fp32 second moment
+
+
+def adamw_init(params: Any) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+) -> tuple[Any, AdamWState, dict]:
+    """One AdamW step.  Returns (new bf16 params, new state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, w):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+        return m, v, w
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_w = jax.tree.leaves(state.master)
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    master = jax.tree.unflatten(tdef, new_w)
+    new_state = AdamWState(step=step, master=master,
+                           m=jax.tree.unflatten(tdef, new_m),
+                           v=jax.tree.unflatten(tdef, new_v))
+    cast = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return cast, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+
+
+def warmup_cosine(step: jax.Array, *, peak_lr: float, warmup: int,
+                  total: int, floor: float = 0.1) -> jax.Array:
+    """Linear warmup then cosine decay to floor*peak."""
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / jnp.maximum(1.0, float(warmup))
+    prog = jnp.clip((t - warmup) / jnp.maximum(1.0, float(total - warmup)),
+                    0.0, 1.0)
+    cos = peak_lr * (floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,141 @@
+"""Sharding rules: parameter-tree paths -> PartitionSpecs.
+
+MaxText-style logical rules resolved against the production mesh
+(DESIGN.md §4):
+
+* batch over the data axes ``("pod", "data")`` / ``("data",)``,
+* attention heads / FFN hidden / experts / vocab over ``"model"`` (TP/EP),
+* the *other* weight dim additionally over ``"data"`` (FSDP / ZeRO-3) when
+  ``fsdp=True`` — mandatory for the 123B/141B archs,
+* every rule checks divisibility and silently drops an axis that does not
+  divide (predictable memory: no GSPMD padding surprises).
+
+Optimizer state shards exactly like the parameters (leaf-wise reuse).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape: tuple[int, ...], want: tuple) -> P:
+    """Drop axes that don't divide their dim."""
+    out = []
+    for dim, axis in zip(shape, want):
+        if axis is None:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, axis)
+        out.append(axis if (size > 1 and dim % size == 0) else None)
+    return P(*out)
+
+
+def _spec_for(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+              mesh: Mesh, *, fsdp: bool, ep: bool) -> P:
+    """Rule table keyed on the trailing parameter name."""
+    d = "data" if fsdp else None
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+    nd = len(shape)
+
+    def tail(*axes):
+        """Right-align axes against shape (stacked-L leading dims -> None)."""
+        want = [None] * (nd - len(axes)) + list(axes)
+        return _fit(mesh, shape, tuple(want))
+
+    if name == "embed":
+        return tail("model", d)
+    if name == "lm_head":
+        return tail(d, "model")
+    if name in ("wq", "wk", "wv"):
+        return tail(d, "model")
+    if name == "wo":
+        return tail("model", d)
+    if parent == "moe" or (parent in ("", "moe") and name == "router"):
+        if name == "router":
+            return tail(d, None)
+        if name in ("w_gate", "w_up"):
+            return tail("model", d, None) if ep else tail(None, d, "model")
+        if name == "w_down":
+            return tail("model", None, d) if ep else tail(None, "model", d)
+    if name in ("w_gate", "w_up"):
+        return tail(d, "model")
+    if name == "w_down":
+        return tail("model", d)
+    if name == "in_proj":
+        return tail(d, "model")
+    if name == "out_proj":
+        return tail("model", d)
+    if name == "conv_w":
+        return tail(None, "model")
+    if name in ("conv_b", "A_log", "D", "dt_bias", "norm_w"):
+        return tail("model")
+    if name in ("w1",):       # projector
+        return tail(d, "model")
+    if name in ("w2",):
+        return tail("model", d)
+    if name == "frame_proj":
+        return tail(d, "model")
+    # norms / scalars / step counters
+    return P(*([None] * nd))
+
+
+def _leaf_path(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_specs(tree: Any, cfg: ModelConfig, mesh: Mesh, *,
+                fsdp: bool = True) -> Any:
+    """PartitionSpec tree matching ``tree`` (params or any state whose
+    leaves mirror param shapes, e.g. Adam moments)."""
+    ep = bool(cfg.moe and cfg.moe.n_experts % mesh.shape["model"] == 0)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [_spec_for(_leaf_path(p), tuple(v.shape), cfg, mesh,
+                       fsdp=fsdp, ep=ep)
+             for p, v in leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(tree: Any, cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp: bool = True) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(tree, cfg, mesh, fsdp=fsdp))
+
+
+def state_shardings(state_tree: Any, cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp: bool = True) -> Any:
+    """Shardings for AdamWState-like containers.  The optimizer's
+    master/m/v subtrees mirror the param tree, so their leaf paths end in
+    the same names and the path-keyed rules apply directly; scalars (the
+    step counter) fall through to replicated."""
+    return param_shardings(state_tree, cfg, mesh, fsdp=fsdp)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Batch pytree: leading dim over the data axes."""
+    axes = batch_axes_of(mesh)
+
+    def spec(v):
+        nd = getattr(v, "ndim", None) or len(v.shape)
+        return NamedSharding(mesh, P(axes, *([None] * (nd - 1))))
+
+    return jax.tree.map(spec, batch)

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: device count stays 1 here (smoke tests / benches
+must see the real host); only tests that need a mesh spawn a subprocess or
+use the dedicated module in test_distribution.py which re-execs with
+xla_force_host_platform_device_count set."""
+
+import os
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,101 @@
+"""Drainage-basin model: unit + property tests."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.basin import (ApplianceTier, DrainageBasin, GBPS, Link, Tier,
+                              TierKind, daily_volume_bytes, paper_basin,
+                              recommend_tier, tpu_input_basin)
+
+
+def test_paper_basin_bottleneck_is_storage():
+    b = paper_basin(link_gbps=100.0, storage_gbps=40.0)
+    rep = b.bottleneck()
+    assert rep.element == "prod-storage-src"
+    assert rep.kind == "tier"
+    # fidelity gap vs the fastest element (the burst buffer tier)
+    assert 0.5 < rep.fidelity_gap < 0.95
+
+
+def test_balanced_basin_has_no_storage_gap():
+    b = paper_basin(link_gbps=100.0, storage_gbps=200.0)
+    rep = b.bottleneck()
+    assert rep.element in ("wan", "burst-buffer-src->wan", "wan->burst-buffer-dst")
+    assert rep.achievable_bytes_per_s == pytest.approx(100.0 * GBPS)
+
+
+def test_small_item_latency_penalty():
+    """Paper §3.4: small files choke on per-item latency, not bandwidth."""
+    b = paper_basin()
+    big = b.achievable_throughput(item_bytes=1 << 30)
+    small = b.achievable_throughput(item_bytes=1 << 10)
+    assert small < big / 100
+
+
+def test_bdp():
+    l = Link("a", "b", 100.0 * GBPS, rtt_s=0.074)
+    assert l.bdp_bytes() == pytest.approx(100.0 * GBPS * 0.074)
+
+
+def test_tier_recommendation_fig3():
+    assert recommend_tier(1 * GBPS) == ApplianceTier.MINI
+    assert recommend_tier(40 * GBPS) == ApplianceTier.MINI_PLUS
+    assert recommend_tier(100 * GBPS) == ApplianceTier.CORE
+
+
+def test_table5_daily_volumes():
+    # Table 5: 1 Gbps ~ 10 TB/day, 10 ~ 100, 100 ~ 1 PB (paper rounds)
+    assert daily_volume_bytes(1 * GBPS) == pytest.approx(10.8e12, rel=0.01)
+    assert daily_volume_bytes(100 * GBPS) == pytest.approx(1.08e15, rel=0.01)
+
+
+def test_prefetch_depth_covers_jitter():
+    b = tpu_input_basin(dataset_jitter_ms=100.0)
+    shallow = tpu_input_basin(dataset_jitter_ms=1.0)
+    assert b.prefetch_depth(1 << 20) >= shallow.prefetch_depth(1 << 20)
+    assert b.prefetch_depth(1 << 20) >= 2
+
+
+def test_duplicate_tier_names_rejected():
+    t = Tier("x", TierKind.SOURCE, 1.0)
+    with pytest.raises(ValueError):
+        DrainageBasin([t, t])
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+bw = st.floats(min_value=1e6, max_value=1e12, allow_nan=False)
+
+
+@given(bws=st.lists(bw, min_size=2, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_throughput_is_min_of_path(bws):
+    tiers = [Tier(f"t{i}", TierKind.CHANNEL, b) for i, b in enumerate(bws)]
+    basin = DrainageBasin(tiers)
+    assert basin.achievable_throughput() == pytest.approx(min(bws))
+
+
+@given(bws=st.lists(bw, min_size=2, max_size=6), achieved_frac=st.floats(0.01, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_fidelity_gap_in_unit_interval(bws, achieved_frac):
+    tiers = [Tier(f"t{i}", TierKind.CHANNEL, b) for i, b in enumerate(bws)]
+    basin = DrainageBasin(tiers)
+    achieved = basin.achievable_throughput() * achieved_frac
+    gap = basin.fidelity_gap(achieved)
+    assert -1e-9 <= gap <= 1.0
+
+
+@given(bws=st.lists(bw, min_size=2, max_size=6),
+       item=st.integers(min_value=1, max_value=1 << 34))
+@settings(max_examples=50, deadline=None)
+def test_item_amortization_monotone(bws, item):
+    """Bigger items never reduce effective throughput (latency amortizes)."""
+    tiers = [Tier(f"t{i}", TierKind.CHANNEL, b, latency_s=1e-3)
+             for i, b in enumerate(bws)]
+    basin = DrainageBasin(tiers)
+    assert (basin.achievable_throughput(item_bytes=item * 2)
+            >= basin.achievable_throughput(item_bytes=item) * (1 - 1e-9))

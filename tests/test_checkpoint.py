@@ -1,0 +1,96 @@
+"""Checkpoint engine: roundtrip, atomicity, integrity, retention, restart."""
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      load_checkpoint, save_checkpoint,
+                                      verify_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (16, 8), jnp.bfloat16),
+                   "b": jnp.zeros((8,), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t)
+    like = jax.tree.map(jnp.zeros_like, t)
+    out = load_checkpoint(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staged_and_unstaged_identical(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path / "a"), 1, t, staged=True)
+    save_checkpoint(str(tmp_path / "b"), 1, t, staged=False)
+    ma = json.load(open(tmp_path / "a" / "step_0000000001" / "manifest.json"))
+    mb = json.load(open(tmp_path / "b" / "step_0000000001" / "manifest.json"))
+    assert ([l["sha256"] for l in ma["leaves"]]
+            == [l["sha256"] for l in mb["leaves"]])
+
+
+def test_latest_step_ignores_incomplete(tmp_path):
+    save_checkpoint(str(tmp_path), 5, _tree())
+    # a crashed save: directory without manifest
+    os.makedirs(tmp_path / "step_0000000009")
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_verify_detects_corruption(tmp_path):
+    save_checkpoint(str(tmp_path), 3, _tree())
+    d = tmp_path / "step_0000000003"
+    leaf = sorted(p for p in os.listdir(d) if p.endswith(".npy"))[0]
+    arr = np.load(d / leaf)
+    arr = np.ascontiguousarray(arr)
+    arr.view(np.uint8)[0] ^= 0xFF
+    np.save(d / leaf, arr)
+    assert not verify_checkpoint(str(tmp_path), 3)
+    with pytest.raises(IOError):
+        load_checkpoint(str(tmp_path), 3, _tree(), verify=True)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((5,))})
+
+
+def test_manager_retention_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every_steps=1, keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        t2 = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x, t)
+        mgr.maybe_save(s, t2)
+        mgr.wait()
+    kept = sorted(p for p in os.listdir(tmp_path) if p.startswith("step_"))
+    assert len(kept) == 2 and kept[-1].endswith("4")
+    step, out = mgr.restore_latest(jax.tree.map(jnp.zeros_like, t))
+    assert step == 4
+
+
+def test_async_save_does_not_block(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every_steps=1)
+    big = {"w": jnp.zeros((512, 512), jnp.float32)}
+    assert mgr.maybe_save(1, big)
+    # returns immediately; join later
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_restore_with_different_dtype_cast(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((4,), jnp.float32)})
+    out = load_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16

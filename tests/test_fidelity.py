@@ -1,0 +1,108 @@
+"""Fidelity/roofline engine: HLO parsing against known-cost programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fidelity import (HloCost, TPU_V5E, _shape_bytes,
+                                 analyze_hlo_text, parse_hlo_module, roofline)
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    M, K, N = 64, 128, 32
+    a = jnp.zeros((M, K), jnp.float32)
+    b = jnp.zeros((K, N), jnp.float32)
+    cost = analyze_hlo_text(_compile_text(lambda x, y: x @ y, a, b))
+    assert cost.flops == pytest.approx(2 * M * K * N, rel=1e-6)
+
+
+def test_scan_trip_count_multiplied():
+    """The whole point vs cost_analysis(): while bodies scale by trip."""
+    M = 32
+    x = jnp.zeros((M, M), jnp.float32)
+    w = jnp.zeros((M, M), jnp.float32)
+
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=9)
+        return h
+
+    cost = analyze_hlo_text(_compile_text(f, x, w))
+    assert cost.flops == pytest.approx(9 * 2 * M ** 3, rel=0.05)
+    assert cost.unknown_trip_counts == 0
+
+
+def test_nested_scan_multiplies_through():
+    M = 16
+    x = jnp.zeros((M, M), jnp.float32)
+    w = jnp.zeros((M, M), jnp.float32)
+
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    cost = analyze_hlo_text(_compile_text(f, x, w))
+    assert cost.flops == pytest.approx(15 * 2 * M ** 3, rel=0.05)
+
+
+def test_bytes_accessed_reasonable():
+    n = 1 << 16
+    x = jnp.zeros((n,), jnp.float32)
+    cost = analyze_hlo_text(_compile_text(lambda x: x * 2 + 1, x))
+    # one fused read + one write, 4 bytes each
+    assert 2 * 4 * n <= cost.bytes_accessed <= 8 * 4 * n
+
+
+def test_shape_bytes_tuple_with_comment():
+    s = "(s32[], f32[256,1024]{1,0}, /*index=5*/bf16[2,2]{1,0})"
+    assert _shape_bytes(s) == 4 + 256 * 1024 * 4 + 2 * 2 * 2
+
+
+def test_roofline_terms_and_dominant():
+    cost = HloCost(flops=197e12 * 0.5, bytes_accessed=819e9 * 2.0,
+                   collective_bytes=50e9 * 0.25, num_partitions=4)
+    rep = roofline(cost, label="t", n_devices=4)
+    assert rep.t_compute == pytest.approx(0.5)
+    assert rep.t_memory == pytest.approx(2.0)
+    assert rep.t_collective == pytest.approx(0.25)
+    assert rep.dominant == "memory"
+    assert rep.step_time_s == pytest.approx(2.0)
+    assert rep.roofline_fraction == pytest.approx(0.25)
+
+
+def test_roofline_flash_adjustment():
+    cost = HloCost(flops=1.0, bytes_accessed=100.0, flashable_bytes=80.0,
+                   num_partitions=1)
+    rep = roofline(cost, n_devices=1, flash_ideal_bytes_global=10.0)
+    assert rep.t_memory_raw == pytest.approx(100.0 / TPU_V5E.hbm_bandwidth)
+    assert rep.t_memory == pytest.approx(30.0 / TPU_V5E.hbm_bandwidth)
+
+
+def test_useful_compute_fraction():
+    cost = HloCost(flops=100.0, num_partitions=2)
+    rep = roofline(cost, n_devices=2, model_flops=150.0)
+    assert rep.useful_compute_fraction == pytest.approx(150.0 / 200.0)
+
+
+@given(dt=st.sampled_from(["f32", "bf16", "s8", "u16", "f64"]),
+       dims=st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_property_shape_bytes(dt, dims):
+    sizes = {"f32": 4, "bf16": 2, "s8": 1, "u16": 2, "f64": 8}
+    n = 1
+    for d in dims:
+        n *= d
+    s = f"{dt}[{','.join(map(str, dims))}]{{{0}}}"
+    assert _shape_bytes(s) == sizes[dt] * n
