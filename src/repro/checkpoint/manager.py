@@ -34,8 +34,10 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
-from repro.core.burst_buffer import BurstBuffer
+from repro.core.basin import checkpoint_basin
 from repro.core.mover import MoverConfig, UnifiedDataMover
+from repro.core.planner import TransferPlan, plan_transfer
+from repro.core.telemetry import get_registry
 
 
 @dataclasses.dataclass
@@ -80,8 +82,19 @@ def latest_step(root: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _leaf_plan(total_bytes: int, n_leaves: int,
+               plan: Optional[TransferPlan] = None) -> TransferPlan:
+    """Per-shard staging parameters from the checkpoint basin model."""
+    if plan is not None:
+        return plan
+    item_bytes = max(1, total_bytes // max(1, n_leaves))
+    return plan_transfer(checkpoint_basin(), item_bytes,
+                         stages=("serialize",))
+
+
 def save_checkpoint(root: str, step: int, tree: Any, *,
-                    staged: bool = True) -> CheckpointMeta:
+                    staged: bool = True,
+                    plan: Optional[TransferPlan] = None) -> CheckpointMeta:
     """Write one checkpoint atomically; returns its manifest."""
     os.makedirs(root, exist_ok=True)
     final_dir = _ckpt_dir(root, step)
@@ -111,11 +124,13 @@ def save_checkpoint(root: str, step: int, tree: Any, *,
         return arr
 
     if staged:
-        mover = UnifiedDataMover(MoverConfig(staging_capacity=4,
-                                             staging_workers=2,
-                                             checksum=False))
+        plan = _leaf_plan(sum(a.nbytes for _, _, a in snapshot),
+                          len(snapshot), plan)
+        mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                                 telemetry=get_registry(), layer="checkpoint")
         mover.bulk_transfer(iter(snapshot), sink=lambda _: None,
-                            transforms=[("serialize", write_shard)])
+                            transforms=[("serialize", write_shard)],
+                            plan=plan)
     else:
         for item in snapshot:
             write_shard(item)
@@ -143,15 +158,40 @@ def verify_checkpoint(root: str, step: int) -> bool:
 
 
 def load_checkpoint(root: str, step: int, like: Any, *,
-                    shardings: Any = None, verify: bool = False) -> Any:
+                    shardings: Any = None, verify: bool = False,
+                    staged: bool = True) -> Any:
     """Restore into the structure of ``like``; optionally re-shard onto a
-    new mesh (elastic restore) via per-leaf ``shardings``."""
+    new mesh (elastic restore) via per-leaf ``shardings``.
+
+    With ``staged`` (the default) shard files are read through the
+    planned mover path — concurrent reads overlap storage latency, and
+    assembly is order-independent (leaves are keyed by tree path)."""
     d = _ckpt_dir(root, step)
     if verify and not verify_checkpoint(root, step):
         raise IOError(f"checkpoint {d} failed integrity verification")
     with open(os.path.join(d, "manifest.json")) as f:
         meta = json.load(f)
     by_path = {l["path"]: l for l in meta["leaves"]}
+
+    def read_leaf(leaf: dict) -> tuple[str, np.ndarray]:
+        arr = np.load(os.path.join(d, leaf["file"]))
+        return leaf["path"], _reinterpret_dtype(arr, leaf["dtype"])
+
+    arrays: dict[str, np.ndarray] = {}
+    if staged and meta["leaves"]:
+        total = sum(os.path.getsize(os.path.join(d, l["file"]))
+                    for l in meta["leaves"])
+        plan = _leaf_plan(total, len(meta["leaves"]))
+        mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                                 telemetry=get_registry(), layer="checkpoint")
+        mover.bulk_transfer(iter(meta["leaves"]),
+                            sink=lambda kv: arrays.__setitem__(*kv),
+                            transforms=[("serialize", read_leaf)],
+                            plan=plan)
+    else:
+        for leaf in meta["leaves"]:
+            k, v = read_leaf(leaf)
+            arrays[k] = v
 
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     shard_leaves = (jax.tree.leaves(shardings)
@@ -161,8 +201,7 @@ def load_checkpoint(root: str, step: int, like: Any, *,
         pstr = _leaf_path_str(p)
         if pstr not in by_path:
             raise KeyError(f"checkpoint missing leaf {pstr}")
-        arr = np.load(os.path.join(d, by_path[pstr]["file"]))
-        arr = _reinterpret_dtype(arr, by_path[pstr]["dtype"])
+        arr = arrays[pstr]
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"{pstr}: shape {arr.shape} != {ref.shape}")
         arr = arr.astype(ref.dtype)

@@ -4,6 +4,8 @@
 * :mod:`repro.core.burst_buffer` — low-jitter staging buffer
 * :mod:`repro.core.staging` — staging workers / pipelines
 * :mod:`repro.core.mover` — unified bulk/streaming data mover
+* :mod:`repro.core.planner` — TransferPlan engine: basin -> staging parameters
+* :mod:`repro.core.telemetry` — cross-layer TransferReport registry
 * :mod:`repro.core.fidelity` — fidelity-gap / roofline engine over compiled HLO
 * :mod:`repro.core.codesign` — co-design plan enumeration + analytic ranking
 """
@@ -15,7 +17,9 @@ from .basin import (
     Link,
     Tier,
     TierKind,
+    checkpoint_basin,
     daily_volume_bytes,
+    decode_stream_basin,
     paper_basin,
     recommend_tier,
     tpu_input_basin,
@@ -44,11 +48,14 @@ from .fidelity import (
     roofline,
 )
 from .mover import MoverConfig, TransferReport, UnifiedDataMover
+from .planner import HopPlan, TransferPlan, plan_transfer, replan
 from .staging import Stage, StagePipeline, StageReport
+from .telemetry import LayerSummary, TelemetryRegistry, get_registry
 
 __all__ = [
     "ApplianceTier", "BottleneckReport", "DrainageBasin", "Link", "Tier",
-    "TierKind", "daily_volume_bytes", "paper_basin", "recommend_tier",
+    "TierKind", "checkpoint_basin", "daily_volume_bytes",
+    "decode_stream_basin", "paper_basin", "recommend_tier",
     "tpu_input_basin", "GBPS", "MIB", "GIB", "TIB",
     "BufferClosed", "BufferStats", "BurstBuffer",
     "CodesignPlan", "PlanPrediction", "WorkloadSpec", "enumerate_plans",
@@ -56,5 +63,7 @@ __all__ = [
     "HardwareSpec", "HloCost", "RooflineReport", "TPU_V5E",
     "analyze_hlo_text", "model_flops_dense", "roofline",
     "MoverConfig", "TransferReport", "UnifiedDataMover",
+    "HopPlan", "TransferPlan", "plan_transfer", "replan",
+    "LayerSummary", "TelemetryRegistry", "get_registry",
     "Stage", "StagePipeline", "StageReport",
 ]

@@ -139,6 +139,9 @@ class DrainageBasin:
             raise ValueError(f"duplicate tier names: {names}")
         self.tiers = list(tiers)
         self._by_name = {t.name: t for t in tiers}
+        # implicit links derive from tier bandwidths, so a rebuild with
+        # revised tiers must re-derive them (planner.replan relies on this)
+        self.explicit_links = links is not None
         if links is None:
             # implicit infinite-bandwidth adjacency; bandwidth limited by tiers
             links = [
@@ -283,5 +286,47 @@ def tpu_input_basin(*, dataset_gbps: float = 8.0, dataset_jitter_ms: float = 20.
                  latency_s=10e-6),
             Tier("pcie", TierKind.CHANNEL, pcie_gbps * GBPS, latency_s=20e-6),
             Tier("hbm", TierKind.SINK, hbm_gbps * GBPS, latency_s=1e-6),
+        ]
+    )
+
+
+def checkpoint_basin(*, host_gbps: float = 200.0, nvme_gbps: float = 16.0,
+                     nvme_latency_ms: float = 0.2,
+                     nvme_jitter_ms: float = 2.0) -> DrainageBasin:
+    """The checkpoint-save path: host RAM snapshot -> serialize/hash
+    staging -> NVMe/production storage.  The device->host snapshot happens
+    before the staged transfer starts, so the basin begins at host RAM;
+    the erratic element is the filesystem (allocation, page-cache
+    writeback), modeled as sink jitter."""
+    return DrainageBasin(
+        tiers=[
+            Tier("host-snapshot", TierKind.SOURCE, host_gbps * GBPS,
+                 latency_s=10e-6),
+            Tier("serialize-staging", TierKind.BURST_BUFFER,
+                 host_gbps * GBPS, latency_s=10e-6),
+            Tier("nvme", TierKind.SINK, nvme_gbps * GBPS,
+                 latency_s=nvme_latency_ms / 1e3,
+                 jitter_s=nvme_jitter_ms / 1e3),
+        ]
+    )
+
+
+def decode_stream_basin(*, decode_step_ms: float = 2.0,
+                        host_gbps: float = 200.0,
+                        client_gbps: float = 1.0,
+                        client_jitter_ms: float = 5.0) -> DrainageBasin:
+    """The serving decode path: accelerator token producer -> host staging
+    buffer -> client sink.  The producer's per-step latency is the decode
+    step itself; the erratic element is the client (network scheduling,
+    slow readers), which the staging buffer must decouple from the
+    accelerator so a stalling consumer never idles the chip (§2.1)."""
+    return DrainageBasin(
+        tiers=[
+            Tier("decode-producer", TierKind.SOURCE, host_gbps * GBPS,
+                 latency_s=decode_step_ms / 1e3),
+            Tier("token-staging", TierKind.BURST_BUFFER, host_gbps * GBPS,
+                 latency_s=10e-6),
+            Tier("client", TierKind.SINK, client_gbps * GBPS,
+                 latency_s=1e-3, jitter_s=client_jitter_ms / 1e3),
         ]
     )

@@ -32,8 +32,9 @@ import time
 from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
 
 from .basin import DrainageBasin
-from .burst_buffer import BufferClosed, BurstBuffer
+from .planner import TransferPlan
 from .staging import Stage, StagePipeline, StageReport, _default_sizeof
+from .telemetry import TelemetryRegistry
 
 
 @dataclasses.dataclass
@@ -79,27 +80,64 @@ class MoverConfig:
 
 
 class UnifiedDataMover:
-    """Moves item streams through a staged, buffered, instrumented path."""
+    """Moves item streams through a staged, buffered, instrumented path.
+
+    Staging parameters come from (in precedence order) a
+    :class:`~repro.core.planner.TransferPlan` — per-hop capacity/workers
+    derived from the basin model — then per-call overrides, then the
+    uniform :class:`MoverConfig` defaults.  With ``telemetry`` set, every
+    :class:`TransferReport` is recorded there under ``layer``.
+    """
 
     def __init__(self, config: MoverConfig | None = None,
-                 basin: DrainageBasin | None = None):
+                 basin: DrainageBasin | None = None,
+                 plan: TransferPlan | None = None,
+                 telemetry: TelemetryRegistry | None = None,
+                 layer: str | None = None):
         self.config = config or MoverConfig()
-        self.basin = basin
+        self.plan = plan
+        self.basin = basin or (plan.basin if plan is not None else None)
+        self.telemetry = telemetry
+        self.layer = layer or self.config.name
 
     # -- internal ------------------------------------------------------------
+
+    def _stage_params(
+        self,
+        transforms: Sequence[tuple[str, Any]],
+        plan: Optional[TransferPlan],
+        capacity: Optional[int],
+        workers: Optional[int],
+    ) -> list[tuple[int, int]]:
+        """(capacity, workers) per stage: plan-derived per hop, or uniform."""
+        n = max(1, len(transforms))
+        if plan is not None:
+            names = [name for name, _ in transforms] or ["stage"]
+            hops = [plan.hop_for(i, name) for i, name in enumerate(names)]
+            return [(capacity or h.capacity, workers or h.workers)
+                    for h in hops]
+        cap = capacity or self.config.staging_capacity
+        wrk = workers or self.config.staging_workers
+        return [(cap, wrk)] * n
 
     def _build_pipeline(
         self,
         source: Iterable[Any],
         transforms: Sequence[tuple[str, Callable[[Any], Any]]],
-        capacity: int,
-        workers: int,
+        params: Sequence[tuple[int, int]],
+        plan: Optional[TransferPlan] = None,
     ) -> StagePipeline:
+        default_name = plan.hops[0].name if plan is not None else "stage"
         stages = [
-            Stage(name, capacity=capacity, workers=workers, transform=fn)
-            for name, fn in transforms
-        ] or [Stage("stage", capacity=capacity, workers=workers)]
+            Stage(name, capacity=cap, workers=wrk, transform=fn)
+            for (name, fn), (cap, wrk) in zip(transforms, params)
+        ] or [Stage(default_name, capacity=params[0][0], workers=params[0][1])]
         return StagePipeline(source, stages)
+
+    def _record(self, report: TransferReport) -> TransferReport:
+        if self.telemetry is not None:
+            self.telemetry.record(self.layer, report)
+        return report
 
     def _run(
         self,
@@ -110,9 +148,9 @@ class UnifiedDataMover:
         capacity: Optional[int],
         workers: Optional[int],
         checksum: Optional[bool],
+        plan: Optional[TransferPlan],
     ) -> TransferReport:
-        capacity = capacity or self.config.staging_capacity
-        workers = workers or self.config.staging_workers
+        plan = plan if plan is not None else self.plan
         do_sum = self.config.checksum if checksum is None else checksum
 
         # order-independent integrity: concurrent staging workers may
@@ -131,10 +169,17 @@ class UnifiedDataMover:
 
         all_transforms = list(transforms)
         if do_sum:
-            # checksum rides inside the staged path — overlapped, not serial
-            all_transforms.append(("checksum", maybe_hash))
+            # checksum rides inside the staged path — overlapped, not
+            # serial.  With a plan it rides the hop with the most
+            # bandwidth headroom (planner.checksum_index); otherwise it
+            # trails the path.
+            at = len(all_transforms)
+            if plan is not None and plan.checksum_index is not None:
+                at = min(plan.checksum_index, at)
+            all_transforms.insert(at, ("checksum", maybe_hash))
 
-        pipeline = self._build_pipeline(source, all_transforms, capacity, workers)
+        params = self._stage_params(all_transforms, plan, capacity, workers)
+        pipeline = self._build_pipeline(source, all_transforms, params, plan)
         items = 0
         nbytes = 0
         t0 = time.monotonic()
@@ -146,8 +191,11 @@ class UnifiedDataMover:
         elapsed = time.monotonic() - t0
         pipeline.join()
 
-        planned = self.basin.achievable_throughput() if self.basin else None
-        return TransferReport(
+        if plan is not None:
+            planned = plan.planned_bytes_per_s
+        else:
+            planned = self.basin.achievable_throughput() if self.basin else None
+        return self._record(TransferReport(
             mode=mode,
             items=items,
             bytes=nbytes,
@@ -155,7 +203,7 @@ class UnifiedDataMover:
             stage_reports=pipeline.reports(),
             checksum=bytes(digest_acc).hex() if digest_acc is not None else None,
             planned_bytes_per_s=planned,
-        )
+        ))
 
     # -- public API -----------------------------------------------------------
 
@@ -168,9 +216,11 @@ class UnifiedDataMover:
         capacity: Optional[int] = None,
         workers: Optional[int] = None,
         checksum: Optional[bool] = None,
+        plan: Optional[TransferPlan] = None,
     ) -> TransferReport:
         """Move a dataset at rest (paper section 2.2, *Bulk Transfer*)."""
-        return self._run("bulk", source, sink, transforms, capacity, workers, checksum)
+        return self._run("bulk", source, sink, transforms, capacity, workers,
+                         checksum, plan)
 
     def streaming_transfer(
         self,
@@ -181,13 +231,15 @@ class UnifiedDataMover:
         capacity: Optional[int] = None,
         workers: Optional[int] = None,
         checksum: Optional[bool] = None,
+        plan: Optional[TransferPlan] = None,
     ) -> TransferReport:
         """Move a still-growing stream (paper section 2.2, *Streaming
         Transfer*): the source iterator may block while data is produced;
         staging overlaps production with transit, which is exactly what the
         buffer path provides.  Identical machinery, different source
         contract — the unified-mover property."""
-        return self._run("streaming", source, sink, transforms, capacity, workers, checksum)
+        return self._run("streaming", source, sink, transforms, capacity,
+                         workers, checksum, plan)
 
     # -- direct (un-staged) path, for comparison -------------------------------
 
@@ -216,7 +268,7 @@ class UnifiedDataMover:
             nbytes += _default_sizeof(item)
         elapsed = time.monotonic() - t0
         planned = self.basin.achievable_throughput() if self.basin else None
-        return TransferReport(
+        return self._record(TransferReport(
             mode="direct",
             items=items,
             bytes=nbytes,
@@ -224,7 +276,7 @@ class UnifiedDataMover:
             stage_reports=[],
             checksum=bytes(digest_acc).hex() if digest_acc is not None else None,
             planned_bytes_per_s=planned,
-        )
+        ))
 
 
 def _as_bytes(item: Any) -> bytes:

@@ -1,0 +1,284 @@
+"""TransferPlan engine — the basin model turned into staging parameters.
+
+The paper's planning discipline (§2.3 "global tuning", §3.4 weakest-link
+analysis) is that predictable line-rate movement comes from matching
+buffer depth, concurrency, and integrity budget to *every* tier of the
+path — not from per-workload hand tuning.  :mod:`repro.core.basin` is the
+analytic model; this module is the bridge that turns a
+:class:`~repro.core.basin.DrainageBasin` plus an item-size estimate into
+the concrete knobs every data-moving layer needs:
+
+* **capacity** — burst-buffer slots per hop (Little's law over the
+  jitter window, double-buffered),
+* **workers** — concurrent staging workers per hop (concurrency as the
+  latency antidote, §3.1: enough in-flight pulls that per-item latency
+  and jitter amortize away and the hop sustains the path's line rate),
+* **checksum placement** — the integrity budget (§3.4) rides the hop
+  with the most bandwidth headroom, so hashing overlaps transit instead
+  of stretching the critical path.
+
+Every consumer — the training-input pipeline, the checkpoint engine, the
+decode token stream — builds its basin, asks :func:`plan_transfer` for a
+:class:`TransferPlan`, and hands that plan to the
+:class:`~repro.core.mover.UnifiedDataMover` / stage constructors.  No
+layer carries hard-coded staging constants.
+
+Adaptive re-planning (the paper's hypothesis -> change -> measure cycle,
+made mechanical): observed :class:`~repro.core.staging.StageReport` stall
+ratios feed back into the tier bandwidth estimates via :func:`replan`,
+which returns a revised plan.  A hop that mostly *starved* (stall
+upstream) reveals the upstream tier is slower than modeled; a hop that
+mostly *backpressured* (stall downstream) reveals the downstream tier is.
+
+Worked example
+--------------
+
+>>> from repro.core.basin import DrainageBasin, Tier, TierKind, GBPS
+>>> basin = DrainageBasin([
+...     Tier("src", TierKind.SOURCE, 10 * GBPS, latency_s=5e-3,
+...          jitter_s=20e-3),                      # erratic headwaters
+...     Tier("buf", TierKind.BURST_BUFFER, 100 * GBPS, latency_s=10e-6),
+...     Tier("dst", TierKind.SINK, 40 * GBPS, latency_s=1e-3),
+... ])
+>>> plan = plan_transfer(basin, item_bytes=4 * 1024 ** 2,
+...                      stages=["decode", "stage"], checksum=True)
+>>> [h.workers for h in plan.hops]      # erratic source hop needs concurrency
+[8, 1]
+>>> [h.capacity for h in plan.hops]     # deep buffer absorbs the jitter
+[12, 2]
+>>> plan.checksum_index                 # hashing rides the slack hop
+1
+>>> plan.planned_bytes_per_s <= basin.achievable_throughput()
+True
+
+After running the transfer, feed the observed stage reports back:
+
+>>> revised = replan(plan, stage_reports)           # doctest: +SKIP
+>>> revised.hops[0].workers                         # doctest: +SKIP
+8
+
+and use ``revised`` for the next transfer — measure, adjust, repeat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from .basin import DrainageBasin, Link, Tier
+from .staging import StageReport
+
+#: ceiling on per-hop concurrency (a planning guard, not a tuning knob:
+#: past this the GIL/thread overhead of the host path dominates)
+MAX_WORKERS = 8
+#: ceiling on per-hop buffer slots (bounds host memory for tiny items)
+MAX_CAPACITY = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class HopPlan:
+    """Staging parameters for one hop (one :class:`~repro.core.staging.Stage`)."""
+
+    name: str
+    capacity: int               # burst-buffer slots
+    workers: int                # concurrent staging workers
+    up_tier: str                # tier the hop pulls from
+    down_tier: str              # tier the hop delivers toward
+    rate_bytes_per_s: float     # what this hop can sustain as planned
+
+
+@dataclasses.dataclass
+class TransferPlan:
+    """A fully derived data path: per-hop parameters plus the promise
+    (``planned_bytes_per_s``) the fidelity gap is measured against."""
+
+    hops: list[HopPlan]
+    item_bytes: float
+    planned_bytes_per_s: float
+    checksum_index: Optional[int]       # hop index carrying the digest, or None
+    basin: DrainageBasin
+    ordered: bool
+
+    @property
+    def stages(self) -> list[str]:
+        return [h.name for h in self.hops]
+
+    def hop_for(self, index: int, name: str | None = None) -> HopPlan:
+        """Hop by stage name when it matches, else by position (extra
+        stages beyond the planned hops inherit the last hop's params)."""
+        if name is not None:
+            for h in self.hops:
+                if h.name == name:
+                    return h
+        return self.hops[min(index, len(self.hops) - 1)]
+
+    @property
+    def total_buffer_items(self) -> int:
+        return sum(h.capacity for h in self.hops)
+
+    def describe(self) -> str:
+        hops = ", ".join(
+            f"{h.name}[cap={h.capacity} w={h.workers} "
+            f"{h.up_tier}->{h.down_tier}]" for h in self.hops)
+        return (f"TransferPlan({hops}; planned="
+                f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
+                f"checksum@{self.checksum_index})")
+
+
+def _segment(tiers: Sequence[Tier], n_stages: int, j: int
+             ) -> tuple[int, int]:
+    """Tier-index span [lo, hi] that stage ``j`` of ``n_stages`` covers.
+
+    Stages partition the basin path evenly; each hop pulls from its
+    segment's first tier and delivers toward its last."""
+    T = len(tiers)
+    lo = j * (T - 1) // n_stages
+    hi = (j + 1) * (T - 1) // n_stages
+    hi = max(hi, lo + 1)
+    return lo, min(hi, T - 1)
+
+
+def _segment_rtt(basin: DrainageBasin, lo: int, hi: int) -> float:
+    names = {t.name for t in basin.tiers[lo:hi + 1]}
+    rtts = [l.rtt_s for l in basin.links
+            if l.src in names and l.dst in names]
+    return max(rtts, default=0.0)
+
+
+def _raw_line_rate(basin: DrainageBasin) -> float:
+    """Line rate ignoring per-item latency: min raw bandwidth over every
+    tier and link.  Concurrency (workers) is how a hop reaches it despite
+    latency — the paper's §3.1 latency insensitivity."""
+    rates = [t.bandwidth_bytes_per_s for t in basin.tiers]
+    rates.extend(l.bandwidth_bytes_per_s for l in basin.links)
+    return min(rates)
+
+
+def _worker_rate(up: Tier, down: Tier, item_bytes: float) -> float:
+    """Sustained rate of ONE staging worker doing pull -> transform ->
+    push: upstream service time (with latency + jitter) plus downstream
+    delivery, serialized within the worker."""
+    t = (item_bytes / up.bandwidth_bytes_per_s + up.latency_s + up.jitter_s
+         + item_bytes / down.bandwidth_bytes_per_s + down.latency_s)
+    return item_bytes / t
+
+
+def plan_transfer(
+    basin: DrainageBasin,
+    item_bytes: float,
+    *,
+    stages: Sequence[str] = ("stage",),
+    checksum: bool = False,
+    ordered: bool = False,
+    max_workers: int = MAX_WORKERS,
+    max_capacity: int = MAX_CAPACITY,
+) -> TransferPlan:
+    """Derive per-hop staging parameters from the basin model.
+
+    ``stages`` names the hops the consumer will run (one
+    :class:`~repro.core.staging.Stage` each); the basin path is split
+    evenly across them.  ``ordered=True`` pins every hop to one worker —
+    required when item order must survive the transfer (training batches,
+    decode token streams); buffer depth still comes from the model, so
+    jitter absorption is preserved.
+    """
+    if item_bytes <= 0:
+        raise ValueError("item_bytes must be > 0")
+    if not stages:
+        raise ValueError("need at least one stage name")
+    tiers = basin.tiers
+    n = len(stages)
+    target = _raw_line_rate(basin)
+
+    hops: list[HopPlan] = []
+    headroom: list[float] = []          # uncapped sustainable rate per hop
+    for j, name in enumerate(stages):
+        lo, hi = _segment(tiers, n, j)
+        up, down = tiers[lo], tiers[hi]
+        rate_1 = _worker_rate(up, down, item_bytes)
+        if ordered:
+            workers = 1
+        else:
+            workers = max(1, min(max_workers, math.ceil(target / rate_1)))
+        headroom.append(workers * rate_1)
+        hop_rate = min(workers * rate_1, target)
+        # Little's law over the stochastic window, double-buffered
+        window_s = up.jitter_s + down.jitter_s + _segment_rtt(basin, lo, hi)
+        need_items = math.ceil(target * window_s / item_bytes)
+        capacity = max(2, workers + 1, 2 * need_items)
+        capacity = min(capacity, max_capacity)
+        hops.append(HopPlan(name=name, capacity=capacity, workers=workers,
+                            up_tier=up.name, down_tier=down.name,
+                            rate_bytes_per_s=hop_rate))
+
+    planned = min(min(h.rate_bytes_per_s for h in hops),
+                  basin.achievable_throughput())
+    checksum_index = None
+    if checksum:
+        # integrity rides the hop with the most headroom over the plan
+        checksum_index = max(range(len(hops)), key=lambda i: headroom[i])
+    return TransferPlan(hops=hops, item_bytes=float(item_bytes),
+                        planned_bytes_per_s=planned,
+                        checksum_index=checksum_index, basin=basin,
+                        ordered=ordered)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive re-planning: hypothesis -> change -> measure, made mechanical
+# ---------------------------------------------------------------------------
+
+#: a hop is considered stalled when this fraction of its worker-time was
+#: spent waiting (below it, the measurement is noise)
+STALL_THRESHOLD = 0.1
+
+
+def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
+           damping: float = 0.5) -> TransferPlan:
+    """Revise a plan from observed stall ratios.
+
+    For each hop, the stall accounting of its :class:`StageReport` says
+    which side actually limited it:
+
+    * ``stall_up_s`` dominant  -> the upstream tier delivered slower than
+      modeled; pull its bandwidth estimate toward the observed rate
+      (next plan raises this hop's concurrency / deepens the buffer in
+      front of it),
+    * ``stall_down_s`` dominant -> the downstream tier absorbed slower
+      than modeled; pull its estimate down likewise.
+
+    ``damping`` blends old estimate and observation (1.0 = trust the
+    measurement outright).  Returns a new :class:`TransferPlan` built on
+    the re-estimated basin; the original is untouched.
+    """
+    if not 0.0 < damping <= 1.0:
+        raise ValueError("damping must be in (0, 1]")
+    est = {t.name: t.bandwidth_bytes_per_s for t in plan.basin.tiers}
+    by_name = {r.name: r for r in reports}
+    for hop in plan.hops:
+        rep = by_name.get(hop.name)
+        if rep is None or rep.elapsed_s <= 0:
+            continue
+        observed = rep.throughput_bytes_per_s
+        if observed <= 0:
+            continue
+        worker_time = rep.elapsed_s * hop.workers
+        r_up = rep.stall_up_s / worker_time
+        r_down = rep.stall_down_s / worker_time
+        if max(r_up, r_down) < STALL_THRESHOLD:
+            continue
+        # the side we mostly waited on is the side that limited us: its
+        # *effective* delivery rate was the hop's observed throughput
+        tier_name = hop.up_tier if r_up >= r_down else hop.down_tier
+        est[tier_name] = (1.0 - damping) * est[tier_name] + damping * observed
+
+    new_tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=est[t.name])
+                 for t in plan.basin.tiers]
+    # explicit links are physical (bandwidth + rtt) and survive; implicit
+    # ones were derived from the old tier estimates and must re-derive,
+    # otherwise an upward revision stays clamped at the stale link rate
+    links = plan.basin.links if plan.basin.explicit_links else None
+    new_basin = DrainageBasin(new_tiers, links)
+    return plan_transfer(
+        new_basin, plan.item_bytes, stages=plan.stages,
+        checksum=plan.checksum_index is not None, ordered=plan.ordered)

@@ -1,0 +1,117 @@
+"""Cross-layer transfer telemetry — the fidelity gap as an always-on signal.
+
+The paper's headline observable (§1) is the *fidelity gap*: provisioned
+capacity vs. what the application actually achieves.  Every planned
+transfer in this framework already computes it per transfer
+(:class:`~repro.core.mover.TransferReport`); this module aggregates those
+reports **across layers** — input pipeline, checkpoint engine, decode
+stream — so one registry answers "where does the whole system leak
+bandwidth", which is exactly the weakest-link question of §3.4.
+
+Layers record under a stable name (``"input"``, ``"checkpoint"``,
+``"serve"``); the training driver surfaces :meth:`TelemetryRegistry.summary`
+in its step logs and the benchmark harness reads the same registry for
+planned-vs-fixed comparisons.  A process-global default registry keeps
+wiring trivial; tests construct their own.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:          # circular-import guard (mover imports telemetry)
+    from .mover import TransferReport
+
+
+@dataclasses.dataclass
+class LayerSummary:
+    """Aggregate view of one layer's recorded transfers."""
+
+    layer: str
+    transfers: int = 0
+    items: int = 0
+    bytes: int = 0
+    elapsed_s: float = 0.0
+    worst_fidelity_gap: Optional[float] = None
+
+    @property
+    def throughput_bytes_per_s(self) -> float:
+        return self.bytes / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+
+class TelemetryRegistry:
+    """Thread-safe collector of :class:`TransferReport`\\ s by layer.
+
+    Reports fold into per-layer running aggregates at record time (O(1)
+    memory per layer — a long-lived server or multi-day training run
+    never grows it); only the most recent ``keep_recent`` raw reports
+    are retained for inspection."""
+
+    def __init__(self, keep_recent: int = 256) -> None:
+        self._lock = threading.Lock()
+        self._aggregates: dict[str, LayerSummary] = {}
+        self._recent: collections.deque[tuple[str, "TransferReport"]] = \
+            collections.deque(maxlen=keep_recent)
+
+    def record(self, layer: str, report: "TransferReport") -> None:
+        with self._lock:
+            self._recent.append((layer, report))
+            s = self._aggregates.setdefault(layer, LayerSummary(layer=layer))
+            s.transfers += 1
+            s.items += report.items
+            s.bytes += report.bytes
+            s.elapsed_s += report.elapsed_s
+            gap = report.fidelity_gap
+            if gap is not None:
+                if s.worst_fidelity_gap is None or gap > s.worst_fidelity_gap:
+                    s.worst_fidelity_gap = gap
+
+    def reports(self, layer: str | None = None) -> list["TransferReport"]:
+        """The retained recent raw reports (newest last)."""
+        with self._lock:
+            return [r for l, r in self._recent
+                    if layer is None or l == layer]
+
+    def layers(self) -> list[str]:
+        with self._lock:
+            return list(self._aggregates)
+
+    def summary(self) -> dict[str, LayerSummary]:
+        """Per-layer aggregation of everything recorded so far."""
+        with self._lock:
+            return {layer: dataclasses.replace(s)
+                    for layer, s in self._aggregates.items()}
+
+    def worst_fidelity_gap(self) -> Optional[float]:
+        """The system-wide weakest link: max gap over every layer, or
+        ``None`` when no planned transfer has been recorded yet."""
+        gaps = [s.worst_fidelity_gap for s in self.summary().values()
+                if s.worst_fidelity_gap is not None]
+        return max(gaps) if gaps else None
+
+    def format_summary(self) -> str:
+        lines = []
+        for name, s in sorted(self.summary().items()):
+            gap = ("n/a" if s.worst_fidelity_gap is None
+                   else f"{s.worst_fidelity_gap:.3f}")
+            lines.append(
+                f"{name:>10}: {s.transfers} transfers, {s.items} items, "
+                f"{s.throughput_bytes_per_s / 1e6:.1f} MB/s, "
+                f"worst gap {gap}")
+        return "\n".join(lines) or "(no transfers recorded)"
+
+    def clear(self) -> None:
+        with self._lock:
+            self._aggregates.clear()
+            self._recent.clear()
+
+
+_global = TelemetryRegistry()
+
+
+def get_registry() -> TelemetryRegistry:
+    """The process-global registry the production layers record into."""
+    return _global

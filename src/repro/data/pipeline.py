@@ -28,7 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.basin import DrainageBasin, tpu_input_basin
+from repro.core.mover import TransferReport
+from repro.core.planner import TransferPlan, plan_transfer, replan
 from repro.core.staging import Stage, StagePipeline
+from repro.core.telemetry import TelemetryRegistry, get_registry
 from repro.models.config import ModelConfig
 
 
@@ -37,8 +40,9 @@ class PipelineConfig:
     global_batch: int
     seq_len: int
     mode: str = "streaming"          # bulk | streaming
-    staging_capacity: Optional[int] = None   # None -> from basin model
-    staging_workers: int = 1    # >1 absorbs more jitter but may reorder
+    staging_capacity: Optional[int] = None   # None -> from the TransferPlan
+    staging_workers: Optional[int] = None    # None -> from the TransferPlan;
+    # explicit >1 opts into jitter absorption at the cost of batch order
     host_index: int = 0
     host_count: int = 1
     seed: int = 0
@@ -125,28 +129,57 @@ def make_batch_sharding(mesh, batch_axes: tuple[str, ...]):
 
 
 class InputPipeline:
-    """source -> [decode stage] -> [staging buffer] -> device feed."""
+    """source -> [decode stage] -> [staging buffer] -> device feed.
+
+    Staging depth and concurrency per hop come from a
+    :class:`~repro.core.planner.TransferPlan` derived from the basin model
+    and the estimated batch size — the planning discipline applied, not
+    hand-tuned constants.  Batch order must survive the path (training
+    determinism), so the plan is ``ordered`` unless the caller explicitly
+    sets ``pc.staging_workers > 1``.  Explicit ``pc.staging_capacity`` /
+    ``pc.staging_workers`` remain per-workload overrides.
+    """
 
     def __init__(self, source: Any, *, basin: Optional[DrainageBasin] = None,
                  pc: Optional[PipelineConfig] = None, mesh=None,
                  batch_axes: tuple[str, ...] = ("data",),
-                 to_device: bool = True):
+                 to_device: bool = True,
+                 plan: Optional[TransferPlan] = None,
+                 telemetry: Optional[TelemetryRegistry] = None):
         self.source = source
-        self.basin = basin or tpu_input_basin()
+        self.basin = basin or (plan.basin if plan is not None
+                               else tpu_input_basin())
         self.pc = pc or getattr(source, "pc", PipelineConfig(1, 128))
         self.mesh = mesh
         self.batch_axes = batch_axes
         self.to_device = to_device
-        item_bytes = self._estimate_item_bytes()
-        cap = self.pc.staging_capacity or self.basin.prefetch_depth(item_bytes)
-        cap = max(2, min(cap, 16))
-        self._stages = [
-            Stage("decode", capacity=cap, workers=self.pc.staging_workers,
+        self.telemetry = telemetry if telemetry is not None else get_registry()
+        self.item_bytes = self._estimate_item_bytes()
+        ordered = not (self.pc.staging_workers and self.pc.staging_workers > 1)
+        self.plan = plan or plan_transfer(
+            self.basin, self.item_bytes, stages=("decode", "stage"),
+            ordered=ordered)
+        self._pipeline: Optional[StagePipeline] = None
+        self._t_start: Optional[float] = None
+        self._recorded = False
+        # the plan whose staging parameters the running pipeline was
+        # built with; replan() revises self.plan for the NEXT iteration,
+        # so live metrics must keep measuring against this one
+        self._active_plan = self.plan
+
+    def _build_stages(self) -> list[Stage]:
+        decode_hop = self.plan.hop_for(0, "decode")
+        place_hop = self.plan.hop_for(1, "stage")
+        cap0 = self.pc.staging_capacity or decode_hop.capacity
+        cap1 = self.pc.staging_capacity or place_hop.capacity
+        wrk0 = self.pc.staging_workers or decode_hop.workers
+        return [
+            Stage("decode", capacity=cap0, workers=wrk0,
                   transform=self._decode),
-            Stage("stage", capacity=cap, workers=1,
+            # device placement stays single-worker: jax.device_put ordering
+            Stage("stage", capacity=cap1, workers=1,
                   transform=self._place),
         ]
-        self._pipeline: Optional[StagePipeline] = None
 
     def _estimate_item_bytes(self) -> int:
         pc = self.pc
@@ -170,11 +203,59 @@ class InputPipeline:
         return {k: jnp.asarray(v) for k, v in item.items()}
 
     def __iter__(self) -> Iterator[dict]:
-        self._pipeline = StagePipeline(iter(self.source), self._stages)
-        return iter(self._pipeline)
+        # fresh stages per iteration so the current plan takes effect
+        # (and re-iteration after replan() works)
+        self._active_plan = self.plan
+        self._pipeline = StagePipeline(iter(self.source), self._build_stages())
+        self._t_start = time.monotonic()
+        self._recorded = False
+
+        def run() -> Iterator[dict]:
+            for item in self._pipeline:
+                yield item
+            self.record_telemetry()
+
+        return run()
 
     def reports(self):
         return self._pipeline.reports() if self._pipeline else []
+
+    def record_telemetry(self) -> Optional[TransferReport]:
+        """Record the stream's progress so far (for consumers that stop
+        before the source exhausts — e.g. a bounded training run).  At
+        most one report per iteration of the pipeline."""
+        if not self._pipeline or not self._t_start or self._recorded:
+            return None
+        self._recorded = True
+        stats = self._pipeline.output.stats
+        report = TransferReport(
+            mode=self.pc.mode, items=stats.gets,
+            bytes=int(stats.gets * self.item_bytes),
+            elapsed_s=time.monotonic() - self._t_start,
+            stage_reports=self._pipeline.reports(),
+            planned_bytes_per_s=self._active_plan.planned_bytes_per_s)
+        self.telemetry.record("input", report)
+        return report
+
+    def replan(self, *, damping: float = 0.5) -> TransferPlan:
+        """Fold observed stall ratios back into the plan (the paper's
+        hypothesis -> change -> measure cycle).  The revised plan takes
+        effect on the next iteration of this pipeline."""
+        reps = self.reports()
+        if reps:
+            self.plan = replan(self.plan, reps, damping=damping)
+        return self.plan
+
+    def fidelity_gap(self) -> Optional[float]:
+        """Live achieved-vs-planned gap of the staging path (<0 means the
+        path is beating the plan's promise)."""
+        if not self._pipeline or not self._t_start:
+            return None
+        elapsed = time.monotonic() - self._t_start
+        if elapsed <= 0:
+            return None
+        achieved = self._pipeline.output.stats.gets * self.item_bytes / elapsed
+        return 1.0 - achieved / self._active_plan.planned_bytes_per_s
 
     def consumer_stall_s(self) -> float:
         """Total time the training step waited on input — the pipeline's

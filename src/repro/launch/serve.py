@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.burst_buffer import BurstBuffer
+from repro.core.basin import decode_stream_basin
 from repro.core.codesign import CodesignPlan
 from repro.core.mover import MoverConfig, UnifiedDataMover
+from repro.core.planner import plan_transfer
+from repro.core.telemetry import get_registry
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models.api import ShapeSpec, build
@@ -59,14 +61,19 @@ class Server:
     def generate(self, batch: dict, n_tokens: int,
                  sink=None) -> np.ndarray:
         """Greedy-decode ``n_tokens``; each step's tokens stream to ``sink``
-        through the unified mover (streaming transfer)."""
+        through the unified mover (streaming transfer).  Staging depth
+        comes from the decode-stream basin plan — sized so an erratic
+        client never stalls the accelerator; the plan is ``ordered``
+        because the token stream must arrive in decode order."""
         logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
         out = [np.asarray(tok)]
-        stream = BurstBuffer(capacity=8, name="token-stream")
-        mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
-                                             staging_workers=1,
-                                             checksum=False))
+        n_batch = int(tok.shape[0])
+        plan = plan_transfer(decode_stream_basin(),
+                             item_bytes=max(1, n_batch * 4),
+                             stages=("token-stream",), ordered=True)
+        mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                                 telemetry=get_registry(), layer="serve")
 
         def produce() -> Iterator[np.ndarray]:
             nonlocal tok, cache
@@ -78,7 +85,7 @@ class Server:
 
         collected: list[np.ndarray] = []
         report = mover.streaming_transfer(
-            produce(), sink or collected.append)
+            produce(), sink or collected.append, plan=plan)
         out.extend(collected)
         self.last_report = report
         return np.concatenate(out, axis=1)

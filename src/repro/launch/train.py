@@ -29,6 +29,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, get_smoke_config
 from repro.core.basin import tpu_input_basin
 from repro.core.codesign import CodesignPlan
+from repro.core.telemetry import get_registry
 from repro.data.pipeline import InputPipeline, PipelineConfig, SyntheticTokenSource
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
@@ -49,9 +50,13 @@ class Trainer:
         self.plan = plan or CodesignPlan(sharding="fsdp_tp", microbatches=1,
                                          remat=cfg.remat,
                                          seq_parallel=False)
+        # warmup must fit inside the run: the default 100-step warmup never
+        # reaches peak lr on short runs (smoke tests, examples)
+        warmup = max(1, min(100, total_steps // 5))
         (self.train_step, self.p_shard, self.s_shard,
          self.ctx) = steps_lib.make_train_step(
-            self.api, mesh, self.plan, lr_peak=lr, total_steps=total_steps)
+            self.api, mesh, self.plan, lr_peak=lr, warmup=warmup,
+            total_steps=total_steps)
         self.ckpt = (CheckpointManager(ckpt_dir, every_steps=ckpt_every)
                      if ckpt_dir else None)
         self.params = None
@@ -83,8 +88,15 @@ class Trainer:
 
     # -- loop ----------------------------------------------------------------
 
-    def run(self, source, n_steps: int, *, inject_failure_at: int = -1
-            ) -> list[dict]:
+    def run(self, source, n_steps: int, *, inject_failure_at: int = -1,
+            replan_every: int = 0) -> list[dict]:
+        """Train ``n_steps``.  ``replan_every > 0`` folds observed input
+        stall ratios back into the transfer plan at that step cadence.
+        The running pipeline keeps its staging parameters (swapping
+        buffers mid-stream would drop staged batches); the revised plan
+        applies when the pipeline is next constructed — a later ``run``
+        call, a new epoch, or a restart.  Logged fidelity gaps always
+        measure against the plan the running pipeline was built with."""
         pc = getattr(source, "pc", None)
         pipeline = InputPipeline(
             source, basin=tpu_input_basin(), pc=pc, mesh=self.mesh,
@@ -116,11 +128,15 @@ class Trainer:
             self.step_idx += 1
             done += 1
             rec = {"step": self.step_idx, "loss": loss, "wall_s": dt,
-                   "input_stall_s": pipeline.consumer_stall_s()}
+                   "input_stall_s": pipeline.consumer_stall_s(),
+                   "input_fidelity_gap": pipeline.fidelity_gap()}
             self.metrics_log.append(rec)
+            if replan_every and done % replan_every == 0:
+                pipeline.replan()
             if self.ckpt is not None:
                 self.ckpt.maybe_save(self.step_idx, {
                     "params": self.params, "opt": self.opt_state})
+        pipeline.record_telemetry()
         if self.ckpt is not None:
             self.ckpt.wait()
             self.ckpt.maybe_save(self.step_idx, {
@@ -141,6 +157,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--inject-failure-at", type=int, default=-1)
+    ap.add_argument("--replan-every", type=int, default=0,
+                    help="revise the transfer plan from observed stalls "
+                         "every N steps; the revised plan applies when the "
+                         "pipeline is next constructed (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -157,14 +177,21 @@ def main() -> None:
                         seed=args.seed)
     source = SyntheticTokenSource(cfg, pc, n_batches=args.steps + 8)
     log = trainer.run(source, args.steps,
-                      inject_failure_at=args.inject_failure_at)
+                      inject_failure_at=args.inject_failure_at,
+                      replan_every=args.replan_every)
     for rec in log[-5:]:
+        gap = rec.get("input_fidelity_gap")
+        gap_s = f" gap {gap:+.3f}" if gap is not None else ""
         print(f"[train] step {rec['step']:5d} loss {rec['loss']:.4f} "
-              f"wall {rec['wall_s']*1e3:.1f} ms stall {rec['input_stall_s']:.3f}s")
+              f"wall {rec['wall_s']*1e3:.1f} ms "
+              f"stall {rec['input_stall_s']:.3f}s{gap_s}")
     losses = [r["loss"] for r in log]
     if len(losses) >= 10:
         print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
               f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})")
+    print("[train] transfer telemetry (all layers):")
+    for line in get_registry().format_summary().splitlines():
+        print(f"[train]   {line}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""Version-portable jax API surface used by the manual-collective paths."""
+
+from __future__ import annotations
+
+import jax
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` where it exists; older jax has no varying-axes
+    typing inside shard_map, so the marker is a no-op there."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available, else the experimental spelling
+    (which names the replication check ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import pvary, shard_map
+
 
 def pipeline_forward(
     layer_fn: Callable[[Any, jax.Array], jax.Array],
@@ -48,8 +50,8 @@ def pipeline_forward(
         # carries must be marked device-varying over the stage axis up
         # front (ppermute outputs are varying; fori_loop carries need
         # matching types)
-        buf = jax.lax.pvary(jnp.zeros(mb_shape, x_local.dtype), stage_axis)
-        outs = jax.lax.pvary(jnp.zeros_like(x_local), stage_axis)
+        buf = pvary(jnp.zeros(mb_shape, x_local.dtype), stage_axis)
+        outs = pvary(jnp.zeros_like(x_local), stage_axis)
 
         def tick(t, carry):
             buf, outs = carry
@@ -83,7 +85,7 @@ def pipeline_forward(
 
     # stage axis shards the layer dim of every stacked leaf
     param_spec = jax.tree.map(lambda _: P(stage_axis), stacked_params)
-    return jax.shard_map(
+    return shard_map(
         staged, mesh=mesh,
         in_specs=(param_spec, P(*( [None] * x.ndim ))),
         out_specs=P(*([None] * x.ndim)),

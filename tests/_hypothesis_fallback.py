@@ -1,0 +1,124 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+The seed property tests use a small slice of the hypothesis API:
+``@given(...)`` with ``st.floats / st.integers / st.lists / st.sampled_from``
+strategies plus a ``@settings`` decorator.  This shim reproduces that slice
+with a deterministic PRNG so the property tests still execute (over a fixed
+number of sampled examples) on machines where hypothesis cannot be
+installed.  Import pattern used by the test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+_N_EXAMPLES = 25
+_SEED = 0xDA7A
+
+
+class _Strategy:
+    """A sampler: draw(rng) -> one example value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class st:  # namespace mirroring `hypothesis.strategies`
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               allow_nan: bool = False, allow_infinity: bool = False
+               ) -> _Strategy:
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(rng: random.Random) -> float:
+            # bias toward the endpoints: property tests care about extremes
+            r = rng.random()
+            if r < 0.1:
+                return lo
+            if r < 0.2:
+                return hi
+            # log-uniform when the range spans orders of magnitude
+            if lo > 0 and hi / lo > 1e3:
+                import math
+                return math.exp(rng.uniform(math.log(lo), math.log(hi)))
+            return rng.uniform(lo, hi)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31
+                 ) -> _Strategy:
+        lo, hi = int(min_value), int(max_value)
+
+        def draw(rng: random.Random) -> int:
+            r = rng.random()
+            if r < 0.1:
+                return lo
+            if r < 0.2:
+                return hi
+            return rng.randint(lo, hi)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10
+              ) -> _Strategy:
+        def draw(rng: random.Random) -> list:
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: rng.choice(opts))
+
+
+def settings(*_args, **_kwargs):
+    """No-op decorator (example counts are fixed in this shim)."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the wrapped test over ``_N_EXAMPLES`` deterministic samples."""
+
+    def deco(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        bound_kw = dict(kw_strategies)
+        for strat, name in zip(arg_strategies, params):
+            if name in bound_kw:
+                raise TypeError(f"{name} bound twice in @given")
+            bound_kw[name] = strat
+        free = [p for p in params if p not in bound_kw]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(_SEED)
+            for _ in range(_N_EXAMPLES):
+                drawn = {k: s.draw(rng) for k, s in bound_kw.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # hide strategy-bound params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(
+            parameters=[sig.parameters[p] for p in free])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

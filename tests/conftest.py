@@ -13,6 +13,15 @@ if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
 
+def pytest_configure(config):
+    # fast tier-1 path on CPU-only machines:
+    #   PYTHONPATH=src python -m pytest -q -m "not slow"
+    config.addinivalue_line(
+        "markers",
+        "slow: model forward/backward or subprocess tests (minutes on CPU); "
+        'deselect with -m "not slow"')
+
+
 @pytest.fixture(scope="session")
 def rng():
     import numpy as np

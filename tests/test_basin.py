@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # not installable here - deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.basin import (ApplianceTier, DrainageBasin, GBPS, Link, Tier,
                               TierKind, daily_volume_bytes, paper_basin,

@@ -5,7 +5,10 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # not installable here - deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.burst_buffer import BufferClosed, BurstBuffer
 

@@ -13,14 +13,17 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 SCRIPT = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import _make_mesh
+from repro.parallel.compat import shard_map
+mesh = _make_mesh((2, 4), ("data", "model"))
 
 # --- 1. sharding rules: specs valid + divisible ---------------------------
 from repro.configs import get_smoke_config, get_config
@@ -59,7 +62,7 @@ dist_loss = float(m["loss"])
 params1 = dapi.init(jax.random.PRNGKey(0))
 single_loss = float(dapi.loss(params1, {k: jnp.asarray(v) for k, v in batch.items()},
                               ShardCtx())[0])
-assert abs(dist_loss - single_loss) < 0.05, (dist_loss, single_loss)
+assert abs(dist_loss - single_loss) < 0.02 * single_loss, (dist_loss, single_loss)
 print("MARKER dense-distributed-ok", dist_loss, single_loss)
 
 # --- 3. moe_ep and moe_tp match the dense oracle --------------------------
@@ -92,19 +95,19 @@ print("MARKER moe-parity-ok")
 # --- 4. compressed + hierarchical psum match plain psum -------------------
 from repro.parallel.collectives import compressed_psum, hierarchical_psum
 data = jax.random.normal(jax.random.PRNGKey(4), (4, 512))
-exact = jax.shard_map(lambda v: jax.lax.psum(v, "model"), mesh=mesh,
+exact = shard_map(lambda v: jax.lax.psum(v, "model"), mesh=mesh,
                       in_specs=P("model", None), out_specs=P(None, None))(data)
-approx = jax.shard_map(lambda v: compressed_psum(v, "model", block=64),
+approx = shard_map(lambda v: compressed_psum(v, "model", block=64),
                        mesh=mesh, in_specs=P("model", None),
                        out_specs=P(None, None), check_vma=False)(data)
 rel = np.abs(np.asarray(approx) - np.asarray(exact)).max() / (
     np.abs(np.asarray(exact)).max() + 1e-9)
 assert rel < 0.05, rel
-hier = jax.shard_map(lambda v: hierarchical_psum(
+hier = shard_map(lambda v: hierarchical_psum(
     v, intra_axis="model", inter_axis="data"), mesh=mesh,
     in_specs=P(("data", "model"), None), out_specs=P(None, None),
     check_vma=False)(jnp.tile(data, (2, 1)))
-exact2 = jax.shard_map(lambda v: jax.lax.psum(v, ("data", "model")),
+exact2 = shard_map(lambda v: jax.lax.psum(v, ("data", "model")),
                        mesh=mesh, in_specs=P(("data", "model"), None),
                        out_specs=P(None, None))(jnp.tile(data, (2, 1)))
 np.testing.assert_allclose(np.asarray(hier), np.asarray(exact2),
@@ -113,8 +116,7 @@ print("MARKER collectives-ok", rel)
 
 # --- 5. pipeline_forward matches sequential ---------------------------------
 from repro.parallel.pipeline import pipeline_forward
-pmesh = jax.make_mesh((4,), ("pod",),
-                      axis_types=(jax.sharding.AxisType.Auto,))
+pmesh = _make_mesh((4,), ("pod",))
 L, D = 8, 16
 wkey = jax.random.PRNGKey(5)
 ws = jax.random.normal(wkey, (L, D, D)) * 0.3
@@ -144,8 +146,7 @@ tree = {"w": jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
                             NamedSharding(mesh, P("data", "model")))}
 with tempfile.TemporaryDirectory() as d:
     save_checkpoint(d, 1, tree)
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = _make_mesh((4, 2), ("data", "model"))
     sh2 = {"w": NamedSharding(mesh2, P("model", "data"))}
     out = load_checkpoint(d, 1, jax.tree.map(jnp.zeros_like, tree),
                           shardings=sh2)

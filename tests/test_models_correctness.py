@@ -17,6 +17,8 @@ from repro.models.attention import (attention, cache_positions_ring,
                                     cache_positions_full)
 from repro.models.lm import forward_lm
 
+pytestmark = pytest.mark.slow
+
 CTX = ShardCtx()
 BASE = dict(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
             d_ff=64, vocab=64, max_seq_len=128, remat="none")

@@ -14,6 +14,8 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
 from repro.models import ShardCtx, build
 
+pytestmark = pytest.mark.slow
+
 B, S = 2, 64
 
 

@@ -1,0 +1,304 @@
+"""TransferPlan engine: derivation, per-hop independence, adaptive replan,
+checksum placement, telemetry aggregation, and plan-driven consumers."""
+
+import numpy as np
+import pytest
+
+from repro.core.basin import (DrainageBasin, GBPS, MIB, Tier, TierKind,
+                              checkpoint_basin, decode_stream_basin,
+                              tpu_input_basin)
+from repro.core.mover import MoverConfig, TransferReport, UnifiedDataMover
+from repro.core.planner import (MAX_CAPACITY, MAX_WORKERS, plan_transfer,
+                                replan)
+from repro.core.staging import StageReport
+from repro.core.telemetry import TelemetryRegistry
+
+
+def _basin(src_latency=0.0, src_jitter=0.0, src_gbps=10.0):
+    return DrainageBasin([
+        Tier("src", TierKind.SOURCE, src_gbps * GBPS,
+             latency_s=src_latency, jitter_s=src_jitter),
+        Tier("buf", TierKind.BURST_BUFFER, 100.0 * GBPS, latency_s=1e-5),
+        Tier("dst", TierKind.SINK, 40.0 * GBPS, latency_s=1e-4),
+    ])
+
+
+# -- derivation --------------------------------------------------------------
+
+def test_latency_bound_source_gets_concurrency():
+    """Concurrency is the latency antidote (paper §3.1): a source whose
+    per-item latency dominates needs many workers to hold line rate."""
+    smooth = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    erratic = plan_transfer(_basin(src_latency=5e-3, src_jitter=20e-3),
+                            4 * MIB, stages=["move"])
+    assert erratic.hops[0].workers > smooth.hops[0].workers
+
+
+def test_jittery_source_gets_deeper_buffer():
+    smooth = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    jittery = plan_transfer(_basin(src_jitter=50e-3), 4 * MIB,
+                            stages=["move"])
+    assert jittery.hops[0].capacity > smooth.hops[0].capacity
+
+
+def test_ordered_plan_pins_single_worker():
+    plan = plan_transfer(_basin(src_latency=5e-3, src_jitter=20e-3),
+                         4 * MIB, stages=["a", "b"], ordered=True)
+    assert all(h.workers == 1 for h in plan.hops)
+    # jitter absorption via depth is preserved even when ordered
+    assert plan.hops[0].capacity > 2
+
+
+def test_hops_carry_independent_parameters():
+    """The multi-hop path is not uniform: each hop sizes to its own tiers."""
+    basin = DrainageBasin([
+        Tier("erratic-store", TierKind.SOURCE, 10 * GBPS,
+             latency_s=5e-3, jitter_s=30e-3),
+        Tier("bb", TierKind.BURST_BUFFER, 200 * GBPS, latency_s=1e-5),
+        Tier("wan", TierKind.CHANNEL, 100 * GBPS, latency_s=1e-3),
+        Tier("sink", TierKind.SINK, 40 * GBPS, latency_s=1e-5),
+    ])
+    plan = plan_transfer(basin, 8 * MIB, stages=["ingest", "deliver"])
+    a, b = plan.hops
+    assert (a.capacity, a.workers) != (b.capacity, b.workers)
+    assert a.up_tier == "erratic-store" and b.down_tier == "sink"
+
+
+def test_clamps_respected():
+    plan = plan_transfer(_basin(src_latency=1.0, src_jitter=10.0), 64,
+                         stages=["move"])
+    assert plan.hops[0].workers <= MAX_WORKERS
+    assert plan.hops[0].capacity <= MAX_CAPACITY
+
+
+def test_planned_rate_never_exceeds_basin():
+    for item in (512, 64 * 1024, 16 * MIB):
+        plan = plan_transfer(_basin(src_latency=1e-3), item, stages=["move"])
+        assert plan.planned_bytes_per_s <= _basin().achievable_throughput()
+
+
+def test_checksum_rides_headroom_hop():
+    """Integrity hashing lands on the hop with the most bandwidth slack."""
+    basin = DrainageBasin([
+        Tier("slow-src", TierKind.SOURCE, 2 * GBPS, latency_s=1e-3),
+        Tier("fat-buf", TierKind.BURST_BUFFER, 400 * GBPS),
+        Tier("sink", TierKind.SINK, 40 * GBPS),
+    ])
+    plan = plan_transfer(basin, 4 * MIB, stages=["pull", "push"],
+                         checksum=True)
+    # the pull hop is pinned at the slow source; push has ~20x headroom
+    assert plan.checksum_index == 1
+    no_sum = plan_transfer(basin, 4 * MIB, stages=["pull", "push"])
+    assert no_sum.checksum_index is None
+
+
+def test_plan_validates_inputs():
+    with pytest.raises(ValueError):
+        plan_transfer(_basin(), 0, stages=["move"])
+    with pytest.raises(ValueError):
+        plan_transfer(_basin(), 1024, stages=[])
+
+
+# -- adaptive replan ---------------------------------------------------------
+
+def _starved_report(plan, frac=0.8):
+    hop = plan.hops[0]
+    return StageReport(name=hop.name, items=100, bytes=100 * 4 * MIB,
+                       elapsed_s=4.0,
+                       stall_up_s=hop.workers * 4.0 * frac,
+                       stall_down_s=0.0, errors=0)
+
+
+def test_replan_lowers_starved_upstream_estimate():
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    rep = _starved_report(plan)
+    observed = rep.throughput_bytes_per_s
+    revised = replan(plan, [rep], damping=1.0)
+    src = revised.basin.tiers[0]
+    assert src.bandwidth_bytes_per_s == pytest.approx(observed)
+    # the promise becomes achievable: no more fantasy line rate
+    assert revised.planned_bytes_per_s < plan.planned_bytes_per_s
+
+
+def test_replan_backpressure_adjusts_downstream():
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    hop = plan.hops[0]
+    rep = StageReport(name=hop.name, items=100, bytes=100 * 4 * MIB,
+                      elapsed_s=4.0, stall_up_s=0.0,
+                      stall_down_s=hop.workers * 4.0 * 0.7, errors=0)
+    revised = replan(plan, [rep], damping=1.0)
+    dst = revised.basin.tiers[-1]
+    assert dst.bandwidth_bytes_per_s == pytest.approx(
+        rep.throughput_bytes_per_s)
+    # upstream estimate untouched
+    assert (revised.basin.tiers[0].bandwidth_bytes_per_s
+            == plan.basin.tiers[0].bandwidth_bytes_per_s)
+
+
+def test_replan_ignores_quiet_hops():
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    rep = StageReport(name="move", items=100, bytes=100 * 4 * MIB,
+                      elapsed_s=4.0, stall_up_s=0.01, stall_down_s=0.01,
+                      errors=0)
+    revised = replan(plan, [rep])
+    for old, new in zip(plan.basin.tiers, revised.basin.tiers):
+        assert old.bandwidth_bytes_per_s == new.bandwidth_bytes_per_s
+
+
+def test_replan_can_revise_upward_past_implicit_links():
+    """Implicit links re-derive on replan: an underestimated tier is not
+    permanently clamped at the stale link bandwidth."""
+    plan = plan_transfer(_basin(src_gbps=1.0), 4 * MIB, stages=["move"])
+    # observed: the hop still starved upstream, but moved 4x the modeled
+    # source line rate — the source is faster than the model said
+    observed_bw = 4.0 * GBPS                      # vs 1 Gbps modeled
+    rep = StageReport(name="move", items=100,
+                      bytes=int(observed_bw * 1.0), elapsed_s=1.0,
+                      stall_up_s=plan.hops[0].workers * 0.7,
+                      stall_down_s=0.0, errors=0)
+    revised = replan(plan, [rep], damping=1.0)
+    assert (revised.basin.tiers[0].bandwidth_bytes_per_s
+            == pytest.approx(observed_bw))
+    # with stale implicit links this stayed pinned at the old 1 Gbps
+    assert revised.planned_bytes_per_s > plan.planned_bytes_per_s
+
+
+def test_replan_keeps_explicit_links():
+    tiers = [Tier("a", TierKind.SOURCE, 10 * GBPS),
+             Tier("b", TierKind.SINK, 10 * GBPS)]
+    from repro.core.basin import Link
+    basin = DrainageBasin(tiers, [Link("a", "b", 2 * GBPS, rtt_s=0.01)])
+    plan = plan_transfer(basin, 4 * MIB, stages=["move"])
+    rep = StageReport(name="move", items=10, bytes=10 * 4 * MIB,
+                      elapsed_s=1.0, stall_up_s=0.9, stall_down_s=0.0,
+                      errors=0)
+    revised = replan(plan, [rep], damping=1.0)
+    # the physical 2 Gbps link (and its rtt) survives the rebuild
+    assert revised.basin.links[0].bandwidth_bytes_per_s == 2 * GBPS
+    assert revised.basin.links[0].rtt_s == 0.01
+
+
+def test_replan_damping_blends():
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    rep = _starved_report(plan)
+    old_bw = plan.basin.tiers[0].bandwidth_bytes_per_s
+    revised = replan(plan, [rep], damping=0.5)
+    got = revised.basin.tiers[0].bandwidth_bytes_per_s
+    assert got == pytest.approx(
+        0.5 * old_bw + 0.5 * rep.throughput_bytes_per_s)
+    with pytest.raises(ValueError):
+        replan(plan, [rep], damping=0.0)
+
+
+# -- plan-driven mover -------------------------------------------------------
+
+def _items(n=24, size=8 * 1024):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, 255, size, dtype=np.uint8) for _ in range(n)]
+
+
+def test_mover_stages_take_per_hop_params():
+    basin = DrainageBasin([
+        Tier("erratic", TierKind.SOURCE, 10 * GBPS, latency_s=2e-3,
+             jitter_s=10e-3),
+        Tier("bb", TierKind.BURST_BUFFER, 200 * GBPS),
+        Tier("sink", TierKind.SINK, 40 * GBPS),
+    ])
+    plan = plan_transfer(basin, 8 * 1024, stages=["pull", "push"])
+    mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan)
+    got = []
+    pipeline_stages = {}
+
+    orig = mover._build_pipeline
+
+    def spy(source, transforms, params, plan=None):
+        pipe = orig(source, transforms, params, plan)
+        for st in pipe.stages:
+            pipeline_stages[st.name] = (st.buffer.capacity, st.workers)
+        return pipe
+
+    mover._build_pipeline = spy
+    rep = mover.bulk_transfer(iter(_items()), got.append,
+                              transforms=[("pull", lambda x: x),
+                                          ("push", lambda x: x)])
+    assert len(got) == 24
+    assert pipeline_stages["pull"] == (plan.hops[0].capacity,
+                                       plan.hops[0].workers)
+    assert pipeline_stages["push"] == (plan.hops[1].capacity,
+                                       plan.hops[1].workers)
+    assert rep.planned_bytes_per_s == pytest.approx(plan.planned_bytes_per_s)
+
+
+def test_mover_plan_overridden_per_call():
+    plan = plan_transfer(_basin(), 8 * 1024, stages=["stage"])
+    mover = UnifiedDataMover(MoverConfig(checksum=False))
+    got = []
+    rep = mover.bulk_transfer(iter(_items(8)), got.append, plan=plan)
+    assert rep.planned_bytes_per_s == pytest.approx(plan.planned_bytes_per_s)
+
+
+# -- telemetry ---------------------------------------------------------------
+
+def test_telemetry_aggregates_across_layers():
+    reg = TelemetryRegistry()
+    plan = plan_transfer(_basin(), 8 * 1024, stages=["stage"])
+    mover_a = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                               telemetry=reg, layer="input")
+    mover_b = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                               telemetry=reg, layer="checkpoint")
+    sink = []
+    mover_a.bulk_transfer(iter(_items(8)), sink.append)
+    mover_a.bulk_transfer(iter(_items(8)), sink.append)
+    mover_b.streaming_transfer(iter(_items(4)), sink.append)
+    summary = reg.summary()
+    assert summary["input"].transfers == 2
+    assert summary["input"].items == 16
+    assert summary["checkpoint"].transfers == 1
+    assert set(reg.layers()) == {"input", "checkpoint"}
+    assert reg.worst_fidelity_gap() is not None
+    assert "input" in reg.format_summary()
+    reg.clear()
+    assert reg.summary() == {}
+
+
+def test_telemetry_memory_is_bounded():
+    """Aggregates fold at record time; raw reports are a bounded ring."""
+    reg = TelemetryRegistry(keep_recent=8)
+    for i in range(100):
+        reg.record("serve", TransferReport(
+            mode="streaming", items=1, bytes=64, elapsed_s=0.01,
+            stage_reports=[]))
+    assert len(reg.reports("serve")) == 8          # ring, not history
+    assert reg.summary()["serve"].transfers == 100  # aggregate sees all
+    # summary() hands out copies — mutating one cannot corrupt the registry
+    reg.summary()["serve"].transfers = 0
+    assert reg.summary()["serve"].transfers == 100
+
+
+def test_telemetry_worst_gap_none_without_plan():
+    reg = TelemetryRegistry()
+    mover = UnifiedDataMover(MoverConfig(checksum=False), telemetry=reg,
+                             layer="adhoc")
+    mover.bulk_transfer(iter(_items(4)), lambda _: None)
+    assert reg.worst_fidelity_gap() is None
+
+
+# -- consumer layers construct sane basins -----------------------------------
+
+def test_prebuilt_basins_plan_cleanly():
+    for basin, stages, ordered in [
+        (tpu_input_basin(), ("decode", "stage"), True),
+        (checkpoint_basin(), ("serialize",), False),
+        (decode_stream_basin(), ("token-stream",), True),
+    ]:
+        plan = plan_transfer(basin, 1 * MIB, stages=stages, ordered=ordered)
+        assert plan.planned_bytes_per_s > 0
+        for hop in plan.hops:
+            assert 2 <= hop.capacity <= MAX_CAPACITY
+            assert 1 <= hop.workers <= MAX_WORKERS
+
+
+def test_checkpoint_plan_uses_concurrency():
+    """Shard serialization (hash + disk write) overlaps via workers."""
+    plan = plan_transfer(checkpoint_basin(), 4 * MIB, stages=["serialize"])
+    assert plan.hops[0].workers >= 2

@@ -9,6 +9,8 @@ from repro.data.pipeline import PipelineConfig, SyntheticTokenSource
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import Trainer
 
+pytestmark = pytest.mark.slow
+
 
 def _trainer(tmp_path=None, **kw):
     cfg = get_smoke_config("smollm-360m")
