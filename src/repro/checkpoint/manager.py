@@ -94,8 +94,16 @@ def _leaf_plan(total_bytes: int, n_leaves: int,
 
 def save_checkpoint(root: str, step: int, tree: Any, *,
                     staged: bool = True,
-                    plan: Optional[TransferPlan] = None) -> CheckpointMeta:
-    """Write one checkpoint atomically; returns its manifest."""
+                    plan: Optional[TransferPlan] = None,
+                    mover: Optional[UnifiedDataMover] = None,
+                    replan_every_items: int = 0) -> CheckpointMeta:
+    """Write one checkpoint atomically; returns its manifest.
+
+    ``replan_every_items > 0`` revises the staging plan online every that
+    many shards (a large model's save is a long transfer — a filesystem
+    that degrades mid-save is answered mid-save).  Passing a persistent
+    ``mover`` lets revisions carry across checkpoints: the mover's plan is
+    the live estimate, updated by each save's observed stalls."""
     os.makedirs(root, exist_ok=True)
     final_dir = _ckpt_dir(root, step)
     tmp_dir = final_dir + ".tmp"
@@ -124,13 +132,20 @@ def save_checkpoint(root: str, step: int, tree: Any, *,
         return arr
 
     if staged:
-        plan = _leaf_plan(sum(a.nbytes for _, _, a in snapshot),
-                          len(snapshot), plan)
-        mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
-                                 telemetry=get_registry(), layer="checkpoint")
+        if mover is None:
+            mover = UnifiedDataMover(MoverConfig(checksum=False),
+                                     telemetry=get_registry(),
+                                     layer="checkpoint")
+        if plan is not None:
+            mover.plan = plan
+        elif mover.plan is None:
+            mover.plan = _leaf_plan(sum(a.nbytes for _, _, a in snapshot),
+                                    len(snapshot), None)
+        # plan=None: draw from (and revise) the mover's own plan, so a
+        # persistent mover replans across shard batches and across saves
         mover.bulk_transfer(iter(snapshot), sink=lambda _: None,
                             transforms=[("serialize", write_shard)],
-                            plan=plan)
+                            replan_every_items=replan_every_items)
     else:
         for item in snapshot:
             write_shard(item)
@@ -159,7 +174,8 @@ def verify_checkpoint(root: str, step: int) -> bool:
 
 def load_checkpoint(root: str, step: int, like: Any, *,
                     shardings: Any = None, verify: bool = False,
-                    staged: bool = True) -> Any:
+                    staged: bool = True,
+                    replan_every_items: int = 0) -> Any:
     """Restore into the structure of ``like``; optionally re-shard onto a
     new mesh (elastic restore) via per-leaf ``shardings``.
 
@@ -187,7 +203,8 @@ def load_checkpoint(root: str, step: int, like: Any, *,
         mover.bulk_transfer(iter(meta["leaves"]),
                             sink=lambda kv: arrays.__setitem__(*kv),
                             transforms=[("serialize", read_leaf)],
-                            plan=plan)
+                            plan=plan,
+                            replan_every_items=replan_every_items)
     else:
         for leaf in meta["leaves"]:
             k, v = read_leaf(leaf)
@@ -212,14 +229,21 @@ def load_checkpoint(root: str, step: int, like: Any, *,
 
 class CheckpointManager:
     """Train-loop-facing manager: periodic async saves, retention,
-    restart discovery, failure recovery."""
+    restart discovery, failure recovery.
+
+    The manager owns one persistent mover for the save path: the staging
+    plan it carries is revised online every ``replan_every_shards`` shards
+    *and* survives from one checkpoint to the next, so the estimate of the
+    storage tier converges across saves instead of resetting each time."""
 
     def __init__(self, root: str, *, every_steps: int = 100, keep: int = 3,
-                 staged: bool = True):
+                 staged: bool = True, replan_every_shards: int = 16):
         self.root = root
         self.every_steps = every_steps
         self.keep = keep
         self.staged = staged
+        self.replan_every_shards = replan_every_shards
+        self._mover: Optional[UnifiedDataMover] = None
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -229,10 +253,16 @@ class CheckpointManager:
         self.wait()
         # snapshot to host NOW (cheap), write in background (staged)
         host_tree = jax.tree.map(np.asarray, tree)
+        if self.staged and self._mover is None:
+            self._mover = UnifiedDataMover(MoverConfig(checksum=False),
+                                           telemetry=get_registry(),
+                                           layer="checkpoint")
 
         def run():
             try:
-                save_checkpoint(self.root, step, host_tree, staged=self.staged)
+                save_checkpoint(self.root, step, host_tree, staged=self.staged,
+                                mover=self._mover,
+                                replan_every_items=self.replan_every_shards)
                 self._gc()
             except BaseException as e:   # surfaced on next wait()
                 self._error = e

@@ -24,7 +24,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Any, Generic, Iterable, Iterator, Optional, TypeVar
+from typing import Any, Callable, Generic, Iterable, Iterator, Optional, TypeVar
 
 T = TypeVar("T")
 
@@ -67,11 +67,13 @@ class BurstBuffer(Generic[T]):
     :meth:`repro.core.basin.DrainageBasin.prefetch_depth`.
     """
 
-    def __init__(self, capacity: int, name: str = "burst-buffer"):
+    def __init__(self, capacity: int, name: str = "burst-buffer",
+                 clock: Optional[Callable[[], float]] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.name = name
         self.capacity = capacity
+        self._clock = clock or time.monotonic
         self._items: collections.deque[T] = collections.deque()
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)
@@ -83,7 +85,7 @@ class BurstBuffer(Generic[T]):
 
     def put(self, item: T, timeout: Optional[float] = None) -> None:
         """Stage one item; blocks (backpressure) while the buffer is full."""
-        t0 = time.monotonic()
+        t0 = self._clock()
         with self._not_full:
             while len(self._items) >= self.capacity and not self._closed:
                 if not self._not_full.wait(timeout):
@@ -92,7 +94,7 @@ class BurstBuffer(Generic[T]):
                 raise BufferClosed(f"{self.name} is closed")
             self._items.append(item)
             self.stats.puts += 1
-            self.stats.producer_stall_s += time.monotonic() - t0
+            self.stats.producer_stall_s += self._clock() - t0
             occ = len(self._items)
             self.stats.occupancy_sum += occ
             self.stats.max_occupancy = max(self.stats.max_occupancy, occ)
@@ -106,7 +108,7 @@ class BurstBuffer(Generic[T]):
         Raises :class:`BufferClosed` once the buffer is closed *and* drained,
         which is the normal end-of-stream signal.
         """
-        t0 = time.monotonic()
+        t0 = self._clock()
         with self._not_empty:
             while not self._items:
                 if self._closed:
@@ -115,7 +117,7 @@ class BurstBuffer(Generic[T]):
                     raise TimeoutError(f"{self.name}: get timed out after {timeout}s")
             item = self._items.popleft()
             self.stats.gets += 1
-            self.stats.consumer_stall_s += time.monotonic() - t0
+            self.stats.consumer_stall_s += self._clock() - t0
             self.stats.occupancy_sum += len(self._items)
             self._not_full.notify()
             return item

@@ -32,8 +32,9 @@ import time
 from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
 
 from .basin import DrainageBasin
-from .planner import TransferPlan
-from .staging import Stage, StagePipeline, StageReport, _default_sizeof
+from .planner import TransferPlan, replan as _replan
+from .staging import Stage, StagePipeline, StageReport, _default_sizeof, \
+    iter_segments, merge_reports
 from .telemetry import TelemetryRegistry
 
 
@@ -48,6 +49,8 @@ class TransferReport:
     stage_reports: list[StageReport]
     checksum: Optional[str] = None  # hex digest over the item stream
     planned_bytes_per_s: Optional[float] = None
+    #: online plan revisions applied mid-transfer (``replan_every_items``)
+    replans: int = 0
 
     @property
     def throughput_bytes_per_s(self) -> float:
@@ -93,12 +96,18 @@ class UnifiedDataMover:
                  basin: DrainageBasin | None = None,
                  plan: TransferPlan | None = None,
                  telemetry: TelemetryRegistry | None = None,
-                 layer: str | None = None):
+                 layer: str | None = None,
+                 clock: Callable[[], float] | None = None):
         self.config = config or MoverConfig()
         self.plan = plan
         self.basin = basin or (plan.basin if plan is not None else None)
         self.telemetry = telemetry
         self.layer = layer or self.config.name
+        # injectable for the deterministic simulated-basin test harness
+        self._clock = clock or time.monotonic
+        #: the plan the most recent transfer ended on (== its starting
+        #: plan unless online replanning revised it mid-transfer)
+        self.last_plan: TransferPlan | None = plan
 
     # -- internal ------------------------------------------------------------
 
@@ -129,9 +138,11 @@ class UnifiedDataMover:
     ) -> StagePipeline:
         default_name = plan.hops[0].name if plan is not None else "stage"
         stages = [
-            Stage(name, capacity=cap, workers=wrk, transform=fn)
+            Stage(name, capacity=cap, workers=wrk, transform=fn,
+                  clock=self._clock)
             for (name, fn), (cap, wrk) in zip(transforms, params)
-        ] or [Stage(default_name, capacity=params[0][0], workers=params[0][1])]
+        ] or [Stage(default_name, capacity=params[0][0], workers=params[0][1],
+                    clock=self._clock)]
         return StagePipeline(source, stages)
 
     def _record(self, report: TransferReport) -> TransferReport:
@@ -149,7 +160,10 @@ class UnifiedDataMover:
         workers: Optional[int],
         checksum: Optional[bool],
         plan: Optional[TransferPlan],
+        replan_every_items: int = 0,
+        replan_damping: float = 0.5,
     ) -> TransferReport:
+        own_plan = plan is None
         plan = plan if plan is not None else self.plan
         do_sum = self.config.checksum if checksum is None else checksum
 
@@ -178,18 +192,45 @@ class UnifiedDataMover:
                 at = min(plan.checksum_index, at)
             all_transforms.insert(at, ("checksum", maybe_hash))
 
-        params = self._stage_params(all_transforms, plan, capacity, workers)
-        pipeline = self._build_pipeline(source, all_transforms, params, plan)
+        # online replanning needs a plan to revise; without one the
+        # transfer runs as a single segment
+        chunk = replan_every_items if plan is not None else 0
+        active = plan
+        merged: list[StageReport] = []      # folded incrementally: bounded
+        last_reports: list[StageReport] = []
+        replans = 0
         items = 0
         nbytes = 0
-        t0 = time.monotonic()
-        pipeline.start()
-        for item in pipeline.output.drain():
-            sink(item)
-            items += 1
-            nbytes += _default_sizeof(item)
-        elapsed = time.monotonic() - t0
-        pipeline.join()
+        t0 = self._clock()
+        for segment in iter_segments(iter(source), chunk):
+            if last_reports:
+                # buffer boundary: the previous segment fully drained, so
+                # the plan can swap without dropping staged items
+                # (hypothesis -> change -> measure, mid-transfer)
+                revised = _replan(active, last_reports,
+                                  damping=replan_damping)
+                if ([(h.capacity, h.workers) for h in revised.hops]
+                        != [(h.capacity, h.workers) for h in active.hops]):
+                    replans += 1
+                active = revised
+            params = self._stage_params(all_transforms, active, capacity,
+                                        workers)
+            pipeline = self._build_pipeline(segment, all_transforms, params,
+                                            active)
+            pipeline.start()
+            for item in pipeline.output.drain():
+                sink(item)
+                items += 1
+                nbytes += _default_sizeof(item)
+            pipeline.join()
+            last_reports = pipeline.reports()
+            merged = merge_reports([merged, last_reports])
+        elapsed = self._clock() - t0
+        self.last_plan = active
+        if own_plan and self.plan is not None:
+            # the mover owns the plan: online revisions persist to the
+            # next transfer (the checkpoint engine replans across saves)
+            self.plan = active
 
         if plan is not None:
             planned = plan.planned_bytes_per_s
@@ -200,9 +241,10 @@ class UnifiedDataMover:
             items=items,
             bytes=nbytes,
             elapsed_s=elapsed,
-            stage_reports=pipeline.reports(),
+            stage_reports=merged,
             checksum=bytes(digest_acc).hex() if digest_acc is not None else None,
             planned_bytes_per_s=planned,
+            replans=replans,
         ))
 
     # -- public API -----------------------------------------------------------
@@ -217,10 +259,20 @@ class UnifiedDataMover:
         workers: Optional[int] = None,
         checksum: Optional[bool] = None,
         plan: Optional[TransferPlan] = None,
+        replan_every_items: int = 0,
+        replan_damping: float = 0.5,
     ) -> TransferReport:
-        """Move a dataset at rest (paper section 2.2, *Bulk Transfer*)."""
+        """Move a dataset at rest (paper section 2.2, *Bulk Transfer*).
+
+        ``replan_every_items > 0`` makes the transfer *self-revising*: the
+        path runs in segments of that many items, and at each segment
+        boundary (a buffer boundary — every staged item delivered) the
+        observed stall ratios and service-time samples feed
+        :func:`~repro.core.planner.replan`, whose revised plan drives the
+        next segment.  A mid-transfer regime shift is answered mid-transfer
+        instead of at the next pipeline construction."""
         return self._run("bulk", source, sink, transforms, capacity, workers,
-                         checksum, plan)
+                         checksum, plan, replan_every_items, replan_damping)
 
     def streaming_transfer(
         self,
@@ -232,14 +284,19 @@ class UnifiedDataMover:
         workers: Optional[int] = None,
         checksum: Optional[bool] = None,
         plan: Optional[TransferPlan] = None,
+        replan_every_items: int = 0,
+        replan_damping: float = 0.5,
     ) -> TransferReport:
         """Move a still-growing stream (paper section 2.2, *Streaming
         Transfer*): the source iterator may block while data is produced;
         staging overlaps production with transit, which is exactly what the
         buffer path provides.  Identical machinery, different source
-        contract — the unified-mover property."""
+        contract — the unified-mover property.  ``replan_every_items``
+        revises the plan online at buffer boundaries, as in
+        :meth:`bulk_transfer`."""
         return self._run("streaming", source, sink, transforms, capacity,
-                         workers, checksum, plan)
+                         workers, checksum, plan, replan_every_items,
+                         replan_damping)
 
     # -- direct (un-staged) path, for comparison -------------------------------
 
@@ -257,7 +314,7 @@ class UnifiedDataMover:
         digest_acc = bytearray(32) if do_sum else None
         items = 0
         nbytes = 0
-        t0 = time.monotonic()
+        t0 = self._clock()
         for item in source:
             if digest_acc is not None:
                 d = hashlib.sha256(_as_bytes(item)).digest()  # serial hash
@@ -266,7 +323,7 @@ class UnifiedDataMover:
             sink(item)
             items += 1
             nbytes += _default_sizeof(item)
-        elapsed = time.monotonic() - t0
+        elapsed = self._clock() - t0
         planned = self.basin.achievable_throughput() if self.basin else None
         return self._record(TransferReport(
             mode="direct",

@@ -58,6 +58,55 @@ After running the transfer, feed the observed stage reports back:
 8
 
 and use ``revised`` for the next transfer — measure, adjust, repeat.
+
+Regime diagnosis (latency-bound vs bandwidth-bound)
+---------------------------------------------------
+
+A stall ratio alone cannot say *why* a hop waited — and the two causes
+demand opposite remedies (the paper's "raw bandwidth = capability"
+fallacy, and the regime separation of arXiv:2308.10312).  The per-item
+service-time reservoirs in :class:`~repro.core.staging.StageReport`
+(``service_up_s`` / ``service_down_s``) disambiguate:
+
+* **latency-bound** — service times are widely dispersed (stochastic
+  per-item latency + jitter dominates).  Remedy: revise the tier's
+  ``latency_s``/``jitter_s`` estimates upward so the next plan raises
+  ``workers`` (concurrency amortizes latency, §3.1) and deepens the
+  buffer.  Bandwidth estimates are left alone.
+* **bandwidth-bound** — service times are tight around a constant (the
+  pipe is saturated; every item takes ~``item_bytes/true_bw``).  Remedy:
+  pull the tier's ``bandwidth_gbps`` estimate toward the observed rate
+  and accept the lower line rate.  More workers would not help.
+
+Worked example: the same 70 % stall ratio on the source hop, opposite
+service signatures::
+
+    # high-variance samples (5 ms +- 4 ms) -> latency-bound
+    >>> lat = replan(plan, [report_jittery])        # doctest: +SKIP
+    >>> lat.hops[0].workers                         # doctest: +SKIP
+    8                                               # was 2: workers UP
+    >>> lat.describe()                              # doctest: +SKIP
+    'TransferPlan(move[cap=24 w=8 src->dst]; planned=1250.0 MB/s,
+     checksum@None; diag[move=latency-bound(src)])'
+
+    # tight samples (21 ms +- 0.1 ms) -> saturated bandwidth
+    >>> bw = replan(plan, [report_saturated])       # doctest: +SKIP
+    >>> bw.basin.tiers[0].bandwidth_bytes_per_s     # doctest: +SKIP
+    5.0e7                                           # was 1.25e9: rate DOWN
+    >>> bw.describe()                               # doctest: +SKIP
+    'TransferPlan(move[cap=4 w=1 src->dst]; planned=50.0 MB/s,
+     checksum@None; diag[move=bandwidth-bound(src)])'
+
+Without service samples (an empty reservoir) replan falls back to the
+bandwidth remedy — the conservative pre-diagnosis behaviour.  A hop that
+never stalled but still underdelivered against its planned rate (busy on
+its own pull + transform service) is diagnosed from its samples too — the
+busy-hop rule, exercised by ``benchmarks/online_replan.py``.
+
+Online replanning: the mover's ``replan_every_items`` runs a transfer in
+segments and feeds each segment's reports through :func:`replan` at the
+buffer boundary, so a mid-transfer regime shift is answered mid-transfer
+(see ``UnifiedDataMover.bulk_transfer``).
 """
 
 from __future__ import annotations
@@ -99,6 +148,9 @@ class TransferPlan:
     checksum_index: Optional[int]       # hop index carrying the digest, or None
     basin: DrainageBasin
     ordered: bool
+    #: hop name -> regime verdict (e.g. ``"latency-bound(src)"``) set by
+    #: :func:`replan` on the revised plan; empty on a fresh derivation
+    diagnosis: dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def stages(self) -> list[str]:
@@ -121,9 +173,14 @@ class TransferPlan:
         hops = ", ".join(
             f"{h.name}[cap={h.capacity} w={h.workers} "
             f"{h.up_tier}->{h.down_tier}]" for h in self.hops)
+        diag = ""
+        if self.diagnosis:
+            diag = "; diag[" + ", ".join(
+                f"{name}={verdict}"
+                for name, verdict in sorted(self.diagnosis.items())) + "]"
         return (f"TransferPlan({hops}; planned="
                 f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
-                f"checksum@{self.checksum_index})")
+                f"checksum@{self.checksum_index}{diag})")
 
 
 def _segment(tiers: Sequence[Tier], n_stages: int, j: int
@@ -201,13 +258,21 @@ def plan_transfer(
             workers = 1
         else:
             workers = max(1, min(max_workers, math.ceil(target / rate_1)))
-        headroom.append(workers * rate_1)
-        hop_rate = min(workers * rate_1, target)
         # Little's law over the stochastic window, double-buffered
         window_s = up.jitter_s + down.jitter_s + _segment_rtt(basin, lo, hi)
         need_items = math.ceil(target * window_s / item_bytes)
         capacity = max(2, workers + 1, 2 * need_items)
         capacity = min(capacity, max_capacity)
+        # the segment's burst capacity is a hard ceiling: never plan more
+        # staged items than the smallest tier on the hop can actually hold
+        cap_bytes = min(t.capacity_bytes for t in tiers[lo:hi + 1])
+        if math.isfinite(cap_bytes):
+            capacity = min(capacity, max(1, int(cap_bytes // item_bytes)))
+            # a buffer shallower than the pool serializes the extra
+            # workers; shrink the pool so the promised rate stays honest
+            workers = min(workers, max(1, capacity - 1))
+        headroom.append(workers * rate_1)
+        hop_rate = min(workers * rate_1, target)
         hops.append(HopPlan(name=name, capacity=capacity, workers=workers,
                             up_tier=up.name, down_tier=down.name,
                             rate_bytes_per_s=hop_rate))
@@ -232,28 +297,77 @@ def plan_transfer(
 #: spent waiting (below it, the measurement is noise)
 STALL_THRESHOLD = 0.1
 
+#: minimum service-time samples before a regime diagnosis is attempted
+#: (fewer and the dispersion statistic is noise)
+MIN_DIAGNOSIS_SAMPLES = 8
+
+#: service-sample dispersion — (p90 - p10) / median — above which a
+#: stalled side reads as latency/jitter-bound; at or below it the side is
+#: a steadily saturated pipe (bandwidth-bound).  A stochastic per-item
+#: latency spreads the samples; a saturated pipe serves every item in
+#: ~item_bytes/true_bw with near-zero spread.
+LATENCY_DISPERSION = 0.75
+
+
+def _percentiles(sorted_samples: Sequence[float]
+                 ) -> tuple[float, float, float]:
+    """(p10, median, p90) of an already-sorted sample list."""
+    n = len(sorted_samples)
+    return (sorted_samples[int(0.1 * (n - 1))],
+            sorted_samples[n // 2],
+            sorted_samples[int(0.9 * (n - 1))])
+
+
+def diagnose_service(samples: Sequence[float]) -> Optional[str]:
+    """Classify a stalled side's regime from its per-item service times.
+
+    Returns ``"latency"`` (high-dispersion samples: stochastic per-item
+    latency dominates — more concurrency is the remedy), ``"bandwidth"``
+    (tight samples: the pipe is steadily saturated — accept the lower
+    rate), or ``None`` when there are too few samples to say.
+    """
+    if len(samples) < MIN_DIAGNOSIS_SAMPLES:
+        return None
+    s = sorted(samples)
+    p10, med, p90 = _percentiles(s)
+    if med <= 0:
+        return None
+    return "latency" if (p90 - p10) / med > LATENCY_DISPERSION else "bandwidth"
+
 
 def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
            damping: float = 0.5) -> TransferPlan:
-    """Revise a plan from observed stall ratios.
+    """Revise a plan from observed stall ratios and service-time samples.
 
     For each hop, the stall accounting of its :class:`StageReport` says
-    which side actually limited it:
+    which side actually limited it (``stall_up_s`` dominant: the upstream
+    tier; ``stall_down_s`` dominant: the downstream tier).  The limiting
+    side's per-item service-time reservoir then says *why* — and the two
+    regimes get opposite remedies:
 
-    * ``stall_up_s`` dominant  -> the upstream tier delivered slower than
-      modeled; pull its bandwidth estimate toward the observed rate
-      (next plan raises this hop's concurrency / deepens the buffer in
-      front of it),
-    * ``stall_down_s`` dominant -> the downstream tier absorbed slower
-      than modeled; pull its estimate down likewise.
+    * **latency-bound** (dispersed samples): revise the tier's
+      ``latency_s``/``jitter_s`` estimates from the sample distribution;
+      the rebuilt plan raises ``workers`` / deepens the buffer while the
+      bandwidth estimate (and so the planned line rate) stands,
+    * **bandwidth-bound** (tight samples) — or no samples at all: pull
+      the tier's bandwidth estimate toward the hop's observed throughput
+      and accept the reduced line rate.
 
     ``damping`` blends old estimate and observation (1.0 = trust the
     measurement outright).  Returns a new :class:`TransferPlan` built on
-    the re-estimated basin; the original is untouched.
+    the re-estimated basin, its per-hop verdicts in
+    :attr:`TransferPlan.diagnosis` (surfaced by ``describe()``); the
+    original plan is untouched.
     """
     if not 0.0 < damping <= 1.0:
         raise ValueError("damping must be in (0, 1]")
     est = {t.name: t.bandwidth_bytes_per_s for t in plan.basin.tiers}
+    lat_est = {t.name: t.latency_s for t in plan.basin.tiers}
+    jit_est = {t.name: t.jitter_s for t in plan.basin.tiers}
+    # carry the most recent verdict per hop forward: a chain of online
+    # replans keeps showing what was learned even after the remedy quiets
+    # the stall (describe() is the operator surface)
+    diagnosis: dict[str, str] = dict(plan.diagnosis)
     by_name = {r.name: r for r in reports}
     for hop in plan.hops:
         rep = by_name.get(hop.name)
@@ -265,20 +379,52 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
         worker_time = rep.elapsed_s * hop.workers
         r_up = rep.stall_up_s / worker_time
         r_down = rep.stall_down_s / worker_time
-        if max(r_up, r_down) < STALL_THRESHOLD:
+        if max(r_up, r_down) >= STALL_THRESHOLD:
+            # the side we mostly waited on is the side that limited us
+            up_limited = r_up >= r_down
+        elif (len(rep.service_up_s) >= MIN_DIAGNOSIS_SAMPLES
+              and observed < hop.rate_bytes_per_s * (1.0 - STALL_THRESHOLD)):
+            # the busy-hop case: no waiting on either side, yet the hop
+            # underdelivered against its own planned rate — its per-item
+            # acquisition service (pull + transform, the modeled upstream
+            # tier) is slower than planned; the samples say which regime
+            up_limited = True
+        else:
             continue
-        # the side we mostly waited on is the side that limited us: its
-        # *effective* delivery rate was the hop's observed throughput
-        tier_name = hop.up_tier if r_up >= r_down else hop.down_tier
-        est[tier_name] = (1.0 - damping) * est[tier_name] + damping * observed
+        tier_name = hop.up_tier if up_limited else hop.down_tier
+        samples = rep.service_up_s if up_limited else rep.service_down_s
+        regime = diagnose_service(samples)
+        if regime == "latency":
+            # the pipe is fine; per-item setup cost is what we waited on.
+            # median service over the modeled transmit time is the latency
+            # estimate, the p10-p90 spread the jitter window.
+            s = sorted(samples)
+            p10, med, p90 = _percentiles(s)
+            transmit = plan.item_bytes / est[tier_name]
+            lat_est[tier_name] = ((1.0 - damping) * lat_est[tier_name]
+                                  + damping * max(0.0, med - transmit))
+            jit_est[tier_name] = ((1.0 - damping) * jit_est[tier_name]
+                                  + damping * max(0.0, p90 - p10))
+            diagnosis[hop.name] = f"latency-bound({tier_name})"
+        else:
+            # saturated (or undiagnosable): the limiting side's *effective*
+            # delivery rate was the hop's observed throughput
+            est[tier_name] = ((1.0 - damping) * est[tier_name]
+                              + damping * observed)
+            if regime == "bandwidth":
+                diagnosis[hop.name] = f"bandwidth-bound({tier_name})"
 
-    new_tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=est[t.name])
+    new_tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=est[t.name],
+                                     latency_s=lat_est[t.name],
+                                     jitter_s=jit_est[t.name])
                  for t in plan.basin.tiers]
     # explicit links are physical (bandwidth + rtt) and survive; implicit
     # ones were derived from the old tier estimates and must re-derive,
     # otherwise an upward revision stays clamped at the stale link rate
     links = plan.basin.links if plan.basin.explicit_links else None
     new_basin = DrainageBasin(new_tiers, links)
-    return plan_transfer(
+    revised = plan_transfer(
         new_basin, plan.item_bytes, stages=plan.stages,
         checksum=plan.checksum_index is not None, ordered=plan.ordered)
+    revised.diagnosis = diagnosis
+    return revised

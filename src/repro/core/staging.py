@@ -26,6 +26,8 @@ Design points lifted from the paper:
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import random
 import threading
 import time
 import traceback
@@ -35,6 +37,33 @@ from .burst_buffer import BufferClosed, BurstBuffer
 
 T = TypeVar("T")
 U = TypeVar("U")
+
+#: per-side service-time samples kept per stage (bounded: a multi-day
+#: transfer must not grow its report without bound)
+SERVICE_RESERVOIR = 64
+
+
+class _Reservoir:
+    """Bounded uniform sample of a float stream (Algorithm R).
+
+    The PRNG is seeded per reservoir so a deterministic run produces a
+    deterministic report — the property the simulated-basin test harness
+    relies on."""
+
+    def __init__(self, k: int = SERVICE_RESERVOIR, seed: int = 0x5EED):
+        self._k = k
+        self._n = 0
+        self._rng = random.Random(seed)
+        self.samples: list[float] = []
+
+    def add(self, x: float) -> None:
+        self._n += 1
+        if len(self.samples) < self._k:
+            self.samples.append(x)
+        else:
+            j = self._rng.randrange(self._n)
+            if j < self._k:
+                self.samples[j] = x
 
 
 @dataclasses.dataclass
@@ -46,10 +75,74 @@ class StageReport:
     stall_up_s: float      # waiting on upstream (source starvation)
     stall_down_s: float    # waiting on our buffer (downstream backpressure)
     errors: int
+    #: bounded reservoir of per-item upstream service times (pull->item);
+    #: the regime signature planner.replan diagnoses latency- vs
+    #: bandwidth-bound stalls from
+    service_up_s: list[float] = dataclasses.field(default_factory=list)
+    #: bounded reservoir of per-item downstream delivery times (put->done)
+    service_down_s: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def throughput_bytes_per_s(self) -> float:
         return self.bytes / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+
+#: end-of-stream sentinel for the segment peek (None is a valid item)
+_EXHAUSTED = object()
+
+
+def iter_segments(source_it: Iterator[Any],
+                  items_per_segment: int) -> Iterator[Iterator[Any]]:
+    """Split an iterator into consecutive segments of up to
+    ``items_per_segment`` items (0 = one segment covering everything).
+
+    This is the online-replanning boundary protocol shared by the mover
+    and the input pipeline: each yielded segment must be fully drained
+    before the next is requested (a buffer boundary), and the one-item
+    peek between segments means an exactly-exhausted source ends the
+    loop without a phantom empty segment.  The peeked item is prepended
+    to the *next* segment directly — no nested re-wrapping of the source,
+    so pull cost stays O(1) however many boundaries a long stream
+    crosses."""
+    if not items_per_segment:
+        yield source_it
+        return
+    pushback = next(source_it, _EXHAUSTED)
+    while pushback is not _EXHAUSTED:
+        yield itertools.chain(
+            [pushback], itertools.islice(source_it, items_per_segment - 1))
+        pushback = next(source_it, _EXHAUSTED)
+
+
+def merge_reports(chunks: Sequence[Sequence[StageReport]]) -> list[StageReport]:
+    """Fold per-chunk stage reports into one report per stage name.
+
+    Online replanning runs one pipeline per chunk, but the transfer is a
+    single observable: counters and stall times sum, service-time
+    reservoirs concatenate keeping the newest ``SERVICE_RESERVOIR``
+    samples (the most recent regime is what the next replan should see)."""
+    merged: dict[str, StageReport] = {}
+    order: list[str] = []
+    for reports in chunks:
+        for r in reports:
+            m = merged.get(r.name)
+            if m is None:
+                merged[r.name] = dataclasses.replace(
+                    r, service_up_s=list(r.service_up_s),
+                    service_down_s=list(r.service_down_s))
+                order.append(r.name)
+                continue
+            m.items += r.items
+            m.bytes += r.bytes
+            m.elapsed_s += r.elapsed_s
+            m.stall_up_s += r.stall_up_s
+            m.stall_down_s += r.stall_down_s
+            m.errors += r.errors
+            m.service_up_s = (m.service_up_s
+                              + list(r.service_up_s))[-SERVICE_RESERVOIR:]
+            m.service_down_s = (m.service_down_s
+                                + list(r.service_down_s))[-SERVICE_RESERVOIR:]
+    return [merged[n] for n in order]
 
 
 class Stage(Generic[T, U]):
@@ -63,9 +156,12 @@ class Stage(Generic[T, U]):
         workers: int = 1,
         transform: Optional[Callable[[T], U]] = None,
         sizeof: Optional[Callable[[Any], int]] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.name = name
-        self.buffer: BurstBuffer[U] = BurstBuffer(capacity, name=f"{name}.buf")
+        self._clock = clock or time.monotonic
+        self.buffer: BurstBuffer[U] = BurstBuffer(capacity, name=f"{name}.buf",
+                                                  clock=self._clock)
         self.workers = workers
         self.transform = transform
         self.sizeof = sizeof or _default_sizeof
@@ -79,31 +175,50 @@ class Stage(Generic[T, U]):
         self._finished = 0
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
+        self._service_up = _Reservoir()
+        self._service_down = _Reservoir(seed=0xD011)
 
     # -- execution ----------------------------------------------------------
 
     def start(self, upstream: Callable[[], Optional[T]]) -> None:
         """Begin staging.  ``upstream()`` returns the next item or ``None``
         at end-of-stream; it must be thread-safe for ``workers > 1``."""
-        self._t_start = time.monotonic()
+        self._t_start = self._clock()
+        # simulation seam: a virtual clock (tests/simbasin.py) anchors the
+        # spawned workers' timelines to this instant, so simulated
+        # concurrency is deterministic; a real clock has no such hook
+        spawn_hook = getattr(self._clock, "on_threads_spawn", None)
+        if spawn_hook is not None:
+            spawn_hook()
 
         def run() -> None:
             try:
                 while True:
-                    t0 = time.monotonic()
+                    t0 = self._clock()
                     item = upstream()
+                    dt_up = self._clock() - t0
                     with self._lock:
-                        self._stall_up_s += time.monotonic() - t0
+                        self._stall_up_s += dt_up
                     if item is None:
                         break
                     out = self.transform(item) if self.transform else item
+                    t1 = self._clock()
+                    with self._lock:
+                        # upstream service sample = pull + transform: the
+                        # full cost of acquiring one staged item.  A slow
+                        # transform (e.g. a storage fetch riding the hop)
+                        # keeps the worker busy rather than stalled, and
+                        # only this sample reveals it to the replanner.
+                        self._service_up.add(t1 - t0)
                     try:
                         self.buffer.put(out)
                     except BufferClosed:
                         break
+                    dt_down = self._clock() - t1
                     with self._lock:
                         self._items += 1
                         self._bytes += self.sizeof(out)
+                        self._service_down.add(dt_down)
             except Exception:
                 with self._lock:
                     self._errors += 1
@@ -115,7 +230,7 @@ class Stage(Generic[T, U]):
                     # exit together and nobody closes)
                     self._finished += 1
                     if self._finished == len(self._threads):
-                        self._t_end = time.monotonic()
+                        self._t_end = self._clock()
                         self.buffer.close()
 
         self._threads = [
@@ -134,17 +249,21 @@ class Stage(Generic[T, U]):
     # -- reporting -----------------------------------------------------------
 
     def report(self) -> StageReport:
-        end = self._t_end or time.monotonic()
-        start = self._t_start or end
-        return StageReport(
-            name=self.name,
-            items=self._items,
-            bytes=self._bytes,
-            elapsed_s=end - start,
-            stall_up_s=self._stall_up_s,
-            stall_down_s=self.buffer.stats.producer_stall_s,
-            errors=self._errors,
-        )
+        # explicit None checks: a virtual clock legitimately starts at 0.0
+        end = self._t_end if self._t_end is not None else self._clock()
+        start = self._t_start if self._t_start is not None else end
+        with self._lock:
+            return StageReport(
+                name=self.name,
+                items=self._items,
+                bytes=self._bytes,
+                elapsed_s=end - start,
+                stall_up_s=self._stall_up_s,
+                stall_down_s=self.buffer.stats.producer_stall_s,
+                errors=self._errors,
+                service_up_s=list(self._service_up.samples),
+                service_down_s=list(self._service_down.samples),
+            )
 
 
 class StagePipeline:

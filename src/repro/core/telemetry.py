@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import os
 import threading
 from typing import TYPE_CHECKING, Optional
 
@@ -102,6 +104,52 @@ class TelemetryRegistry:
                 f"{s.throughput_bytes_per_s / 1e6:.1f} MB/s, "
                 f"worst gap {gap}")
         return "\n".join(lines) or "(no transfers recorded)"
+
+    # -- serialization (the dashboard surface) --------------------------------
+
+    def to_json(self, *, indent: Optional[int] = None) -> str:
+        """Serialize the per-layer aggregates as JSON.
+
+        The payload carries everything a dashboard needs — counters,
+        elapsed, worst fidelity gap, and the derived throughput per layer.
+        The recent raw-report ring is process-local detail and is not
+        serialized; :meth:`from_json` restores the aggregates exactly."""
+        with self._lock:
+            layers = {
+                name: {**dataclasses.asdict(s),
+                       "throughput_bytes_per_s": s.throughput_bytes_per_s}
+                for name, s in self._aggregates.items()
+            }
+        gaps = [d["worst_fidelity_gap"] for d in layers.values()
+                if d["worst_fidelity_gap"] is not None]
+        return json.dumps(
+            {"version": 1, "layers": layers,
+             "worst_fidelity_gap": max(gaps) if gaps else None},
+            indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TelemetryRegistry":
+        """Rebuild a registry (aggregates only) from :meth:`to_json` output."""
+        data = json.loads(text)
+        reg = cls()
+        for name, d in data.get("layers", {}).items():
+            reg._aggregates[name] = LayerSummary(
+                layer=d.get("layer", name),
+                transfers=int(d["transfers"]),
+                items=int(d["items"]),
+                bytes=int(d["bytes"]),
+                elapsed_s=float(d["elapsed_s"]),
+                worst_fidelity_gap=d.get("worst_fidelity_gap"))
+        return reg
+
+    def dump_json(self, path: str, *, indent: Optional[int] = 2) -> None:
+        """Atomically write :meth:`to_json` to ``path`` (tmp + rename), so
+        a dashboard polling the file never reads a half-written dump."""
+        payload = self.to_json(indent=indent)
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            f.write(payload)
+        os.replace(tmp, path)
 
     def clear(self) -> None:
         with self._lock:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core.basin import DrainageBasin, tpu_input_basin
 from repro.core.mover import TransferReport
 from repro.core.planner import TransferPlan, plan_transfer, replan
-from repro.core.staging import Stage, StagePipeline
+from repro.core.staging import (Stage, StagePipeline, StageReport,
+                                iter_segments, merge_reports)
 from repro.core.telemetry import TelemetryRegistry, get_registry
 from repro.models.config import ModelConfig
 
@@ -46,6 +47,10 @@ class PipelineConfig:
     host_index: int = 0
     host_count: int = 1
     seed: int = 0
+    #: > 0: revise the transfer plan online, every N delivered batches, at
+    #: a buffer boundary inside the running stream (0 = only when the
+    #: caller invokes replan() between iterations)
+    replan_every_items: int = 0
 
 
 class SyntheticTokenSource:
@@ -138,6 +143,14 @@ class InputPipeline:
     determinism), so the plan is ``ordered`` unless the caller explicitly
     sets ``pc.staging_workers > 1``.  Explicit ``pc.staging_capacity`` /
     ``pc.staging_workers`` remain per-workload overrides.
+
+    Replanning is **online**: with ``replan_every_items > 0`` (argument or
+    ``pc.replan_every_items``) the stream runs in segments of that many
+    batches and the plan is revised from observed stalls at each segment
+    boundary — a buffer boundary, so no staged batch is dropped and batch
+    order is preserved.  A mid-epoch regime shift in the dataset store is
+    answered mid-epoch, not at the next epoch.  ``replan()`` remains
+    callable between iterations for epoch-cadence revision.
     """
 
     def __init__(self, source: Any, *, basin: Optional[DrainageBasin] = None,
@@ -145,7 +158,8 @@ class InputPipeline:
                  batch_axes: tuple[str, ...] = ("data",),
                  to_device: bool = True,
                  plan: Optional[TransferPlan] = None,
-                 telemetry: Optional[TelemetryRegistry] = None):
+                 telemetry: Optional[TelemetryRegistry] = None,
+                 replan_every_items: Optional[int] = None):
         self.source = source
         self.basin = basin or (plan.basin if plan is not None
                                else tpu_input_basin())
@@ -154,6 +168,9 @@ class InputPipeline:
         self.batch_axes = batch_axes
         self.to_device = to_device
         self.telemetry = telemetry if telemetry is not None else get_registry()
+        self.replan_every_items = int(
+            replan_every_items if replan_every_items is not None
+            else getattr(self.pc, "replan_every_items", 0) or 0)
         self.item_bytes = self._estimate_item_bytes()
         ordered = not (self.pc.staging_workers and self.pc.staging_workers > 1)
         self.plan = plan or plan_transfer(
@@ -163,9 +180,15 @@ class InputPipeline:
         self._t_start: Optional[float] = None
         self._recorded = False
         # the plan whose staging parameters the running pipeline was
-        # built with; replan() revises self.plan for the NEXT iteration,
-        # so live metrics must keep measuring against this one
+        # built with; replan() revises self.plan for the NEXT segment /
+        # iteration, so live metrics must keep measuring against this one
         self._active_plan = self.plan
+        # reports of segments whose pipelines already drained (online
+        # replanning runs one pipeline per segment); the live pipeline's
+        # reports are merged in on demand
+        self._prior_reports: list[StageReport] = []
+        self._prior_consumer_stall_s = 0.0
+        self._delivered = 0
 
     def _build_stages(self) -> list[Stage]:
         decode_hop = self.plan.hop_for(0, "decode")
@@ -204,21 +227,42 @@ class InputPipeline:
 
     def __iter__(self) -> Iterator[dict]:
         # fresh stages per iteration so the current plan takes effect
-        # (and re-iteration after replan() works)
+        # (and re-iteration after replan() works); _pipeline resets NOW so
+        # telemetry queried before the first batch never sees a previous
+        # run's stage reports
         self._active_plan = self.plan
-        self._pipeline = StagePipeline(iter(self.source), self._build_stages())
+        self._pipeline = None
+        self._prior_reports = []
+        self._prior_consumer_stall_s = 0.0
+        self._delivered = 0
         self._t_start = time.monotonic()
         self._recorded = False
 
         def run() -> Iterator[dict]:
-            for item in self._pipeline:
-                yield item
+            for segment in iter_segments(iter(self.source),
+                                         self.replan_every_items):
+                if self._pipeline is not None:
+                    # segment boundary == buffer boundary: every staged
+                    # batch was delivered, so the plan can swap without
+                    # loss; fold the drained segment's stalls into the
+                    # next plan before building it
+                    self.replan(_fresh_only=True)
+                    self._prior_reports = merge_reports(
+                        [self._prior_reports, self._pipeline.reports()])
+                    self._prior_consumer_stall_s += \
+                        self._pipeline.output.stats.consumer_stall_s
+                self._pipeline = StagePipeline(segment, self._build_stages())
+                for item in self._pipeline:
+                    self._delivered += 1
+                    yield item
             self.record_telemetry()
 
         return run()
 
-    def reports(self):
-        return self._pipeline.reports() if self._pipeline else []
+    def reports(self) -> list[StageReport]:
+        """Per-stage reports merged over every segment run so far."""
+        live = self._pipeline.reports() if self._pipeline else []
+        return merge_reports([self._prior_reports, live])
 
     def record_telemetry(self) -> Optional[TransferReport]:
         """Record the stream's progress so far (for consumers that stop
@@ -227,21 +271,33 @@ class InputPipeline:
         if not self._pipeline or not self._t_start or self._recorded:
             return None
         self._recorded = True
-        stats = self._pipeline.output.stats
         report = TransferReport(
-            mode=self.pc.mode, items=stats.gets,
-            bytes=int(stats.gets * self.item_bytes),
+            mode=self.pc.mode, items=self._delivered,
+            bytes=int(self._delivered * self.item_bytes),
             elapsed_s=time.monotonic() - self._t_start,
-            stage_reports=self._pipeline.reports(),
+            stage_reports=self.reports(),
             planned_bytes_per_s=self._active_plan.planned_bytes_per_s)
         self.telemetry.record("input", report)
         return report
 
-    def replan(self, *, damping: float = 0.5) -> TransferPlan:
+    def replan(self, *, damping: float = 0.5,
+               _fresh_only: bool = False) -> TransferPlan:
         """Fold observed stall ratios back into the plan (the paper's
-        hypothesis -> change -> measure cycle).  The revised plan takes
-        effect on the next iteration of this pipeline."""
-        reps = self.reports()
+        hypothesis -> change -> measure cycle).  Called automatically at
+        segment boundaries when ``replan_every_items`` is set; callable
+        manually between iterations.  The revised plan takes effect on
+        the next segment (online) or iteration (manual).
+
+        With online replanning active, each boundary revision consumes
+        its segment's reports, and a manual call between iterations sees
+        only the final segment (the one no boundary folded) — already-
+        consumed segments are not re-applied.  A manual call *mid*-
+        segment still overlaps the upcoming boundary fold; keep manual
+        calls between iterations."""
+        if _fresh_only or self.replan_every_items:
+            reps = self._pipeline.reports() if self._pipeline else []
+        else:
+            reps = self.reports()
         if reps:
             self.plan = replan(self.plan, reps, damping=damping)
         return self.plan
@@ -254,12 +310,12 @@ class InputPipeline:
         elapsed = time.monotonic() - self._t_start
         if elapsed <= 0:
             return None
-        achieved = self._pipeline.output.stats.gets * self.item_bytes / elapsed
+        achieved = self._delivered * self.item_bytes / elapsed
         return 1.0 - achieved / self._active_plan.planned_bytes_per_s
 
     def consumer_stall_s(self) -> float:
         """Total time the training step waited on input — the pipeline's
         fidelity-gap contribution (0 when the basin is balanced)."""
-        if not self._pipeline:
-            return 0.0
-        return self._pipeline.output.stats.consumer_stall_s
+        live = (self._pipeline.output.stats.consumer_stall_s
+                if self._pipeline else 0.0)
+        return self._prior_consumer_stall_s + live

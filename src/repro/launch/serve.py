@@ -29,11 +29,46 @@ from repro.core.basin import decode_stream_basin
 from repro.core.codesign import CodesignPlan
 from repro.core.mover import MoverConfig, UnifiedDataMover
 from repro.core.planner import plan_transfer
-from repro.core.telemetry import get_registry
+from repro.core.telemetry import TelemetryRegistry, get_registry
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models.api import ShapeSpec, build
 from repro.models.blocks import ShardCtx
+
+#: floor for the fed-back client drain-rate estimate — one stalled client
+#: must not collapse the next request's plan to a zero-rate basin
+MIN_CLIENT_GBPS = 1e-3
+
+#: how many recent serve transfers the drain-rate estimate averages over
+DRAIN_RATE_WINDOW = 4
+
+#: a stream counts as client-limited evidence only when its staging hop
+#: spent at least this fraction of the transfer backpressured by the sink
+CLIENT_LIMITED_STALL = 0.1
+
+
+def observed_client_gbps(registry: TelemetryRegistry) -> Optional[float]:
+    """Client drain rate (Gbps) observed by recent decode streams.
+
+    Only streams the client actually *limited* count as evidence: a
+    stream's end-to-end rate is ``min(decode rate, client drain rate)``,
+    so a transfer paced by decode compute (no downstream backpressure in
+    its stage reports) says nothing about the client — feeding it back
+    would ratchet the client-tier estimate down to the producer's rate
+    with no way to recover.  Returns ``None`` when no client-limited
+    stream has been recorded (the modeled default applies)."""
+    rates = []
+    for r in registry.reports("serve"):
+        if r.elapsed_s <= 0 or r.bytes <= 0:
+            continue
+        if not any(s.stall_down_s >= CLIENT_LIMITED_STALL * r.elapsed_s
+                   for s in r.stage_reports):
+            continue                     # producer-paced: no client evidence
+        rates.append(r.throughput_bytes_per_s)
+    if not rates:
+        return None
+    window = rates[-DRAIN_RATE_WINDOW:]
+    return max(MIN_CLIENT_GBPS, (sum(window) / len(window)) * 8.0 / 1e9)
 
 
 class Server:
@@ -41,12 +76,16 @@ class Server:
     a burst buffer."""
 
     def __init__(self, cfg, mesh=None, *, max_len: int = 512,
-                 plan: Optional[CodesignPlan] = None):
+                 plan: Optional[CodesignPlan] = None,
+                 telemetry: Optional[TelemetryRegistry] = None,
+                 replan_every_tokens: int = 0):
         self.cfg = cfg
         self.api = build(cfg)
         self.mesh = mesh
         self.max_len = max_len
         self.plan = plan or CodesignPlan(sharding="tp", seq_parallel=False)
+        self.telemetry = telemetry if telemetry is not None else get_registry()
+        self.replan_every_tokens = replan_every_tokens
         self.ctx = (steps_lib.make_ctx(self.api, mesh, self.plan)
                     if mesh is not None else ShardCtx())
         self.params = None
@@ -58,22 +97,34 @@ class Server:
     def load(self, seed: int = 0) -> None:
         self.params = self.api.init(jax.random.PRNGKey(seed))
 
+    def stream_basin(self):
+        """The decode-stream basin, its client tier re-estimated from the
+        drain rate previous requests actually observed (telemetry feedback
+        between requests — ROADMAP item 2)."""
+        drain = observed_client_gbps(self.telemetry)
+        if drain is None:
+            return decode_stream_basin()
+        return decode_stream_basin(client_gbps=drain)
+
     def generate(self, batch: dict, n_tokens: int,
                  sink=None) -> np.ndarray:
         """Greedy-decode ``n_tokens``; each step's tokens stream to ``sink``
         through the unified mover (streaming transfer).  Staging depth
         comes from the decode-stream basin plan — sized so an erratic
         client never stalls the accelerator; the plan is ``ordered``
-        because the token stream must arrive in decode order."""
+        because the token stream must arrive in decode order.  The basin's
+        client tier is re-estimated from observed drain rates between
+        requests, and with ``replan_every_tokens`` set the plan also
+        revises online inside one long generation."""
         logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
         out = [np.asarray(tok)]
         n_batch = int(tok.shape[0])
-        plan = plan_transfer(decode_stream_basin(),
+        plan = plan_transfer(self.stream_basin(),
                              item_bytes=max(1, n_batch * 4),
                              stages=("token-stream",), ordered=True)
         mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
-                                 telemetry=get_registry(), layer="serve")
+                                 telemetry=self.telemetry, layer="serve")
 
         def produce() -> Iterator[np.ndarray]:
             nonlocal tok, cache
@@ -85,7 +136,8 @@ class Server:
 
         collected: list[np.ndarray] = []
         report = mover.streaming_transfer(
-            produce(), sink or collected.append, plan=plan)
+            produce(), sink or collected.append, plan=plan,
+            replan_every_items=self.replan_every_tokens)
         out.extend(collected)
         self.last_report = report
         return np.concatenate(out, axis=1)

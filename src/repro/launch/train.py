@@ -89,18 +89,25 @@ class Trainer:
     # -- loop ----------------------------------------------------------------
 
     def run(self, source, n_steps: int, *, inject_failure_at: int = -1,
-            replan_every: int = 0) -> list[dict]:
+            replan_every: int = 0, telemetry_json: Optional[str] = None,
+            telemetry_every: int = 10) -> list[dict]:
         """Train ``n_steps``.  ``replan_every > 0`` folds observed input
-        stall ratios back into the transfer plan at that step cadence.
-        The running pipeline keeps its staging parameters (swapping
-        buffers mid-stream would drop staged batches); the revised plan
-        applies when the pipeline is next constructed — a later ``run``
-        call, a new epoch, or a restart.  Logged fidelity gaps always
-        measure against the plan the running pipeline was built with."""
+        stall ratios and service-time samples back into the transfer plan
+        *online*, every that many batches, at a buffer boundary inside the
+        running stream (one batch = one item, so the step cadence and the
+        item cadence coincide) — no staged batch is dropped and the
+        revision takes effect mid-run, not at the next epoch.  Logged
+        fidelity gaps always measure against the plan the stream started
+        with.  ``telemetry_json`` dumps the cross-layer
+        :class:`~repro.core.telemetry.TelemetryRegistry` to that path every
+        ``telemetry_every`` steps (atomic rename — safe to poll)."""
         pc = getattr(source, "pc", None)
         pipeline = InputPipeline(
             source, basin=tpu_input_basin(), pc=pc, mesh=self.mesh,
-            batch_axes=batch_axes_of(self.mesh))
+            batch_axes=batch_axes_of(self.mesh),
+            # None defers to pc.replan_every_items; an unset flag must not
+            # silently disable a cadence the PipelineConfig asked for
+            replan_every_items=replan_every if replan_every else None)
         it = iter(pipeline)
         done = 0
         while done < n_steps:
@@ -131,12 +138,14 @@ class Trainer:
                    "input_stall_s": pipeline.consumer_stall_s(),
                    "input_fidelity_gap": pipeline.fidelity_gap()}
             self.metrics_log.append(rec)
-            if replan_every and done % replan_every == 0:
-                pipeline.replan()
+            if telemetry_json and done % max(1, telemetry_every) == 0:
+                get_registry().dump_json(telemetry_json)
             if self.ckpt is not None:
                 self.ckpt.maybe_save(self.step_idx, {
                     "params": self.params, "opt": self.opt_state})
         pipeline.record_telemetry()
+        if telemetry_json:
+            get_registry().dump_json(telemetry_json)
         if self.ckpt is not None:
             self.ckpt.wait()
             self.ckpt.maybe_save(self.step_idx, {
@@ -158,9 +167,16 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--inject-failure-at", type=int, default=-1)
     ap.add_argument("--replan-every", type=int, default=0,
-                    help="revise the transfer plan from observed stalls "
-                         "every N steps; the revised plan applies when the "
-                         "pipeline is next constructed (0 = off)")
+                    help="revise the transfer plan online from observed "
+                         "stalls and service-time samples every N batches, "
+                         "at a buffer boundary inside the running stream "
+                         "(0 = off)")
+    ap.add_argument("--telemetry-json", default=None, metavar="PATH",
+                    help="periodically dump the cross-layer telemetry "
+                         "registry to PATH as JSON (atomic rename; for "
+                         "dashboards)")
+    ap.add_argument("--telemetry-every", type=int, default=10,
+                    help="step cadence of --telemetry-json dumps")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -178,7 +194,9 @@ def main() -> None:
     source = SyntheticTokenSource(cfg, pc, n_batches=args.steps + 8)
     log = trainer.run(source, args.steps,
                       inject_failure_at=args.inject_failure_at,
-                      replan_every=args.replan_every)
+                      replan_every=args.replan_every,
+                      telemetry_json=args.telemetry_json,
+                      telemetry_every=args.telemetry_every)
     for rec in log[-5:]:
         gap = rec.get("input_fidelity_gap")
         gap_s = f" gap {gap:+.3f}" if gap is not None else ""

@@ -26,3 +26,12 @@ def pytest_configure(config):
 def rng():
     import numpy as np
     return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def simbasin():
+    """A fresh deterministic basin-simulator context (tests/simbasin.py):
+    virtual clock + simulated-tier/source/sink/mover factories, so
+    planner/mover timing claims run without wall-clock sleeps."""
+    from simbasin import SimHarness
+    return SimHarness()

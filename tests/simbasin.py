@@ -1,0 +1,254 @@
+"""Deterministic basin simulator — planner/mover tests without wall clocks.
+
+The staging/mover tests used to encode timing claims as real ``time.sleep``
+calls measured with ``time.monotonic`` — correct physics, flaky arithmetic:
+a loaded CI host stretches every sleep and the assertions wobble.  This
+harness replaces the wall clock with a **virtual clock** and real tiers
+with **simulated tiers**:
+
+* :class:`VirtualClock` — a thread-safe, monotonic-max clock.  The
+  production staging path takes an injectable ``clock`` callable
+  (:class:`~repro.core.staging.Stage`,
+  :class:`~repro.core.burst_buffer.BurstBuffer`,
+  :class:`~repro.core.mover.UnifiedDataMover`), so the *real* pipeline
+  machinery runs unmodified while all timing flows through the simulation.
+* :class:`SimulatedTier` — a service-time model of one basin tier with a
+  seeded PRNG and **scriptable regime shifts** (``shift_at``): transmission
+  serializes across concurrent callers (bandwidth is a shared resource),
+  per-item latency and jitter overlap across callers (each worker thread
+  carries its own virtual timeline) — exactly the paper's §3.1 concurrency
+  story, made deterministic.
+* :class:`SimulatedSource` / :class:`SimulatedSink` — iterator/callable
+  adapters that serve each item through a tier before handing it on.
+
+Threads still run (the real ``StagePipeline`` spawns them) but never
+sleep: blocking happens on buffer conditions exactly as in production,
+and every second of "time" is a deterministic function of the scripted
+tier parameters, not of host load.
+
+Conventions: items are ``bytes`` payloads (``_default_sizeof`` counts
+them), jitter draws are seeded per-tier in service order, and a regime
+shift scheduled ``at_item=k`` applies from the k-th served item onward.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Iterator, Optional
+
+from repro.core.mover import MoverConfig, UnifiedDataMover
+from repro.core.planner import TransferPlan
+
+import random
+
+
+class VirtualClock:
+    """Thread-safe simulated clock: time only moves forward, pushed by
+    whichever simulated tier finishes latest (monotonic max).
+
+    Besides the global frontier the clock keeps a **per-thread timeline**:
+    each thread that serves through simulated tiers accumulates its own
+    virtual position (``thread_now``/``set_thread``), which is what makes
+    latency *overlap* across concurrent workers while a shared pipe still
+    serializes.  A thread's timeline starts at the spawn epoch — anchored
+    by :meth:`on_threads_spawn`, which the production ``Stage.start``
+    invokes just before spawning its workers — so simulated concurrency is
+    a pure function of the script, never of the host's thread scheduling.
+
+    Timelines are rate-accurate but phase-approximate: a consumer's k-th
+    service may be modeled up to ~one item's service time before the k-th
+    item's production completes.  End-to-end elapsed (the max over
+    timelines) is what the harness asserts on.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._spawn_epoch = float(start)
+        self._lock = threading.Lock()
+        self._tl = threading.local()
+
+    def now(self) -> float:
+        with self._lock:
+            return self._t
+
+    __call__ = now          # Stage/BurstBuffer/mover take a plain callable
+
+    def advance_to(self, t: float) -> float:
+        with self._lock:
+            if t > self._t:
+                self._t = t
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        with self._lock:
+            self._t += max(0.0, dt)
+            return self._t
+
+    # -- per-thread timelines ------------------------------------------------
+
+    def on_threads_spawn(self) -> None:
+        """Anchor the timelines of about-to-spawn threads to the current
+        global time (called by ``Stage.start``; call it manually before
+        spawning raw threads in a test)."""
+        with self._lock:
+            self._spawn_epoch = self._t
+
+    def thread_now(self) -> float:
+        """This thread's virtual position (its spawn epoch until it has
+        served something)."""
+        t = getattr(self._tl, "t", None)
+        if t is not None:
+            return t
+        with self._lock:
+            return self._spawn_epoch
+
+    def set_thread(self, t: float) -> None:
+        self._tl.t = t
+
+
+class SimulatedTier:
+    """Service-time model of one tier, with scriptable regime shifts.
+
+    Each :meth:`serve` call represents one item moving through the tier:
+
+    * **transmission** (``item_bytes / bandwidth``) serializes across
+      concurrent callers — bandwidth is shared,
+    * **latency + jitter** are per-call and overlap across callers — the
+      reason concurrency amortizes latency but cannot beat a saturated
+      pipe (the regime separation ``replan`` must diagnose),
+    * jitter is drawn from a seeded PRNG in service order, so a run is a
+      pure function of the script, never of the host.
+
+    ``shift_at(k, ...)`` changes the regime from the k-th served item on —
+    the scripted "mid-transfer bottleneck shift" of the online-replanning
+    acceptance test.
+    """
+
+    def __init__(self, clock: VirtualClock, *, bandwidth_bytes_per_s: float,
+                 latency_s: float = 0.0, jitter_s: float = 0.0,
+                 seed: int = 0, name: str = "sim-tier",
+                 wall_pacing_s: float = 1e-4):
+        self._clock = clock
+        self.name = name
+        self.bandwidth_bytes_per_s = float(bandwidth_bytes_per_s)
+        self.latency_s = float(latency_s)
+        self.jitter_s = float(jitter_s)
+        # a micro-sleep per serve (wall time, NOT virtual time): it makes
+        # the GIL hand the source lock around fairly, so concurrent
+        # workers share items the way really-blocking workers would.  No
+        # timing assertion depends on it — virtual results are a function
+        # of the script; the sleep only shapes thread interleaving.
+        self.wall_pacing_s = wall_pacing_s
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self._cum_tx = 0.0              # total transmit work accepted so far
+        self._first_arrival: Optional[float] = None
+        self._served = 0
+        self._shifts: dict[int, dict[str, float]] = {}
+
+    # -- scripting -----------------------------------------------------------
+
+    def shift_at(self, item_index: int, **params: float) -> "SimulatedTier":
+        """From the ``item_index``-th served item on, use ``params``
+        (any of ``bandwidth_bytes_per_s``, ``latency_s``, ``jitter_s``)."""
+        allowed = {"bandwidth_bytes_per_s", "latency_s", "jitter_s"}
+        unknown = set(params) - allowed
+        if unknown:
+            raise TypeError(f"unknown tier params: {sorted(unknown)}")
+        self._shifts[int(item_index)] = dict(params)
+        return self
+
+    @property
+    def served(self) -> int:
+        with self._lock:
+            return self._served
+
+    # -- the service model ---------------------------------------------------
+
+    def serve(self, item_bytes: int) -> float:
+        """Advance the virtual clock by one item's service through this
+        tier; returns the completion time."""
+        # the caller's own timeline: a worker that just finished its
+        # previous item arrives then, NOT at the global clock (another
+        # worker's completion must not delay this one's start — that is
+        # precisely how concurrency overlaps latency)
+        arrival = self._clock.thread_now()
+        with self._lock:
+            shift = self._shifts.pop(self._served, None)
+            if shift:
+                for key, val in shift.items():
+                    setattr(self, key, float(val))
+            self._served += 1
+            jitter = self.jitter_s * self._rng.random() if self.jitter_s else 0.0
+            latency = self.latency_s
+            tx = item_bytes / self.bandwidth_bytes_per_s
+            if self._first_arrival is None or arrival < self._first_arrival:
+                self._first_arrival = arrival
+            self._cum_tx += tx
+            # bandwidth serializes, order-insensitively: the pipe is
+            # work-conserving from its first arrival, so transmission of
+            # the k-th accepted item cannot complete before the first
+            # arrival plus all transmit work accepted so far.  (Commutes
+            # across wall-clock thread interleavings — determinism beats
+            # modeling pipe idle gaps, which none of the scripted
+            # scenarios exercise.)
+            tx_done = max(arrival + tx, self._first_arrival + self._cum_tx)
+        completion = tx_done + latency + jitter
+        self._clock.set_thread(completion)
+        self._clock.advance_to(completion)
+        if self.wall_pacing_s:
+            time.sleep(self.wall_pacing_s)
+        return completion
+
+
+class SimulatedSource:
+    """Iterable of ``n_items`` byte payloads, each served through ``tier``
+    before it is yielded — the erratic headwaters of the simulated basin."""
+
+    def __init__(self, tier: SimulatedTier, n_items: int, item_bytes: int):
+        self.tier = tier
+        self.n_items = n_items
+        self.item_bytes = item_bytes
+
+    def __iter__(self) -> Iterator[bytes]:
+        payload = bytes(self.item_bytes)
+        for _ in range(self.n_items):
+            self.tier.serve(self.item_bytes)
+            yield payload
+
+
+class SimulatedSink:
+    """Callable sink serving every delivered item through ``tier`` — the
+    simulated client/storage at the basin mouth."""
+
+    def __init__(self, tier: SimulatedTier):
+        self.tier = tier
+        self.items = 0
+
+    def __call__(self, item: bytes) -> None:
+        self.tier.serve(len(item))
+        self.items += 1
+
+
+class SimHarness:
+    """One simulation context: a fresh clock plus factories wired to it."""
+
+    def __init__(self):
+        self.clock = VirtualClock()
+
+    def tier(self, **kwargs) -> SimulatedTier:
+        return SimulatedTier(self.clock, **kwargs)
+
+    def source(self, tier: SimulatedTier, n_items: int,
+               item_bytes: int) -> SimulatedSource:
+        return SimulatedSource(tier, n_items, item_bytes)
+
+    def sink(self, tier: SimulatedTier) -> SimulatedSink:
+        return SimulatedSink(tier)
+
+    def mover(self, plan: Optional[TransferPlan] = None,
+              **config_kwargs) -> UnifiedDataMover:
+        config_kwargs.setdefault("checksum", False)
+        return UnifiedDataMover(MoverConfig(**config_kwargs), plan=plan,
+                                clock=self.clock)

@@ -49,6 +49,37 @@ def test_latest_step_ignores_incomplete(tmp_path):
     assert latest_step(str(tmp_path)) == 5
 
 
+def test_save_with_online_replan_roundtrips(tmp_path):
+    """A save that replans every few shards still writes a complete,
+    verifiable checkpoint that restores exactly."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 2, t, replan_every_items=2)
+    assert verify_checkpoint(str(tmp_path), 2)
+    like = jax.tree.map(jnp.zeros_like, t)
+    out = load_checkpoint(str(tmp_path), 2, like, replan_every_items=2)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manager_plan_persists_across_saves(tmp_path):
+    """The manager's persistent mover carries its (possibly revised)
+    staging plan from one checkpoint to the next — replanning across
+    shard batches, not resetting each save."""
+    mgr = CheckpointManager(str(tmp_path), every_steps=1,
+                            replan_every_shards=2)
+    mgr.maybe_save(1, _tree(), force=True)
+    mgr.wait()
+    assert mgr._mover is not None
+    plan_after_first = mgr._mover.plan
+    assert plan_after_first is not None
+    mgr.maybe_save(2, _tree(1), force=True)
+    mgr.wait()
+    # same mover, plan still live (same or revised — never discarded)
+    assert mgr._mover.plan is not None
+    assert latest_step(str(tmp_path)) == 2
+    assert verify_checkpoint(str(tmp_path), 2)
+
+
 def test_verify_detects_corruption(tmp_path):
     save_checkpoint(str(tmp_path), 3, _tree())
     d = tmp_path / "step_0000000003"

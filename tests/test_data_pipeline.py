@@ -72,6 +72,53 @@ def test_stall_accounting_with_erratic_source():
     assert pipe.consumer_stall_s() < total_jitter
 
 
+def test_online_replan_preserves_order_and_count():
+    """Online replanning swaps plans at buffer boundaries inside one
+    stream: every batch arrives, in order (training determinism)."""
+    pc = PipelineConfig(global_batch=2, seq_len=16, seed=5,
+                        replan_every_items=4)
+    src = SyntheticTokenSource(CFG, pc, n_batches=13)
+    ref = list(SyntheticTokenSource(CFG, pc, n_batches=13))
+    pipe = InputPipeline(src, pc=pc, to_device=False)
+    got = list(pipe)
+    assert len(got) == 13
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_online_replan_revises_mid_stream():
+    """The plan object visibly changes inside one iteration (no
+    between-epoch restriction), and telemetry counts the whole stream."""
+    from repro.core.telemetry import TelemetryRegistry
+
+    reg = TelemetryRegistry()
+    pc = PipelineConfig(global_batch=2, seq_len=16, seed=0)
+    src = SyntheticTokenSource(CFG, pc, n_batches=12, jitter_s=0.01,
+                               jitter_every=2)
+    pipe = InputPipeline(src, pc=pc, to_device=False, telemetry=reg,
+                         replan_every_items=4)
+    initial_plan = pipe.plan
+    n = sum(1 for _ in pipe)
+    assert n == 12
+    assert pipe.plan is not initial_plan         # revised mid-stream
+    # merged reports cover every segment of the stream
+    assert pipe.reports()[0].items == 12
+    rec = reg.reports("input")[-1]
+    assert rec.items == 12
+
+
+def test_manual_replan_between_epochs_still_works():
+    pc = PipelineConfig(global_batch=2, seq_len=16, seed=0)
+    src = SyntheticTokenSource(CFG, pc, n_batches=6, jitter_s=0.01,
+                               jitter_every=2)
+    pipe = InputPipeline(src, pc=pc, to_device=False)
+    assert sum(1 for _ in pipe) == 6
+    revised = pipe.replan()
+    assert revised is pipe.plan
+    # next epoch runs on the revised plan
+    assert sum(1 for _ in pipe) == 6
+
+
 def test_vlm_batch_has_stub_embeddings():
     cfg = get_smoke_config("llava-next-mistral-7b")
     pc = PipelineConfig(global_batch=2, seq_len=32, seed=0)

@@ -302,3 +302,116 @@ def test_checkpoint_plan_uses_concurrency():
     """Shard serialization (hash + disk write) overlaps via workers."""
     plan = plan_transfer(checkpoint_basin(), 4 * MIB, stages=["serialize"])
     assert plan.hops[0].workers >= 2
+
+
+# -- regime diagnosis: same stall ratio, opposite remedies -------------------
+
+def _report_with_signature(plan, samples):
+    """A source-starved report (70% stall ratio) whose per-item service
+    signature is given by ``samples``."""
+    hop = plan.hops[0]
+    mean_s = sum(samples) / len(samples)
+    items = 64
+    return StageReport(
+        name=hop.name, items=items, bytes=int(items * plan.item_bytes),
+        elapsed_s=items * mean_s / hop.workers,
+        stall_up_s=(items * mean_s / hop.workers) * hop.workers * 0.7,
+        stall_down_s=0.0, errors=0, service_up_s=list(samples))
+
+
+def test_same_stall_ratio_opposite_remedies():
+    """The regression the tentpole exists for: two reports with IDENTICAL
+    stall ratios but opposite service-time signatures must drive replan to
+    opposite remedies — workers up (latency-bound) vs bandwidth down
+    (saturated)."""
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    base_workers = plan.hops[0].workers
+    base_bw = plan.basin.tiers[0].bandwidth_bytes_per_s
+
+    # signature A: high-variance latency (5 ms +- wide spread)
+    jittery = [1e-3 + 12e-3 * ((i * 7) % 10) / 10 for i in range(40)]
+    # signature B: saturated pipe (every item ~21 ms, dead steady)
+    steady = [21e-3 + 1e-5 * (i % 2) for i in range(40)]
+
+    rep_a = _report_with_signature(plan, jittery)
+    rep_b = _report_with_signature(plan, steady)
+    # identical stall accounting relative to elapsed: the ratio carries no
+    # distinguishing information
+    assert (rep_a.stall_up_s / rep_a.elapsed_s
+            == pytest.approx(rep_b.stall_up_s / rep_b.elapsed_s))
+
+    lat = replan(plan, [rep_a], damping=1.0)
+    bw = replan(plan, [rep_b], damping=1.0)
+
+    # opposite remedy 1: latency-bound raises concurrency, keeps the rate
+    assert lat.hops[0].workers > base_workers
+    assert (lat.basin.tiers[0].bandwidth_bytes_per_s
+            == pytest.approx(base_bw))
+    assert lat.diagnosis["move"] == "latency-bound(src)"
+
+    # opposite remedy 2: bandwidth-bound accepts the lower line rate and
+    # does NOT answer with more workers
+    assert bw.basin.tiers[0].bandwidth_bytes_per_s < base_bw
+    assert bw.hops[0].workers <= base_workers
+    assert bw.planned_bytes_per_s < plan.planned_bytes_per_s
+    assert bw.diagnosis["move"] == "bandwidth-bound(src)"
+
+
+def test_latency_remedy_updates_latency_and_jitter_estimates():
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    jittery = [2e-3 + 16e-3 * ((i * 3) % 10) / 10 for i in range(40)]
+    revised = replan(plan, [_report_with_signature(plan, jittery)],
+                     damping=1.0)
+    src = revised.basin.tiers[0]
+    assert src.latency_s > plan.basin.tiers[0].latency_s
+    assert src.jitter_s > plan.basin.tiers[0].jitter_s
+
+
+def test_describe_surfaces_diagnosis():
+    """The operator surface: describe() names each diagnosed hop's regime
+    and the implicated tier; a fresh plan shows no diag block."""
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    assert "diag[" not in plan.describe()
+
+    jittery = [1e-3 + 12e-3 * ((i * 7) % 10) / 10 for i in range(40)]
+    lat = replan(plan, [_report_with_signature(plan, jittery)])
+    assert "diag[move=latency-bound(src)]" in lat.describe()
+
+    steady = [21e-3] * 40
+    bw = replan(plan, [_report_with_signature(plan, steady)])
+    assert "diag[move=bandwidth-bound(src)]" in bw.describe()
+
+
+def test_diagnosis_carries_forward_across_replans():
+    """Chained online replans keep the most recent verdict per hop even
+    when a later report is quiet (the remedy worked)."""
+    plan = plan_transfer(_basin(), 4 * MIB, stages=["move"])
+    jittery = [1e-3 + 12e-3 * ((i * 7) % 10) / 10 for i in range(40)]
+    first = replan(plan, [_report_with_signature(plan, jittery)])
+    quiet = StageReport(name="move", items=10, bytes=10 * 4 * MIB,
+                        elapsed_s=1.0, stall_up_s=0.0, stall_down_s=0.0,
+                        errors=0)
+    second = replan(first, [quiet])
+    assert second.diagnosis["move"] == "latency-bound(src)"
+
+
+def test_plan_respects_tier_capacity_bytes():
+    """A finite burst-buffer tier caps staged depth: never plan more
+    buffered bytes than the smallest tier on the hop can hold."""
+    item = 4 * MIB
+    roomy = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 10 * GBPS, jitter_s=100e-3),
+        Tier("buf", TierKind.BURST_BUFFER, 100 * GBPS),
+        Tier("dst", TierKind.SINK, 40 * GBPS),
+    ])
+    tight = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 10 * GBPS, jitter_s=100e-3),
+        Tier("buf", TierKind.BURST_BUFFER, 100 * GBPS,
+             capacity_bytes=3 * item),
+        Tier("dst", TierKind.SINK, 40 * GBPS),
+    ])
+    deep = plan_transfer(roomy, item, stages=["move"])
+    capped = plan_transfer(tight, item, stages=["move"])
+    assert deep.hops[0].capacity > 3          # the jitter window wants depth
+    assert capped.hops[0].capacity <= 3       # the tier cannot hold it
+    assert capped.total_buffer_items * item <= 3 * item

@@ -1,0 +1,151 @@
+"""Property tests for the adaptive replanner (satellite of the online-
+replanning tentpole): idempotence on stall-free reports, damping
+monotonicity, and the burst-capacity bound on planned buffer depth."""
+
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.basin import DrainageBasin, GBPS, MIB, Tier, TierKind
+from repro.core.planner import (MAX_CAPACITY, MAX_WORKERS, plan_transfer,
+                                replan)
+from repro.core.staging import StageReport
+
+
+def _basin(src_gbps, latency_ms, jitter_ms, cap_mib=None):
+    cap = cap_mib * MIB if cap_mib else math.inf
+    return DrainageBasin([
+        Tier("src", TierKind.SOURCE, src_gbps * GBPS,
+             latency_s=latency_ms / 1e3, jitter_s=jitter_ms / 1e3),
+        Tier("buf", TierKind.BURST_BUFFER, 100.0 * GBPS, latency_s=1e-5,
+             capacity_bytes=cap),
+        Tier("dst", TierKind.SINK, 40.0 * GBPS, latency_s=1e-4),
+    ])
+
+
+def _quiet_report(plan, hop_index=0):
+    hop = plan.hops[hop_index]
+    return StageReport(name=hop.name, items=64, bytes=64 * int(plan.item_bytes),
+                       elapsed_s=2.0, stall_up_s=0.0, stall_down_s=0.0,
+                       errors=0)
+
+
+def _starved_report(plan, frac=0.8, samples=()):
+    hop = plan.hops[0]
+    return StageReport(name=hop.name, items=64, bytes=64 * int(plan.item_bytes),
+                       elapsed_s=2.0, stall_up_s=hop.workers * 2.0 * frac,
+                       stall_down_s=0.0, errors=0,
+                       service_up_s=list(samples))
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=0.5, max_value=100.0),
+       latency_ms=st.floats(min_value=0.0, max_value=20.0),
+       jitter_ms=st.floats(min_value=0.0, max_value=50.0),
+       item_mib=st.floats(min_value=0.1, max_value=32.0))
+def test_replan_idempotent_on_stall_free_reports(src_gbps, latency_ms,
+                                                 jitter_ms, item_mib):
+    """A report with no stalls carries no evidence; the revised plan must
+    equal the original, hop for hop, promise for promise."""
+    plan = plan_transfer(_basin(src_gbps, latency_ms, jitter_ms),
+                         item_mib * MIB, stages=("move",))
+    revised = replan(plan, [_quiet_report(plan)])
+    assert revised.hops == plan.hops
+    assert revised.planned_bytes_per_s == pytest.approx(
+        plan.planned_bytes_per_s)
+    assert revised.diagnosis == {}
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=1.0, max_value=100.0),
+       frac=st.floats(min_value=0.2, max_value=1.0))
+def test_replan_damping_monotone(src_gbps, frac):
+    """More damping trusts the (slower-than-modeled) observation more: the
+    revised source-bandwidth estimate is monotone non-increasing in
+    damping."""
+    plan = plan_transfer(_basin(src_gbps, 1.0, 0.0), 4 * MIB,
+                         stages=("move",))
+    rep = _starved_report(plan, frac=frac)
+    if rep.throughput_bytes_per_s >= plan.basin.tiers[0].bandwidth_bytes_per_s:
+        return                      # observation not slower: nothing to damp
+    estimates = [
+        replan(plan, [rep], damping=d).basin.tiers[0].bandwidth_bytes_per_s
+        for d in (0.25, 0.5, 0.75, 1.0)
+    ]
+    for a, b in zip(estimates, estimates[1:]):
+        assert b <= a + 1e-6
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=0.5, max_value=100.0),
+       jitter_ms=st.floats(min_value=0.0, max_value=200.0),
+       item_mib=st.floats(min_value=0.25, max_value=16.0),
+       cap_mib=st.floats(min_value=1.0, max_value=256.0))
+def test_plan_never_exceeds_burst_capacity(src_gbps, jitter_ms, item_mib,
+                                           cap_mib):
+    """The planner must never stage more items into a hop than the
+    smallest tier on that hop can physically hold (its burst capacity) —
+    however deep the jitter window asks it to go."""
+    basin = _basin(src_gbps, 1.0, jitter_ms, cap_mib=cap_mib)
+    item_bytes = item_mib * MIB
+    plan = plan_transfer(basin, item_bytes, stages=("move",))
+    for hop in plan.hops:
+        tiers = {t.name: t for t in basin.tiers}
+        seg_cap = min(tiers[hop.up_tier].capacity_bytes,
+                      tiers[hop.down_tier].capacity_bytes,
+                      tiers["buf"].capacity_bytes)
+        if math.isfinite(seg_cap):
+            assert hop.capacity * item_bytes <= max(item_bytes, seg_cap)
+        # when the byte ceiling binds, the worker pool shrinks with it:
+        # the promised rate never assumes more concurrency than the
+        # buffer can keep in flight
+        assert hop.workers <= max(1, hop.capacity - 1)
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=0.5, max_value=100.0),
+       latency_ms=st.floats(min_value=0.0, max_value=50.0),
+       jitter_ms=st.floats(min_value=0.0, max_value=100.0),
+       frac=st.floats(min_value=0.2, max_value=1.0))
+def test_replan_respects_clamps_and_capacity(src_gbps, latency_ms, jitter_ms,
+                                             frac):
+    """Whatever the evidence says, a revised plan stays inside the
+    planning guards: worker/capacity ceilings and the burst bound."""
+    basin = _basin(src_gbps, latency_ms, jitter_ms, cap_mib=64.0)
+    plan = plan_transfer(basin, 4 * MIB, stages=("move",))
+    samples = [latency_ms / 1e3 + 0.01 * (i % 7) for i in range(20)]
+    revised = replan(plan, [_starved_report(plan, frac=frac,
+                                            samples=samples)])
+    for hop in revised.hops:
+        assert 1 <= hop.workers <= MAX_WORKERS
+        assert 1 <= hop.capacity <= MAX_CAPACITY
+        assert hop.capacity * plan.item_bytes <= max(plan.item_bytes,
+                                                     64.0 * MIB)
+
+
+@settings(max_examples=25)
+@given(n=st.integers(min_value=0, max_value=7))
+def test_diagnosis_needs_enough_samples(n):
+    """Below the sample floor the regime is undiagnosable and replan must
+    fall back to the conservative bandwidth remedy, never the latency
+    one."""
+    plan = plan_transfer(_basin(10.0, 1.0, 0.0), 4 * MIB, stages=("move",))
+    samples = [5e-3 + i * 1e-2 for i in range(n)]      # dispersed but few
+    revised = replan(plan, [_starved_report(plan, samples=samples)],
+                     damping=1.0)
+    # bandwidth fell (the fallback) and no latency verdict was recorded
+    assert (revised.basin.tiers[0].bandwidth_bytes_per_s
+            < plan.basin.tiers[0].bandwidth_bytes_per_s)
+    assert "latency-bound" not in revised.diagnosis.get("move", "")
+
+
+def test_replan_rejects_bad_damping():
+    plan = plan_transfer(_basin(10.0, 1.0, 0.0), 4 * MIB, stages=("move",))
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            replan(plan, [_quiet_report(plan)], damping=bad)

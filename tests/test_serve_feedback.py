@@ -1,0 +1,97 @@
+"""Serve-layer telemetry feedback: the observed client drain rate flows
+from the TelemetryRegistry back into the decode-stream basin between
+requests (ROADMAP item 2), without building a model server."""
+
+import pytest
+
+from repro.core.basin import GBPS, decode_stream_basin
+from repro.core.mover import TransferReport
+from repro.core.staging import StageReport
+from repro.core.telemetry import TelemetryRegistry
+from repro.launch.serve import (CLIENT_LIMITED_STALL, DRAIN_RATE_WINDOW,
+                                MIN_CLIENT_GBPS, observed_client_gbps)
+
+
+def _serve_report(nbytes, elapsed, *, client_limited=True):
+    """A decode-stream TransferReport.  ``client_limited`` controls the
+    staging hop's backpressure accounting: only a stream the client
+    actually limited carries drain-rate evidence."""
+    stall_down = (elapsed * 0.5) if client_limited else 0.0
+    stage = StageReport(name="token-stream", items=nbytes // 4,
+                        bytes=nbytes, elapsed_s=elapsed, stall_up_s=0.0,
+                        stall_down_s=stall_down, errors=0)
+    return TransferReport(mode="streaming", items=nbytes // 4, bytes=nbytes,
+                          elapsed_s=elapsed, stage_reports=[stage])
+
+
+def test_no_reports_means_no_estimate():
+    assert observed_client_gbps(TelemetryRegistry()) is None
+
+
+def test_drain_rate_reflects_observed_throughput():
+    reg = TelemetryRegistry()
+    # client sustained 1 MB/s end to end, and was the limiting side
+    reg.record("serve", _serve_report(nbytes=1_000_000, elapsed=1.0))
+    gbps = observed_client_gbps(reg)
+    assert gbps == pytest.approx(1_000_000 * 8 / 1e9)
+
+
+def test_producer_limited_stream_is_not_client_evidence():
+    """The ratchet regression: a stream paced by decode compute (zero
+    downstream backpressure) must NOT drag the client estimate down to
+    the producer's rate — it says nothing about the client."""
+    reg = TelemetryRegistry()
+    reg.record("serve", _serve_report(nbytes=2_000, elapsed=1.0,
+                                      client_limited=False))
+    assert observed_client_gbps(reg) is None
+    # and a later client-limited stream is what sets the estimate
+    reg.record("serve", _serve_report(nbytes=1_000_000, elapsed=1.0))
+    assert observed_client_gbps(reg) == pytest.approx(1_000_000 * 8 / 1e9)
+
+
+def test_drain_rate_averages_recent_client_limited_window():
+    reg = TelemetryRegistry()
+    for _ in range(10):
+        reg.record("serve", _serve_report(nbytes=4_000_000, elapsed=1.0))
+    for _ in range(DRAIN_RATE_WINDOW):
+        reg.record("serve", _serve_report(nbytes=1_000_000, elapsed=1.0))
+    # only the newest window counts: the old fast streams age out
+    assert observed_client_gbps(reg) == pytest.approx(1_000_000 * 8 / 1e9)
+
+
+def test_drain_rate_has_a_floor():
+    reg = TelemetryRegistry()
+    reg.record("serve", _serve_report(nbytes=8, elapsed=100.0))  # ~stalled
+    assert observed_client_gbps(reg) == pytest.approx(MIN_CLIENT_GBPS)
+
+
+def test_other_layers_do_not_leak_into_the_estimate():
+    reg = TelemetryRegistry()
+    reg.record("input", _serve_report(nbytes=10**9, elapsed=1.0))
+    assert observed_client_gbps(reg) is None
+
+
+def test_stall_threshold_gates_evidence():
+    """Backpressure below the evidence threshold is noise, not a verdict
+    on the client."""
+    reg = TelemetryRegistry()
+    stage = StageReport(name="token-stream", items=100, bytes=400,
+                        elapsed_s=1.0, stall_up_s=0.0,
+                        stall_down_s=CLIENT_LIMITED_STALL * 0.5, errors=0)
+    reg.record("serve", TransferReport(mode="streaming", items=100,
+                                       bytes=400, elapsed_s=1.0,
+                                       stage_reports=[stage]))
+    assert observed_client_gbps(reg) is None
+
+
+def test_feedback_reshapes_the_basin():
+    """The fed-back rate becomes the client tier's bandwidth, so the next
+    plan sizes the token staging buffer for the client actually seen."""
+    reg = TelemetryRegistry()
+    reg.record("serve", _serve_report(nbytes=25_000_000, elapsed=1.0))
+    drain = observed_client_gbps(reg)
+    basin = decode_stream_basin(client_gbps=drain)
+    client = basin.tiers[-1]
+    assert client.bandwidth_bytes_per_s == pytest.approx(drain * GBPS)
+    default_client = decode_stream_basin().tiers[-1]
+    assert client.bandwidth_bytes_per_s != default_client.bandwidth_bytes_per_s

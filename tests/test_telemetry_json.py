@@ -1,0 +1,87 @@
+"""TelemetryRegistry JSON surface: serialization, round-trip, atomic dump
+(the dashboard feed written by launch/train.py --telemetry-json)."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.mover import TransferReport
+from repro.core.telemetry import LayerSummary, TelemetryRegistry
+
+
+def _report(items=4, nbytes=4096, elapsed=0.5, planned=None):
+    return TransferReport(mode="bulk", items=items, bytes=nbytes,
+                          elapsed_s=elapsed, stage_reports=[],
+                          planned_bytes_per_s=planned)
+
+
+def _populated():
+    reg = TelemetryRegistry()
+    reg.record("input", _report(items=8, nbytes=1 << 20, planned=4e6))
+    reg.record("input", _report(items=8, nbytes=1 << 20, planned=8e6))
+    reg.record("checkpoint", _report(items=3, nbytes=1 << 16))
+    reg.record("serve", _report(items=64, nbytes=256, elapsed=0.25,
+                                planned=2048.0))
+    return reg
+
+
+def test_to_json_is_valid_and_complete():
+    reg = _populated()
+    data = json.loads(reg.to_json())
+    assert data["version"] == 1
+    assert set(data["layers"]) == {"input", "checkpoint", "serve"}
+    inp = data["layers"]["input"]
+    assert inp["transfers"] == 2
+    assert inp["items"] == 16
+    assert inp["bytes"] == 2 * (1 << 20)
+    # derived throughput rides along for dashboards
+    assert inp["throughput_bytes_per_s"] == pytest.approx(
+        reg.summary()["input"].throughput_bytes_per_s)
+    assert data["worst_fidelity_gap"] == pytest.approx(
+        reg.worst_fidelity_gap())
+
+
+def test_json_round_trip_restores_aggregates():
+    reg = _populated()
+    clone = TelemetryRegistry.from_json(reg.to_json())
+    assert clone.summary() == reg.summary()
+    assert clone.worst_fidelity_gap() == pytest.approx(
+        reg.worst_fidelity_gap())
+
+
+def test_round_trip_of_empty_registry():
+    reg = TelemetryRegistry()
+    clone = TelemetryRegistry.from_json(reg.to_json())
+    assert clone.summary() == {}
+    assert clone.worst_fidelity_gap() is None
+    assert json.loads(reg.to_json())["worst_fidelity_gap"] is None
+
+
+def test_round_trip_preserves_gapless_layers():
+    """Layers that never carried a plan round-trip with gap None, not 0."""
+    reg = TelemetryRegistry()
+    reg.record("adhoc", _report())
+    clone = TelemetryRegistry.from_json(reg.to_json())
+    assert clone.summary()["adhoc"].worst_fidelity_gap is None
+
+
+def test_dump_json_atomic_file_round_trip(tmp_path):
+    reg = _populated()
+    path = str(tmp_path / "telemetry.json")
+    reg.dump_json(path)
+    assert not os.path.exists(path + ".tmp")      # tmp renamed away
+    with open(path) as f:
+        clone = TelemetryRegistry.from_json(f.read())
+    assert clone.summary() == reg.summary()
+    # a second dump overwrites in place (the polling-dashboard contract)
+    reg.record("serve", _report())
+    reg.dump_json(path)
+    with open(path) as f:
+        assert json.loads(f.read())["layers"]["serve"]["transfers"] == 2
+
+
+def test_summary_equality_is_field_wise():
+    a = LayerSummary(layer="x", transfers=1, items=2, bytes=3, elapsed_s=0.5)
+    b = LayerSummary(layer="x", transfers=1, items=2, bytes=3, elapsed_s=0.5)
+    assert a == b                                  # dataclass semantics
