@@ -14,8 +14,8 @@ import traceback
 
 from . import (fig2_latency_sweep, fig4_cca_sweep, fig8_bulk_streaming,
                fig10_storage_bound, fig11_staged_vs_direct, global_tuning,
-               kernel_bench, online_replan, planned_vs_fixed, roofline,
-               table5_basin_volumes)
+               kernel_bench, multipath, online_replan, planned_vs_fixed,
+               roofline, table5_basin_volumes)
 
 SUITES = {
     "table5": table5_basin_volumes,
@@ -26,6 +26,7 @@ SUITES = {
     "fig11": fig11_staged_vs_direct,
     "global_tuning": global_tuning,
     "kernels": kernel_bench,
+    "multipath": multipath,
     "online_replan": online_replan,
     "planned_vs_fixed": planned_vs_fixed,
     "roofline": roofline,

@@ -1,0 +1,65 @@
+"""Read a ``--telemetry-jsonl`` time series and print per-layer trends.
+
+The training driver appends one cross-layer telemetry snapshot per flush
+(``python -m repro.launch.train ... --telemetry-jsonl /tmp/telemetry.jsonl``).
+Each line carries the cumulative per-layer aggregates; differencing
+adjacent lines gives interval throughput, so this script shows how each
+layer's rate and worst fidelity gap moved over the run — the drill-down
+the atomic ``--telemetry-json`` point-in-time file cannot answer.
+
+Usage:
+    PYTHONPATH=src python examples/telemetry_timeseries.py /tmp/telemetry.jsonl
+"""
+
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def spark(values: list[float]) -> str:
+    """One-character-per-sample trend line."""
+    bars = "▁▂▃▄▅▆▇█"
+    hi = max(values) or 1.0
+    return "".join(bars[min(len(bars) - 1,
+                            int(v / hi * (len(bars) - 1)))] for v in values)
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        raise SystemExit(__doc__)
+    rows = load(sys.argv[1])
+    if len(rows) < 2:
+        raise SystemExit("need at least two snapshots to show a trend "
+                         f"(got {len(rows)})")
+    layers = sorted({name for r in rows for name in r["layers"]})
+    t0 = rows[0]["ts"]
+    print(f"{len(rows)} snapshots over {rows[-1]['ts'] - t0:.1f}s")
+    for name in layers:
+        rates = []
+        for prev, cur in zip(rows, rows[1:]):
+            a = prev["layers"].get(name, {"bytes": 0, "elapsed_s": 0.0})
+            b = cur["layers"].get(name)
+            if b is None:
+                continue
+            d_bytes = b["bytes"] - a["bytes"]
+            d_t = b["elapsed_s"] - a["elapsed_s"]
+            rates.append(d_bytes / d_t / 1e6 if d_t > 0 else 0.0)
+        if not rates:
+            continue
+        gap = rows[-1]["layers"][name].get("worst_fidelity_gap")
+        gap_s = f"worst gap {gap:+.3f}" if gap is not None else "gap n/a"
+        print(f"{name:>12}: {spark(rates)}  "
+              f"{rates[0]:8.1f} -> {rates[-1]:8.1f} MB/s  ({gap_s})")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,14 @@ machinery as everything else:
   *complete* manifest,
 * restore is **elastic**: leaves are saved with logical shapes and can be
   re-sharded onto any mesh at load (save on (4,2), restore on (2,2) or a
-  single device — tested in tests/test_checkpoint.py).
+  single device — tested in tests/test_checkpoint.py),
+* saves can **mirror to two storage tiers** (``mirror_root``): shards
+  replicate down both branches of a
+  :func:`~repro.core.basin.mirrored_checkpoint_basin` plan (local NVMe +
+  remote object store) through the mover's parallel-branch mirror mode,
+  each branch's stall evidence attributed separately; restore picks
+  whichever replica's branch is modeled faster and falls back to the
+  other on a missing or corrupt copy.
 
 In a real multi-host deployment each host writes only its addressable
 shards; this process-local implementation writes full arrays and notes
@@ -34,7 +41,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
-from repro.core.basin import checkpoint_basin
+from repro.core.basin import checkpoint_basin, mirrored_checkpoint_basin
 from repro.core.mover import MoverConfig, UnifiedDataMover
 from repro.core.planner import TransferPlan, plan_transfer
 from repro.core.telemetry import get_registry
@@ -67,10 +74,10 @@ def _ckpt_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:010d}")
 
 
-def latest_step(root: str) -> Optional[int]:
-    """Newest step with a *complete* (committed) manifest."""
+def complete_steps(root: str) -> list[int]:
+    """Every step with a *complete* (committed) manifest, ascending."""
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for name in os.listdir(root):
         if name.startswith("step_") and os.path.exists(
@@ -79,7 +86,13 @@ def latest_step(root: str) -> Optional[int]:
                 steps.append(int(name[5:]))
             except ValueError:
                 continue
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    """Newest step with a complete manifest."""
+    steps = complete_steps(root)
+    return steps[-1] if steps else None
 
 
 def _leaf_plan(total_bytes: int, n_leaves: int,
@@ -92,24 +105,57 @@ def _leaf_plan(total_bytes: int, n_leaves: int,
                          stages=("serialize",))
 
 
-def save_checkpoint(root: str, step: int, tree: Any, *,
-                    staged: bool = True,
-                    plan: Optional[TransferPlan] = None,
-                    mover: Optional[UnifiedDataMover] = None,
-                    replan_every_items: int = 0) -> CheckpointMeta:
-    """Write one checkpoint atomically; returns its manifest.
-
-    ``replan_every_items > 0`` revises the staging plan online every that
-    many shards (a large model's save is a long transfer — a filesystem
-    that degrades mid-save is answered mid-save).  Passing a persistent
-    ``mover`` lets revisions carry across checkpoints: the mover's plan is
-    the live estimate, updated by each save's observed stalls."""
+def _prepare_tmp(root: str, step: int) -> tuple[str, str]:
     os.makedirs(root, exist_ok=True)
     final_dir = _ckpt_dir(root, step)
     tmp_dir = final_dir + ".tmp"
     if os.path.exists(tmp_dir):
         shutil.rmtree(tmp_dir)
     os.makedirs(tmp_dir)
+    return final_dir, tmp_dir
+
+
+def _make_writer(tmp_dir: str, manifest_leaves: Optional[list]):
+    """Shard writer bound to one destination directory; the primary
+    destination's writer also fills the manifest (replicas carry
+    byte-identical shards, so one manifest describes both)."""
+    def write_shard(item):
+        i, pstr, arr = item
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp_dir, fname), arr)
+        if manifest_leaves is not None:
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()
+            manifest_leaves[i] = {
+                "path": pstr, "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "sha256": digest,
+            }
+        return arr
+    return write_shard
+
+
+def save_checkpoint(root: str, step: int, tree: Any, *,
+                    staged: bool = True,
+                    plan: Optional[TransferPlan] = None,
+                    mover: Optional[UnifiedDataMover] = None,
+                    replan_every_items: int = 0,
+                    mirror_root: Optional[str] = None) -> CheckpointMeta:
+    """Write one checkpoint atomically; returns its manifest.
+
+    ``replan_every_items > 0`` revises the staging plan online every that
+    many shards (a large model's save is a long transfer — a filesystem
+    that degrades mid-save is answered mid-save).  Passing a persistent
+    ``mover`` lets revisions carry across checkpoints: the mover's plan is
+    the live estimate, updated by each save's observed stalls.
+
+    ``mirror_root`` turns the save into a dual-tier mirror: every shard
+    replicates down both branches of a mirrored-checkpoint plan (local
+    NVMe + remote object store) via the mover's parallel mirror mode —
+    one pipeline per branch, stall evidence attributed per branch — and
+    both directories commit their (identical) manifest atomically."""
+    final_dir, tmp_dir = _prepare_tmp(root, step)
+    mirror_dirs: Optional[tuple[str, str]] = None
+    if mirror_root is not None:
+        mirror_dirs = _prepare_tmp(mirror_root, step)
 
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
     # device -> host snapshot happens up front (the fast, blocking part);
@@ -118,45 +164,67 @@ def save_checkpoint(root: str, step: int, tree: Any, *,
                 for i, (p, v) in enumerate(leaves_with_paths)]
 
     manifest_leaves: list[dict] = [None] * len(snapshot)
-
-    def write_shard(item):
-        i, pstr, arr = item
-        fname = f"leaf_{i:05d}.npy"
-        fpath = os.path.join(tmp_dir, fname)
-        np.save(fpath, arr)
-        digest = hashlib.sha256(arr.tobytes()).hexdigest()
-        manifest_leaves[i] = {
-            "path": pstr, "file": fname, "shape": list(arr.shape),
-            "dtype": str(arr.dtype), "sha256": digest,
-        }
-        return arr
+    write_primary = _make_writer(tmp_dir, manifest_leaves)
+    total_bytes = sum(a.nbytes for _, _, a in snapshot)
 
     if staged:
         if mover is None:
             mover = UnifiedDataMover(MoverConfig(checksum=False),
                                      telemetry=get_registry(),
                                      layer="checkpoint")
-        if plan is not None:
-            mover.plan = plan
-        elif mover.plan is None:
-            mover.plan = _leaf_plan(sum(a.nbytes for _, _, a in snapshot),
-                                    len(snapshot), None)
-        # plan=None: draw from (and revise) the mover's own plan, so a
-        # persistent mover replans across shard batches and across saves
-        mover.bulk_transfer(iter(snapshot), sink=lambda _: None,
-                            transforms=[("serialize", write_shard)],
-                            replan_every_items=replan_every_items)
+        if mirror_dirs is not None:
+            if plan is None or not plan.is_multipath:
+                item_bytes = max(1, total_bytes // max(1, len(snapshot)))
+                plan = plan_transfer(mirrored_checkpoint_basin(), item_bytes,
+                                     stages=("serialize",))
+            primary_id = plan.branches[0].branch_id
+            write_mirror = _make_writer(mirror_dirs[1], None)
+            transforms = {
+                b.branch_id: [("serialize",
+                               write_primary if b.branch_id == primary_id
+                               else write_mirror)]
+                for b in plan.branches
+            }
+            mover.parallel_transfer(iter(snapshot), sink=lambda _: None,
+                                    plan=plan, mode="mirror",
+                                    transforms=transforms,
+                                    replan_every_items=replan_every_items)
+        else:
+            if plan is not None:
+                mover.plan = plan
+            elif mover.plan is None:
+                mover.plan = _leaf_plan(total_bytes, len(snapshot), None)
+            # plan=None: draw from (and revise) the mover's own plan, so a
+            # persistent mover replans across shard batches and across saves
+            mover.bulk_transfer(iter(snapshot), sink=lambda _: None,
+                                transforms=[("serialize", write_primary)],
+                                replan_every_items=replan_every_items)
     else:
+        write_mirror = (_make_writer(mirror_dirs[1], None)
+                        if mirror_dirs is not None else None)
         for item in snapshot:
-            write_shard(item)
+            write_primary(item)
+            if write_mirror is not None:
+                write_mirror(item)
 
+    missing = sum(1 for l in manifest_leaves if l is None)
+    if missing:
+        # defense in depth: a failed branch surfaces as an exception from
+        # the mover's join before this point, but a torn manifest must
+        # never commit under any silent-incompleteness path
+        raise IOError(f"checkpoint save incomplete: {missing} of "
+                      f"{len(manifest_leaves)} shards unwritten")
     meta = CheckpointMeta(step=step, leaves=manifest_leaves,
                           treedef=str(treedef), wall_time=time.time())
-    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
-        json.dump(dataclasses.asdict(meta), f)
-    if os.path.exists(final_dir):
-        shutil.rmtree(final_dir)
-    os.replace(tmp_dir, final_dir)       # atomic commit
+    commits = [(final_dir, tmp_dir)]
+    if mirror_dirs is not None:
+        commits.append(mirror_dirs)
+    for fin, tmp in commits:
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(dataclasses.asdict(meta), f)
+        if os.path.exists(fin):
+            shutil.rmtree(fin)
+        os.replace(tmp, fin)       # atomic commit (per replica)
     return meta
 
 
@@ -234,16 +302,30 @@ class CheckpointManager:
     The manager owns one persistent mover for the save path: the staging
     plan it carries is revised online every ``replan_every_shards`` shards
     *and* survives from one checkpoint to the next, so the estimate of the
-    storage tier converges across saves instead of resetting each time."""
+    storage tier converges across saves instead of resetting each time.
+
+    ``mirror_root`` enables dual-tier mirrored saves (see
+    :func:`save_checkpoint`); the mirrored (multipath) plan persists
+    across saves the same way, so a degraded replica tier keeps its
+    per-branch verdict from one checkpoint to the next.  Restore then
+    considers both roots: newest complete step first, the faster-modeled
+    replica first within a step, falling back to the sibling replica —
+    and then to older complete checkpoints — on any error (a torn,
+    missing, or hash-mismatched copy)."""
 
     def __init__(self, root: str, *, every_steps: int = 100, keep: int = 3,
-                 staged: bool = True, replan_every_shards: int = 16):
+                 staged: bool = True, replan_every_shards: int = 16,
+                 mirror_root: Optional[str] = None):
         self.root = root
+        self.mirror_root = mirror_root
         self.every_steps = every_steps
         self.keep = keep
         self.staged = staged
         self.replan_every_shards = replan_every_shards
         self._mover: Optional[UnifiedDataMover] = None
+        #: the live multipath estimate for mirrored saves (revised online
+        #: and carried across checkpoints, like the mover's linear plan)
+        self._mirror_plan: Optional[TransferPlan] = None
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -262,7 +344,11 @@ class CheckpointManager:
             try:
                 save_checkpoint(self.root, step, host_tree, staged=self.staged,
                                 mover=self._mover,
-                                replan_every_items=self.replan_every_shards)
+                                plan=self._mirror_plan,
+                                replan_every_items=self.replan_every_shards,
+                                mirror_root=self.mirror_root)
+                if self.mirror_root and self._mover is not None:
+                    self._mirror_plan = self._mover.last_plan
                 self._gc()
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
@@ -279,20 +365,56 @@ class CheckpointManager:
             e, self._error = self._error, None
             raise e
 
+    def _restore_roots(self) -> list[str]:
+        """Candidate roots, fastest modeled replica first."""
+        if not self.mirror_root:
+            return [self.root]
+        plan = self._mirror_plan
+        if plan is None or not plan.is_multipath:
+            plan = plan_transfer(mirrored_checkpoint_basin(), 1 << 20,
+                                 stages=("serialize",))
+        # primary root holds the first branch's replica, mirror the second
+        rates = [b.rate_bytes_per_s for b in plan.branches[:2]]
+        roots = [self.root, self.mirror_root]
+        if len(rates) == 2 and rates[1] > rates[0]:
+            roots.reverse()
+        return roots
+
     def restore_latest(self, like: Any, *, shardings: Any = None
                        ) -> tuple[Optional[int], Any]:
-        step = latest_step(self.root)
-        if step is None:
+        if not self.mirror_root:
+            # single root: the historical contract — newest complete step
+            # or bust.  Silently resuming from an older step would mask a
+            # corrupt/unreadable newest checkpoint.
+            step = latest_step(self.root)
+            if step is None:
+                return None, like
+            return step, load_checkpoint(self.root, step, like,
+                                         shardings=shardings)
+        roots = self._restore_roots()
+        # every complete (step, replica) pair, newest step first, the
+        # faster-modeled replica first within a step: a corrupt newest
+        # copy falls back to its sibling, then to older checkpoints
+        candidates = [(s, r) for r in roots for s in complete_steps(r)]
+        candidates.sort(key=lambda t: (-t[0], roots.index(t[1])))
+        if not candidates:
             return None, like
-        return step, load_checkpoint(self.root, step, like,
-                                     shardings=shardings)
+        last_err: Optional[Exception] = None
+        for step, r in candidates:
+            try:
+                # fallback replicas exist, so re-hash shards against the
+                # manifest: a silently bit-rotted copy must fail here so
+                # the intact mirror (or an older step) gets its turn
+                return step, load_checkpoint(r, step, like,
+                                             shardings=shardings,
+                                             verify=True)
+            except Exception as e:       # torn/corrupt replica: try the next
+                last_err = e
+        raise last_err
 
     def _gc(self) -> None:
-        if not os.path.isdir(self.root):
-            return
-        steps = sorted(
-            int(n[5:]) for n in os.listdir(self.root)
-            if n.startswith("step_") and not n.endswith(".tmp")
-            and os.path.exists(os.path.join(self.root, n, "manifest.json")))
-        for s in steps[:-self.keep]:
-            shutil.rmtree(_ckpt_dir(self.root, s), ignore_errors=True)
+        for root in (self.root, self.mirror_root):
+            if not root:
+                continue
+            for s in complete_steps(root)[:-self.keep]:
+                shutil.rmtree(_ckpt_dir(root, s), ignore_errors=True)

@@ -8,11 +8,30 @@ basin position - network position x burst-buffer capacity x compute - is
 the paper's planning discipline.
 
 This module is the executable form of that model.  A :class:`DrainageBasin`
-is an ordered chain of :class:`Tier` nodes joined by :class:`Link` edges.
-From it we derive, analytically:
+is a **DAG** of :class:`Tier` nodes joined by :class:`Link` edges.  Real
+deployments are rarely one straight channel: datasets fan out N shards ->
+M hosts (multiple roots merging at a staging tier), checkpoints mirror to
+two storage tiers (one source splitting to two sinks), and decode streams
+fan out to many clients.  A tier with several outgoing links is a *split*
+(fan-out) node; several incoming links make a *merge* (fan-in) node; both
+are detected from the link structure rather than declared.
 
-* the end-to-end *achievable throughput* (min over the path - the paper's
-  "a chain is only as strong as its weakest link", section 3.4),
+The historical linear constructor is preserved as the degenerate
+single-path case: ``DrainageBasin(tiers)`` with no links still means the
+ordered chain ``tiers[0] -> tiers[1] -> ...``, and every analysis method
+behaves exactly as it always has on such basins (``is_linear`` is true).
+A :class:`Link` whose ``bandwidth_bytes_per_s`` is ``None`` is *derived*:
+its capacity is taken from its endpoint tiers and re-derived whenever the
+tier estimates are revised (``replace_tiers``), which is how the adaptive
+replanner avoids clamping an upward revision at a stale link rate.
+
+From the model we derive, analytically:
+
+* the end-to-end *achievable throughput* (min over a linear path - the
+  paper's "a chain is only as strong as its weakest link", section 3.4 -
+  or, on a DAG, the sum of per-branch rates under shared-tier rate
+  conservation: branch rates through a shared tier must sum to no more
+  than its effective rate, see :meth:`DrainageBasin.branch_rates`),
 * the *fidelity gap* of any link (section 1: theoretical capacity vs.
   application throughput),
 * burst-buffer sizing via Little's law (buffer >= bandwidth x jitter
@@ -97,17 +116,24 @@ class Tier:
 
 @dataclasses.dataclass(frozen=True)
 class Link:
-    """Directed edge between two tiers (a hop on the data path)."""
+    """Directed edge between two tiers (a hop on the data path).
+
+    ``bandwidth_bytes_per_s=None`` marks a *derived* link: its capacity is
+    the min of its endpoint tiers, resolved by the basin at construction
+    and re-resolved whenever tier estimates are revised
+    (:meth:`DrainageBasin.replace_tiers`).  Give a concrete bandwidth only
+    for physically provisioned links (a WAN circuit, a PCIe lane count).
+    """
 
     src: str
     dst: str
-    bandwidth_bytes_per_s: float
+    bandwidth_bytes_per_s: float | None = None
     rtt_s: float = 0.0
 
     def bdp_bytes(self) -> float:
         """Bandwidth-delay product (section 3.1) - the in-flight window
         required to keep the link full."""
-        return self.bandwidth_bytes_per_s * self.rtt_s
+        return (self.bandwidth_bytes_per_s or 0.0) * self.rtt_s
 
 
 @dataclasses.dataclass
@@ -128,8 +154,24 @@ class BottleneckReport:
         return 1.0 - self.achievable_bytes_per_s / self.theoretical_bytes_per_s
 
 
+#: combinatorial guard: a basin with more root->sink paths than this is a
+#: modeling error, not a plannable topology
+MAX_PATHS = 64
+
+
 class DrainageBasin:
-    """An ordered data path: SOURCE -> [BURST_BUFFER|CHANNEL]* -> SINK."""
+    """A DAG data path: SOURCE(s) -> [BURST_BUFFER|CHANNEL]* -> SINK(s).
+
+    ``DrainageBasin(tiers)`` (no links) is the degenerate linear case: the
+    ordered chain the model started life as, with every method behaving
+    exactly as before the DAG refactor.  With explicit ``links`` the graph
+    may branch: multiple roots merging (N dataset shards -> one host),
+    one source splitting to multiple sinks (a mirrored checkpoint, a
+    decode fan-out).  Split/merge nodes are detected from link degrees
+    (:meth:`split_tiers` / :meth:`merge_tiers`); root->sink paths are
+    enumerated by :meth:`paths` and each is addressable as a linear
+    sub-basin via :meth:`path_basin`.
+    """
 
     def __init__(self, tiers: Sequence[Tier], links: Sequence[Link] | None = None):
         if len(tiers) < 2:
@@ -143,15 +185,132 @@ class DrainageBasin:
         # revised tiers must re-derive them (planner.replan relies on this)
         self.explicit_links = links is not None
         if links is None:
-            # implicit infinite-bandwidth adjacency; bandwidth limited by tiers
-            links = [
-                Link(a.name, b.name, min(a.bandwidth_bytes_per_s, b.bandwidth_bytes_per_s))
-                for a, b in zip(tiers, tiers[1:])
-            ]
+            links = [Link(a.name, b.name) for a, b in zip(tiers, tiers[1:])]
+        # a None bandwidth is a *derived* link (min of its endpoints);
+        # remember which so replace_tiers() can re-derive after revision
+        self._derived_links = {(l.src, l.dst) for l in links
+                               if l.bandwidth_bytes_per_s is None}
+        resolved = []
         for l in links:
             if l.src not in self._by_name or l.dst not in self._by_name:
                 raise ValueError(f"link {l.src}->{l.dst} references unknown tier")
-        self.links = list(links)
+            if l.bandwidth_bytes_per_s is None:
+                l = dataclasses.replace(
+                    l, bandwidth_bytes_per_s=min(
+                        self._by_name[l.src].bandwidth_bytes_per_s,
+                        self._by_name[l.dst].bandwidth_bytes_per_s))
+            resolved.append(l)
+        self.links = resolved
+        self._out: dict[str, list[str]] = {n: [] for n in names}
+        self._in: dict[str, list[str]] = {n: [] for n in names}
+        for l in self.links:
+            self._out[l.src].append(l.dst)
+            self._in[l.dst].append(l.src)
+        self._validate_dag()
+        self._paths = self._enumerate_paths()
+
+    # -- topology ----------------------------------------------------------
+
+    def _validate_dag(self) -> None:
+        indeg = {n: len(self._in[n]) for n in self._by_name}
+        ready = [n for n in (t.name for t in self.tiers) if indeg[n] == 0]
+        seen = 0
+        queue = list(ready)
+        while queue:
+            n = queue.pop(0)
+            seen += 1
+            for m in self._out[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    queue.append(m)
+        if seen != len(self.tiers):
+            cyclic = sorted(n for n, d in indeg.items() if d > 0)
+            raise ValueError(f"basin links contain a cycle through {cyclic}")
+        for t in self.tiers:
+            if not self._in[t.name] and not self._out[t.name]:
+                raise ValueError(f"tier {t.name!r} is disconnected")
+
+    def _enumerate_paths(self) -> list[tuple[str, ...]]:
+        """Every root->sink tier-name path, in deterministic (tier-order,
+        then link-order) traversal order."""
+        paths: list[tuple[str, ...]] = []
+
+        def walk(node: str, acc: list[str]) -> None:
+            acc.append(node)
+            nexts = self._out[node]
+            if not nexts:
+                paths.append(tuple(acc))
+                if len(paths) > MAX_PATHS:
+                    raise ValueError(
+                        f"basin enumerates more than {MAX_PATHS} root->sink "
+                        "paths; simplify the topology")
+            for m in nexts:
+                walk(m, acc)
+            acc.pop()
+
+        for root in self.roots():
+            walk(root, [])
+        return paths
+
+    def roots(self) -> list[str]:
+        """Tier names with no incoming link (the headwaters)."""
+        return [t.name for t in self.tiers if not self._in[t.name]]
+
+    def sinks(self) -> list[str]:
+        """Tier names with no outgoing link (the basin mouths)."""
+        return [t.name for t in self.tiers if not self._out[t.name]]
+
+    def split_tiers(self) -> list[str]:
+        """Fan-out nodes: tiers with more than one outgoing link."""
+        return [t.name for t in self.tiers if len(self._out[t.name]) > 1]
+
+    def merge_tiers(self) -> list[str]:
+        """Fan-in nodes: tiers with more than one incoming link."""
+        return [t.name for t in self.tiers if len(self._in[t.name]) > 1]
+
+    @property
+    def is_linear(self) -> bool:
+        """True when the basin is one root->sink chain covering every tier
+        — the degenerate case all pre-DAG call sites construct."""
+        return len(self._paths) == 1 and len(self._paths[0]) == len(self.tiers)
+
+    def paths(self) -> list[tuple[str, ...]]:
+        """All root->sink tier-name paths (one per branch)."""
+        return list(self._paths)
+
+    def tier(self, name: str) -> Tier:
+        return self._by_name[name]
+
+    def link(self, src: str, dst: str) -> Link:
+        for l in self.links:
+            if l.src == src and l.dst == dst:
+                return l
+        raise KeyError(f"no link {src}->{dst}")
+
+    def path_basin(self, path: Sequence[str]) -> "DrainageBasin":
+        """A linear sub-basin over one root->sink path.  Explicit link
+        bandwidths/rtts along the path survive; derived links stay derived
+        so the sub-basin re-derives them from its (shared) tier objects."""
+        tiers = [self._by_name[n] for n in path]
+        links = []
+        for a, b in zip(path, path[1:]):
+            l = self.link(a, b)
+            if (a, b) in self._derived_links:
+                l = dataclasses.replace(l, bandwidth_bytes_per_s=None)
+            links.append(l)
+        return DrainageBasin(tiers, links)
+
+    def replace_tiers(self, new_tiers: Sequence[Tier]) -> "DrainageBasin":
+        """Rebuild with revised tier estimates, same topology.  Derived
+        links re-derive from the new tiers (an upward bandwidth revision
+        must not stay clamped at a stale link rate); explicit links are
+        physical and survive unchanged."""
+        if not self.explicit_links:
+            return DrainageBasin(new_tiers)
+        links = [dataclasses.replace(l, bandwidth_bytes_per_s=None)
+                 if (l.src, l.dst) in self._derived_links else l
+                 for l in self.links]
+        return DrainageBasin(new_tiers, links)
 
     # -- analysis ----------------------------------------------------------
 
@@ -162,11 +321,19 @@ class DrainageBasin:
             yield (f"{l.src}->{l.dst}", "link", l.bandwidth_bytes_per_s)
 
     def achievable_throughput(self, item_bytes: float | None = None) -> float:
-        """Sustained end-to-end rate = min over every tier and link.
+        """Sustained end-to-end rate.
+
+        Linear basin: min over every tier and link (the weakest link).
+        Branching basin: the sum of per-branch rates under shared-tier
+        rate conservation (:meth:`branch_rates`) — aggregate throughput is
+        governed by the slowest *branch allocation*, not the provisioned
+        link (arXiv:2308.10312's multi-flow regime).
 
         With ``item_bytes`` given, tier latencies amortize per item
         (small-item regimes choke on latency, not bandwidth).
         """
+        if not self.is_linear:
+            return sum(self.branch_rates(item_bytes).values())
         rates = []
         for t in self.tiers:
             rates.append(
@@ -174,6 +341,53 @@ class DrainageBasin:
             )
         rates.extend(l.bandwidth_bytes_per_s for l in self.links)
         return min(rates)
+
+    def branch_rates(self, item_bytes: float | None = None
+                     ) -> dict[tuple[str, ...], float]:
+        """Per-branch sustainable rate for every root->sink path.
+
+        Each branch starts at its own weakest element, then rates are
+        proportionally scaled down wherever branches sharing a tier or
+        link would jointly exceed its capacity (rate conservation: branch
+        rates through a shared element must sum to <= its effective
+        rate).  Deterministic fixed-point iteration; on a linear basin the
+        single branch equals :meth:`achievable_throughput`.
+        """
+        def tier_rate(name: str) -> float:
+            t = self._by_name[name]
+            return (t.effective_bandwidth(item_bytes) if item_bytes
+                    else t.bandwidth_bytes_per_s)
+
+        link_bw = {(l.src, l.dst): l.bandwidth_bytes_per_s for l in self.links}
+        rates: dict[tuple[str, ...], float] = {}
+        for p in self._paths:
+            caps = [tier_rate(n) for n in p]
+            caps.extend(link_bw[(a, b)] for a, b in zip(p, p[1:]))
+            rates[p] = min(caps)
+        # shared elements: (capacity, member paths)
+        shared: list[tuple[float, list[tuple[str, ...]]]] = []
+        for t in self.tiers:
+            members = [p for p in self._paths if t.name in p]
+            if len(members) > 1:
+                shared.append((tier_rate(t.name), members))
+        for (a, b), bw in link_bw.items():
+            members = [p for p in self._paths
+                       if any(x == a and y == b
+                              for x, y in zip(p, p[1:]))]
+            if len(members) > 1:
+                shared.append((bw, members))
+        for _ in range(max(1, 4 * len(self._paths))):
+            changed = False
+            for cap, members in shared:
+                load = sum(rates[p] for p in members)
+                if load > cap * (1.0 + 1e-12):
+                    scale = cap / load
+                    for p in members:
+                        rates[p] *= scale
+                    changed = True
+            if not changed:
+                break
+        return rates
 
     def bottleneck(self, item_bytes: float | None = None) -> BottleneckReport:
         best_name, best_kind, best_bw = None, None, math.inf
@@ -330,3 +544,94 @@ def decode_stream_basin(*, decode_step_ms: float = 2.0,
                  latency_s=1e-3, jitter_s=client_jitter_ms / 1e3),
         ]
     )
+
+
+# ---------------------------------------------------------------------------
+# Pre-built branching (DAG) basins
+# ---------------------------------------------------------------------------
+
+def sharded_input_basin(n_shards: int = 2, *, shard_gbps: float = 4.0,
+                        shard_jitter_ms: float = 20.0,
+                        host_staging_gbps: float = 200.0,
+                        pcie_gbps: float = 128.0,
+                        hbm_gbps: float = 819.0 * 8.0) -> DrainageBasin:
+    """The fan-in training-input path: N dataset shards -> one host burst
+    buffer (merge node) -> PCIe -> device HBM.  Aggregate ingest is the
+    sum of shard-branch rates, conserved at the shared host tier."""
+    if n_shards < 1:
+        raise ValueError("need at least one shard")
+    shard_tiers = [
+        Tier(f"shard-{i}", TierKind.SOURCE, shard_gbps * GBPS,
+             latency_s=5e-3, jitter_s=shard_jitter_ms / 1e3)
+        for i in range(n_shards)
+    ]
+    tail = [
+        Tier("host-burst-buffer", TierKind.BURST_BUFFER,
+             host_staging_gbps * GBPS, latency_s=10e-6),
+        Tier("pcie", TierKind.CHANNEL, pcie_gbps * GBPS, latency_s=20e-6),
+        Tier("hbm", TierKind.SINK, hbm_gbps * GBPS, latency_s=1e-6),
+    ]
+    links = [Link(t.name, "host-burst-buffer") for t in shard_tiers]
+    links += [Link("host-burst-buffer", "pcie"), Link("pcie", "hbm")]
+    return DrainageBasin(shard_tiers + tail, links)
+
+
+def mirrored_checkpoint_basin(*, host_gbps: float = 200.0,
+                              nvme_gbps: float = 16.0,
+                              nvme_latency_ms: float = 0.2,
+                              nvme_jitter_ms: float = 2.0,
+                              object_gbps: float = 5.0,
+                              object_latency_ms: float = 20.0,
+                              object_jitter_ms: float = 15.0) -> DrainageBasin:
+    """The dual-tier checkpoint-save path: host snapshot -> serialize
+    staging (split node) -> {local NVMe, remote object store}.  Every
+    shard is replicated down both branches (a mirror, not a split of
+    traffic); restore picks whichever branch is modeled/measured faster."""
+    staging = Tier("serialize-staging", TierKind.BURST_BUFFER,
+                   host_gbps * GBPS, latency_s=10e-6)
+    return DrainageBasin(
+        tiers=[
+            Tier("host-snapshot", TierKind.SOURCE, host_gbps * GBPS,
+                 latency_s=10e-6),
+            staging,
+            Tier("nvme", TierKind.SINK, nvme_gbps * GBPS,
+                 latency_s=nvme_latency_ms / 1e3,
+                 jitter_s=nvme_jitter_ms / 1e3),
+            Tier("object-store", TierKind.SINK, object_gbps * GBPS,
+                 latency_s=object_latency_ms / 1e3,
+                 jitter_s=object_jitter_ms / 1e3),
+        ],
+        links=[
+            Link("host-snapshot", "serialize-staging"),
+            Link("serialize-staging", "nvme"),
+            Link("serialize-staging", "object-store"),
+        ],
+    )
+
+
+def decode_fanout_basin(n_clients: int = 2, *, decode_step_ms: float = 2.0,
+                        host_gbps: float = 200.0,
+                        client_gbps: float = 1.0,
+                        client_jitter_ms: float = 5.0) -> DrainageBasin:
+    """The serving decode fan-out: one accelerator token producer -> host
+    staging buffer (split node) -> N concurrent client sinks.  Each client
+    receives the full stream (replication); the staging tier decouples the
+    slowest client from the accelerator (§2.1), and per-branch plans let
+    ``replan`` attribute a stall to the one slow client instead of
+    degrading every stream."""
+    if n_clients < 1:
+        raise ValueError("need at least one client")
+    clients = [
+        Tier(f"client-{i}", TierKind.SINK, client_gbps * GBPS,
+             latency_s=1e-3, jitter_s=client_jitter_ms / 1e3)
+        for i in range(n_clients)
+    ]
+    tiers = [
+        Tier("decode-producer", TierKind.SOURCE, host_gbps * GBPS,
+             latency_s=decode_step_ms / 1e3),
+        Tier("token-staging", TierKind.BURST_BUFFER, host_gbps * GBPS,
+             latency_s=10e-6),
+    ] + clients
+    links = [Link("decode-producer", "token-staging")]
+    links += [Link("token-staging", c.name) for c in clients]
+    return DrainageBasin(tiers, links)

@@ -18,6 +18,17 @@ overlaps production).  Integrity checksums (the paper's encryption/
 checksumming budget, section 3.4) are computed *inside the staged path* so
 they overlap transit instead of serializing with it.
 
+Branching basins run through :meth:`UnifiedDataMover.parallel_transfer`:
+one stage pipeline per branch of a multipath
+:class:`~repro.core.planner.TransferPlan`, fed by a dispatcher that either
+**splits** the stream across branches (weighted by the plan's per-branch
+traffic shares — the fan-out/fan-in case) or **mirrors** every item down
+every branch (the replication case: a dual-tier checkpoint, a decode
+fan-out to many clients).  Branch reports come back tagged
+``"<branch>/<stage>"`` so online replanning attributes a mid-transfer
+stall to the one degraded branch and rebalances traffic toward the
+healthy ones.
+
 Every transfer returns a :class:`TransferReport` carrying achieved
 throughput and the fidelity gap against the planned basin — making the
 paper's headline metric a first-class, always-on observable.
@@ -29,12 +40,14 @@ import dataclasses
 import hashlib
 import threading
 import time
-from typing import Any, Callable, Iterable, Iterator, Optional, Sequence
+from typing import Any, Callable, Iterable, Iterator, Mapping, Optional, \
+    Sequence
 
 from .basin import DrainageBasin
-from .planner import TransferPlan, replan as _replan
-from .staging import Stage, StagePipeline, StageReport, _default_sizeof, \
-    iter_segments, merge_reports
+from .burst_buffer import BufferClosed, BurstBuffer
+from .planner import BranchPlan, TransferPlan, replan as _replan
+from .staging import ParallelBranchPipeline, Stage, StagePipeline, \
+    StageReport, _default_sizeof, iter_segments, merge_reports
 from .telemetry import TelemetryRegistry
 
 
@@ -68,6 +81,28 @@ class TransferReport:
             return None
         return min(self.stage_reports,
                    key=lambda r: r.throughput_bytes_per_s or float("inf"))
+
+
+class _StreamDigest:
+    """Order-independent integrity over an item stream: XOR of per-item
+    SHA-256 digests (commutative + associative), shared by the staged,
+    parallel-branch, and direct paths so their checksums stay comparable.
+    Thread-safe; a ``None``-mode instance is a no-op."""
+
+    def __init__(self, enabled: bool):
+        self._acc = bytearray(32) if enabled else None
+        self._lock = threading.Lock()
+
+    def add(self, item: Any) -> Any:
+        if self._acc is not None:
+            d = hashlib.sha256(_as_bytes(item)).digest()
+            with self._lock:
+                for i in range(32):
+                    self._acc[i] ^= d[i]
+        return item
+
+    def hexdigest(self) -> Optional[str]:
+        return bytes(self._acc).hex() if self._acc is not None else None
 
 
 @dataclasses.dataclass
@@ -168,18 +203,8 @@ class UnifiedDataMover:
         do_sum = self.config.checksum if checksum is None else checksum
 
         # order-independent integrity: concurrent staging workers may
-        # deliver items out of order, so the stream digest is the XOR of
-        # per-item SHA-256 digests (commutative + associative).
-        digest_acc = bytearray(32) if do_sum else None
-        hash_lock = threading.Lock()
-
-        def maybe_hash(item: Any) -> Any:
-            if digest_acc is not None:
-                d = hashlib.sha256(_as_bytes(item)).digest()
-                with hash_lock:
-                    for i in range(32):
-                        digest_acc[i] ^= d[i]
-            return item
+        # deliver items out of order (see _StreamDigest)
+        digest = _StreamDigest(do_sum)
 
         all_transforms = list(transforms)
         if do_sum:
@@ -190,7 +215,7 @@ class UnifiedDataMover:
             at = len(all_transforms)
             if plan is not None and plan.checksum_index is not None:
                 at = min(plan.checksum_index, at)
-            all_transforms.insert(at, ("checksum", maybe_hash))
+            all_transforms.insert(at, ("checksum", digest.add))
 
         # online replanning needs a plan to revise; without one the
         # transfer runs as a single segment
@@ -242,7 +267,7 @@ class UnifiedDataMover:
             bytes=nbytes,
             elapsed_s=elapsed,
             stage_reports=merged,
-            checksum=bytes(digest_acc).hex() if digest_acc is not None else None,
+            checksum=digest.hexdigest(),
             planned_bytes_per_s=planned,
             replans=replans,
         ))
@@ -298,6 +323,199 @@ class UnifiedDataMover:
                          workers, checksum, plan, replan_every_items,
                          replan_damping)
 
+    # -- parallel-branch path (DAG plans) --------------------------------------
+
+    def _branch_pipelines(
+        self,
+        plan: TransferPlan,
+        transforms: Sequence[tuple[str, Callable[[Any], Any]]]
+        | Mapping[str, Sequence[tuple[str, Callable[[Any], Any]]]],
+        capacity: Optional[int],
+        workers: Optional[int],
+    ) -> tuple[dict[str, BurstBuffer], ParallelBranchPipeline]:
+        """Per-branch input queue + stage chain from a multipath plan."""
+        queues: dict[str, BurstBuffer] = {}
+        branches: list[tuple[str, StagePipeline]] = []
+        for b in plan.branches:
+            tf = (transforms.get(b.branch_id, ())
+                  if isinstance(transforms, Mapping) else transforms)
+            named = list(tf) or [(b.hops[0].name, None)]
+            stages = []
+            for i, (name, fn) in enumerate(named):
+                hop = b.hop_for(i, name)
+                stages.append(Stage(
+                    name, capacity=capacity or hop.capacity,
+                    workers=workers or hop.workers, transform=fn,
+                    clock=self._clock))
+            q = BurstBuffer(b.hops[0].capacity,
+                            name=f"{b.branch_id}.inq", clock=self._clock)
+            queues[b.branch_id] = q
+            branches.append((b.branch_id, StagePipeline(q.drain(), stages)))
+        return queues, ParallelBranchPipeline(branches, clock=self._clock,
+                                              upstreams=queues)
+
+    @staticmethod
+    def _dispatch(segment: Iterator[Any], queues: dict[str, BurstBuffer],
+                  branch_plans: Sequence[BranchPlan], mode: str,
+                  on_item: Callable[[Any], Any]) -> Callable[[], None]:
+        """The split/merge node, executable: pulls the source and routes.
+
+        ``split``: weighted deficit round-robin over the plan's branch
+        weights — deterministic routing, so a simulated run is a pure
+        function of the script.  ``mirror``: every item goes down every
+        branch (replication), pacing at the slowest branch's intake.
+        """
+        weights = {b.branch_id: max(b.weight, 0.0) for b in branch_plans}
+        if sum(weights.values()) <= 0:
+            weights = {bid: 1.0 for bid in weights}
+        deficits = {bid: 0.0 for bid in weights}
+        order = [b.branch_id for b in branch_plans]
+
+        def run() -> None:
+            try:
+                for item in segment:
+                    on_item(item)
+                    if mode == "mirror":
+                        for bid in order:
+                            queues[bid].put(item)
+                        continue
+                    for bid in order:
+                        deficits[bid] += weights[bid]
+                    pick = max(order, key=lambda bid: deficits[bid])
+                    deficits[pick] -= 1.0
+                    queues[pick].put(item)
+            except BufferClosed:
+                pass
+            finally:
+                for q in queues.values():
+                    q.close()
+
+        return run
+
+    def parallel_transfer(
+        self,
+        source: Iterable[Any],
+        sink: Callable[[Any], None] | Mapping[str, Callable[[Any], None]],
+        *,
+        plan: Optional[TransferPlan] = None,
+        mode: str = "split",
+        transforms: Sequence[tuple[str, Callable[[Any], Any]]]
+        | Mapping[str, Sequence[tuple[str, Callable[[Any], Any]]]] = (),
+        capacity: Optional[int] = None,
+        workers: Optional[int] = None,
+        checksum: Optional[bool] = None,
+        replan_every_items: int = 0,
+        replan_damping: float = 0.5,
+    ) -> TransferReport:
+        """Move a stream down every branch of a multipath plan at once.
+
+        One stage pipeline per :class:`~repro.core.planner.BranchPlan`; a
+        dispatcher thread plays the split node.  ``mode="split"`` routes
+        each item down exactly one branch (weighted by the plan's branch
+        traffic shares — aggregate throughput is the sum over branches);
+        ``mode="mirror"`` replicates every item down every branch (the
+        dual-tier checkpoint / decode fan-out case — the dispatcher paces
+        at the slowest branch, which is the point: a mirror is only as
+        durable as its slowest copy).
+
+        ``transforms`` applies to every branch, or a mapping
+        ``branch_id -> transforms`` gives each branch its own chain (a
+        mirrored save writes different directories per branch).  ``sink``
+        likewise: one callable for all deliveries, or per-branch.
+        Integrity (``checksum``) hashes each *source* item once at the
+        split node, overlapping branch transit.
+
+        ``replan_every_items > 0`` revises the plan at segment boundaries
+        from branch-tagged reports: a degraded branch gets its verdict in
+        ``plan.diagnosis["<branch>/<hop>"]`` and loses traffic share to
+        healthy branches (split mode) on the next segment.  Items/bytes
+        in the returned report count *deliveries* (mirror mode moves each
+        item once per branch)."""
+        if mode not in ("split", "mirror"):
+            raise ValueError(f"unknown parallel mode {mode!r}")
+        own_plan = plan is None
+        plan = plan if plan is not None else self.plan
+        if plan is None or not plan.branches:
+            raise ValueError("parallel_transfer needs a branch-aware plan")
+        do_sum = self.config.checksum if checksum is None else checksum
+        digest = _StreamDigest(do_sum)
+
+        def sink_for(bid: str) -> Callable[[Any], None]:
+            if isinstance(sink, Mapping):
+                return sink[bid]
+            return sink
+
+        chunk = replan_every_items
+        active = plan
+        merged: list[StageReport] = []
+        last_reports: list[StageReport] = []
+        last_intake: dict[str, float] = {}
+        replans = 0
+        items = 0
+        nbytes = 0
+        t0 = self._clock()
+        for segment in iter_segments(iter(source), chunk):
+            if last_reports:
+                revised = _replan(active, last_reports,
+                                  damping=replan_damping,
+                                  intake_ratio=last_intake)
+                if (self._branch_params(revised)
+                        != self._branch_params(active)):
+                    replans += 1
+                active = revised
+            queues, pbp = self._branch_pipelines(active, transforms,
+                                                 capacity, workers)
+            dispatch = threading.Thread(
+                target=self._dispatch(segment, queues, active.branches,
+                                      mode, digest.add),
+                name="branch-dispatch", daemon=True)
+            t_seg0 = self._clock()
+            pbp.start()
+            dispatch.start()
+            for bid, item in pbp.output.drain():
+                sink_for(bid)(item)
+                items += 1
+                nbytes += _default_sizeof(item)
+            dispatch.join()
+            pbp.join()
+            t_seg = self._clock() - t_seg0
+            # the split node's per-branch backpressure: the attribution
+            # signal replan uses to single out a slow branch (§2.2)
+            last_intake = {
+                bid: (q.stats.producer_stall_s / t_seg if t_seg > 0 else 0.0)
+                for bid, q in queues.items()}
+            last_reports = pbp.reports()
+            merged = merge_reports([merged, last_reports])
+        elapsed = self._clock() - t0
+        self.last_plan = active
+        if own_plan and self.plan is not None:
+            self.plan = active
+        if mode == "mirror":
+            # replication paces at the slowest branch: every branch moves
+            # every item, so the honest promise is n x the weakest rate,
+            # not the split-mode aggregate
+            rates = [b.rate_bytes_per_s for b in plan.branches]
+            planned = len(rates) * min(rates)
+        else:
+            planned = plan.planned_bytes_per_s
+        return self._record(TransferReport(
+            mode=f"parallel-{mode}",
+            items=items,
+            bytes=nbytes,
+            elapsed_s=elapsed,
+            stage_reports=merged,
+            checksum=digest.hexdigest(),
+            planned_bytes_per_s=planned,
+            replans=replans,
+        ))
+
+    @staticmethod
+    def _branch_params(plan: TransferPlan) -> list[tuple]:
+        """The revision signature: staging params + routing weights."""
+        return [(b.branch_id, round(b.weight, 3),
+                 tuple((h.capacity, h.workers) for h in b.hops))
+                for b in plan.branches]
+
     # -- direct (un-staged) path, for comparison -------------------------------
 
     def direct_transfer(
@@ -311,15 +529,12 @@ class UnifiedDataMover:
         Fig. 11: every hop serializes with every other hop.  Used by
         benchmarks to quantify the staged-vs-direct fidelity delta."""
         do_sum = self.config.checksum if checksum is None else checksum
-        digest_acc = bytearray(32) if do_sum else None
+        digest = _StreamDigest(do_sum)
         items = 0
         nbytes = 0
         t0 = self._clock()
         for item in source:
-            if digest_acc is not None:
-                d = hashlib.sha256(_as_bytes(item)).digest()  # serial hash
-                for i in range(32):
-                    digest_acc[i] ^= d[i]
+            digest.add(item)                  # serial hash: the baseline
             sink(item)
             items += 1
             nbytes += _default_sizeof(item)
@@ -331,7 +546,7 @@ class UnifiedDataMover:
             bytes=nbytes,
             elapsed_s=elapsed,
             stage_reports=[],
-            checksum=bytes(digest_acc).hex() if digest_acc is not None else None,
+            checksum=digest.hexdigest(),
             planned_bytes_per_s=planned,
         ))
 

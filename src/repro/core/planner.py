@@ -23,6 +23,24 @@ decode token stream — builds its basin, asks :func:`plan_transfer` for a
 :class:`~repro.core.mover.UnifiedDataMover` / stage constructors.  No
 layer carries hard-coded staging constants.
 
+DAG basins and per-branch plans
+-------------------------------
+
+A branching basin (N dataset shards fanning in to one host, a checkpoint
+mirrored to two storage tiers, a decode stream fanning out to many
+clients) plans per **branch**: :func:`plan_transfer` enumerates the
+basin's root->sink paths, allocates each a rate under shared-tier rate
+conservation (:meth:`~repro.core.basin.DrainageBasin.branch_rates` —
+branch rates through a shared tier sum to no more than its effective
+rate), and derives an independent hop list per branch sized to that
+branch's allocated share.  The result is one :class:`TransferPlan` whose
+:attr:`~TransferPlan.branches` lists a :class:`BranchPlan` per path; its
+``planned_bytes_per_s`` is the *aggregate* over branches, and its
+``weight`` per branch is the share of traffic the parallel mover routes
+down that branch (``UnifiedDataMover.parallel_transfer``).  On a linear
+basin there is exactly one branch mirroring ``plan.hops`` — the
+pre-refactor behaviour, bit for bit.
+
 Adaptive re-planning (the paper's hypothesis -> change -> measure cycle,
 made mechanical): observed :class:`~repro.core.staging.StageReport` stall
 ratios feed back into the tier bandwidth estimates via :func:`replan`,
@@ -30,34 +48,25 @@ which returns a revised plan.  A hop that mostly *starved* (stall
 upstream) reveals the upstream tier is slower than modeled; a hop that
 mostly *backpressured* (stall downstream) reveals the downstream tier is.
 
-Worked example
---------------
+Per-branch attribution: parallel-branch reports arrive tagged
+``"<branch>/<stage>"``, and :func:`replan` attributes each branch's
+evidence to that branch alone.  Two rules keep one slow branch from
+uniformly degrading the whole plan:
 
->>> from repro.core.basin import DrainageBasin, Tier, TierKind, GBPS
->>> basin = DrainageBasin([
-...     Tier("src", TierKind.SOURCE, 10 * GBPS, latency_s=5e-3,
-...          jitter_s=20e-3),                      # erratic headwaters
-...     Tier("buf", TierKind.BURST_BUFFER, 100 * GBPS, latency_s=10e-6),
-...     Tier("dst", TierKind.SINK, 40 * GBPS, latency_s=1e-3),
-... ])
->>> plan = plan_transfer(basin, item_bytes=4 * 1024 ** 2,
-...                      stages=["decode", "stage"], checksum=True)
->>> [h.workers for h in plan.hops]      # erratic source hop needs concurrency
-[8, 1]
->>> [h.capacity for h in plan.hops]     # deep buffer absorbs the jitter
-[12, 2]
->>> plan.checksum_index                 # hashing rides the slack hop
-1
->>> plan.planned_bytes_per_s <= basin.achievable_throughput()
-True
+* **private-tier attribution** — a branch hop that is *busy* (no stalls,
+  yet underdelivering) spent its time in its own pull+transform service,
+  i.e. in the branch-private channel; the verdict lands on the branch's
+  private tier, never on a tier shared with healthy siblings.
+* **corroboration** — a branch's stall evidence may implicate a shared
+  tier only when every sibling branch crossing that tier shows evidence
+  against it too.  A lone branch starving upstream of a split node is a
+  routing shadow (traffic was sent elsewhere), not proof the shared tier
+  degraded.
 
-After running the transfer, feed the observed stage reports back:
-
->>> revised = replan(plan, stage_reports)           # doctest: +SKIP
->>> revised.hops[0].workers                         # doctest: +SKIP
-8
-
-and use ``revised`` for the next transfer — measure, adjust, repeat.
+The revised plan re-allocates branch rates from the updated estimates,
+so traffic rebalances toward healthy branches (their weights grow) while
+the degraded branch's verdict is preserved in
+:attr:`TransferPlan.diagnosis` under its ``"<branch>/<hop>"`` key.
 
 Regime diagnosis (latency-bound vs bandwidth-bound)
 ---------------------------------------------------
@@ -78,25 +87,6 @@ service-time reservoirs in :class:`~repro.core.staging.StageReport`
   pull the tier's ``bandwidth_gbps`` estimate toward the observed rate
   and accept the lower line rate.  More workers would not help.
 
-Worked example: the same 70 % stall ratio on the source hop, opposite
-service signatures::
-
-    # high-variance samples (5 ms +- 4 ms) -> latency-bound
-    >>> lat = replan(plan, [report_jittery])        # doctest: +SKIP
-    >>> lat.hops[0].workers                         # doctest: +SKIP
-    8                                               # was 2: workers UP
-    >>> lat.describe()                              # doctest: +SKIP
-    'TransferPlan(move[cap=24 w=8 src->dst]; planned=1250.0 MB/s,
-     checksum@None; diag[move=latency-bound(src)])'
-
-    # tight samples (21 ms +- 0.1 ms) -> saturated bandwidth
-    >>> bw = replan(plan, [report_saturated])       # doctest: +SKIP
-    >>> bw.basin.tiers[0].bandwidth_bytes_per_s     # doctest: +SKIP
-    5.0e7                                           # was 1.25e9: rate DOWN
-    >>> bw.describe()                               # doctest: +SKIP
-    'TransferPlan(move[cap=4 w=1 src->dst]; planned=50.0 MB/s,
-     checksum@None; diag[move=bandwidth-bound(src)])'
-
 Without service samples (an empty reservoir) replan falls back to the
 bandwidth remedy — the conservative pre-diagnosis behaviour.  A hop that
 never stalled but still underdelivered against its planned rate (busy on
@@ -106,16 +96,16 @@ busy-hop rule, exercised by ``benchmarks/online_replan.py``.
 Online replanning: the mover's ``replan_every_items`` runs a transfer in
 segments and feeds each segment's reports through :func:`replan` at the
 buffer boundary, so a mid-transfer regime shift is answered mid-transfer
-(see ``UnifiedDataMover.bulk_transfer``).
+(see ``UnifiedDataMover.bulk_transfer`` / ``parallel_transfer``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
-from .basin import DrainageBasin, Link, Tier
+from .basin import DrainageBasin, Tier
 from .staging import StageReport
 
 #: ceiling on per-hop concurrency (a planning guard, not a tuning knob:
@@ -137,10 +127,43 @@ class HopPlan:
     rate_bytes_per_s: float     # what this hop can sustain as planned
 
 
+def _hop_lookup(hops: Sequence[HopPlan], index: int,
+                name: str | None) -> HopPlan:
+    if name is not None:
+        for h in hops:
+            if h.name == name:
+                return h
+    return hops[min(index, len(hops) - 1)]
+
+
+@dataclasses.dataclass
+class BranchPlan:
+    """One root->sink branch of a (possibly branching) plan."""
+
+    branch_id: str                  # stable id ("nvme", "shard-0", ...)
+    path: tuple[str, ...]           # tier names, root -> sink
+    hops: list[HopPlan]
+    rate_bytes_per_s: float         # the branch's planned sustained rate
+    weight: float                   # share of traffic routed this way
+    #: tiers on this path no other branch crosses — where branch-local
+    #: evidence is attributed (see module docstring)
+    private_tiers: tuple[str, ...] = ()
+
+    def hop_for(self, index: int, name: str | None = None) -> HopPlan:
+        """Hop by stage name when it matches, else by position."""
+        return _hop_lookup(self.hops, index, name)
+
+
 @dataclasses.dataclass
 class TransferPlan:
     """A fully derived data path: per-hop parameters plus the promise
-    (``planned_bytes_per_s``) the fidelity gap is measured against."""
+    (``planned_bytes_per_s``) the fidelity gap is measured against.
+
+    ``branches`` always holds one :class:`BranchPlan` per root->sink path;
+    on a linear basin the single branch mirrors ``hops`` exactly.  On a
+    branching basin ``hops`` is the primary (highest-rate) branch's hop
+    list — kept for single-pipeline consumers — and
+    ``planned_bytes_per_s`` is the aggregate over branches."""
 
     hops: list[HopPlan]
     item_bytes: float
@@ -148,39 +171,74 @@ class TransferPlan:
     checksum_index: Optional[int]       # hop index carrying the digest, or None
     basin: DrainageBasin
     ordered: bool
-    #: hop name -> regime verdict (e.g. ``"latency-bound(src)"``) set by
+    #: hop name (or ``"<branch>/<hop>"``) -> regime verdict set by
     #: :func:`replan` on the revised plan; empty on a fresh derivation
     diagnosis: dict[str, str] = dataclasses.field(default_factory=dict)
+    branches: list[BranchPlan] = dataclasses.field(default_factory=list)
+    #: branching plans hash at the split node instead of riding one hop
+    checksum_at_split: bool = False
 
     @property
     def stages(self) -> list[str]:
         return [h.name for h in self.hops]
 
+    @property
+    def is_multipath(self) -> bool:
+        return len(self.branches) > 1
+
+    def branch(self, branch_id: str) -> BranchPlan:
+        for b in self.branches:
+            if b.branch_id == branch_id:
+                return b
+        raise KeyError(f"no branch {branch_id!r}")
+
     def hop_for(self, index: int, name: str | None = None) -> HopPlan:
         """Hop by stage name when it matches, else by position (extra
         stages beyond the planned hops inherit the last hop's params)."""
-        if name is not None:
-            for h in self.hops:
-                if h.name == name:
-                    return h
-        return self.hops[min(index, len(self.hops) - 1)]
+        return _hop_lookup(self.hops, index, name)
 
     @property
     def total_buffer_items(self) -> int:
-        return sum(h.capacity for h in self.hops)
+        hops = [h for b in self.branches for h in b.hops] or self.hops
+        return sum(h.capacity for h in hops)
 
     def describe(self) -> str:
-        hops = ", ".join(
-            f"{h.name}[cap={h.capacity} w={h.workers} "
-            f"{h.up_tier}->{h.down_tier}]" for h in self.hops)
+        """Operator surface: one line for a linear plan (unchanged from
+        the pre-DAG format), a per-branch topology summary otherwise."""
+        if not self.is_multipath:
+            diag = ""
+            if self.diagnosis:
+                diag = "; diag[" + ", ".join(
+                    f"{name}={verdict}"
+                    for name, verdict in sorted(self.diagnosis.items())) + "]"
+            hops = ", ".join(
+                f"{h.name}[cap={h.capacity} w={h.workers} "
+                f"{h.up_tier}->{h.down_tier}]" for h in self.hops)
+            return (f"TransferPlan({hops}; planned="
+                    f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
+                    f"checksum@{self.checksum_index}{diag})")
+        lines = [f"TransferPlan({len(self.branches)} branches, planned="
+                 f"{self.planned_bytes_per_s / 1e6:.1f} MB/s aggregate, "
+                 f"checksum@{'split' if self.checksum_at_split else 'None'}"]
+        shown = set()
+        for b in self.branches:
+            hops = ", ".join(
+                f"{h.name}[cap={h.capacity} w={h.workers} "
+                f"{h.up_tier}->{h.down_tier}]" for h in b.hops)
+            keys = [f"{b.branch_id}/{h.name}" for h in b.hops]
+            verdicts = [f"{k.split('/', 1)[1]}={self.diagnosis[k]}"
+                        for k in keys if k in self.diagnosis]
+            shown.update(k for k in keys if k in self.diagnosis)
+            tail = f"  !{'; '.join(verdicts)}" if verdicts else ""
+            lines.append(f"  {b.branch_id} w={b.weight:.2f} "
+                         f"@{b.rate_bytes_per_s / 1e6:.1f} MB/s: {hops}{tail}")
+        # verdicts carried over from branches no longer in the plan
+        stray = {k: v for k, v in self.diagnosis.items() if k not in shown}
         diag = ""
-        if self.diagnosis:
+        if stray:
             diag = "; diag[" + ", ".join(
-                f"{name}={verdict}"
-                for name, verdict in sorted(self.diagnosis.items())) + "]"
-        return (f"TransferPlan({hops}; planned="
-                f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
-                f"checksum@{self.checksum_index}{diag})")
+                f"{k}={v}" for k, v in sorted(stray.items())) + "]"
+        return "\n".join(lines) + f"{diag})"
 
 
 def _segment(tiers: Sequence[Tier], n_stages: int, j: int
@@ -221,32 +279,22 @@ def _worker_rate(up: Tier, down: Tier, item_bytes: float) -> float:
     return item_bytes / t
 
 
-def plan_transfer(
+def _plan_path(
     basin: DrainageBasin,
     item_bytes: float,
-    *,
-    stages: Sequence[str] = ("stage",),
-    checksum: bool = False,
-    ordered: bool = False,
-    max_workers: int = MAX_WORKERS,
-    max_capacity: int = MAX_CAPACITY,
-) -> TransferPlan:
-    """Derive per-hop staging parameters from the basin model.
-
-    ``stages`` names the hops the consumer will run (one
-    :class:`~repro.core.staging.Stage` each); the basin path is split
-    evenly across them.  ``ordered=True`` pins every hop to one worker —
-    required when item order must survive the transfer (training batches,
-    decode token streams); buffer depth still comes from the model, so
-    jitter absorption is preserved.
-    """
-    if item_bytes <= 0:
-        raise ValueError("item_bytes must be > 0")
-    if not stages:
-        raise ValueError("need at least one stage name")
+    stages: Sequence[str],
+    ordered: bool,
+    max_workers: int,
+    max_capacity: int,
+    target: float | None = None,
+) -> tuple[list[HopPlan], list[float], float]:
+    """Per-hop parameters for one *linear* path.  ``target`` overrides the
+    rate the hops are sized against (a branch's allocated share); default
+    is the path's own raw line rate."""
     tiers = basin.tiers
     n = len(stages)
-    target = _raw_line_rate(basin)
+    if target is None:
+        target = _raw_line_rate(basin)
 
     hops: list[HopPlan] = []
     headroom: list[float] = []          # uncapped sustainable rate per hop
@@ -279,14 +327,92 @@ def plan_transfer(
 
     planned = min(min(h.rate_bytes_per_s for h in hops),
                   basin.achievable_throughput())
-    checksum_index = None
-    if checksum:
-        # integrity rides the hop with the most headroom over the plan
-        checksum_index = max(range(len(hops)), key=lambda i: headroom[i])
-    return TransferPlan(hops=hops, item_bytes=float(item_bytes),
-                        planned_bytes_per_s=planned,
-                        checksum_index=checksum_index, basin=basin,
-                        ordered=ordered)
+    return hops, headroom, planned
+
+
+def _branch_ids(paths: Sequence[tuple[str, ...]]) -> list[str]:
+    """Shortest distinguishing name per path: the sink when sinks differ
+    (fan-out), the root when roots differ (fan-in), else the full path."""
+    sinks = [p[-1] for p in paths]
+    if len(set(sinks)) == len(paths):
+        return sinks
+    roots = [p[0] for p in paths]
+    if len(set(roots)) == len(paths):
+        return roots
+    return ["->".join(p) for p in paths]
+
+
+def plan_transfer(
+    basin: DrainageBasin,
+    item_bytes: float,
+    *,
+    stages: Sequence[str] = ("stage",),
+    checksum: bool = False,
+    ordered: bool = False,
+    max_workers: int = MAX_WORKERS,
+    max_capacity: int = MAX_CAPACITY,
+) -> TransferPlan:
+    """Derive per-hop staging parameters from the basin model.
+
+    ``stages`` names the hops the consumer will run (one
+    :class:`~repro.core.staging.Stage` each); each root->sink path is
+    split evenly across them.  ``ordered=True`` pins every hop to one
+    worker — required when item order must survive the transfer (training
+    batches, decode token streams); buffer depth still comes from the
+    model, so jitter absorption is preserved.
+
+    On a branching basin the returned plan carries one
+    :class:`BranchPlan` per root->sink path, each sized against its
+    conservation-allocated rate share; ``planned_bytes_per_s`` is the
+    aggregate and ``weight`` the traffic share per branch.
+    """
+    if item_bytes <= 0:
+        raise ValueError("item_bytes must be > 0")
+    if not stages:
+        raise ValueError("need at least one stage name")
+
+    if basin.is_linear:
+        hops, headroom, planned = _plan_path(
+            basin, item_bytes, stages, ordered, max_workers, max_capacity)
+        checksum_index = None
+        if checksum:
+            # integrity rides the hop with the most headroom over the plan
+            checksum_index = max(range(len(hops)), key=lambda i: headroom[i])
+        path = tuple(t.name for t in basin.tiers)
+        branch = BranchPlan(branch_id=path[-1], path=path, hops=hops,
+                            rate_bytes_per_s=planned, weight=1.0,
+                            private_tiers=path)
+        return TransferPlan(hops=hops, item_bytes=float(item_bytes),
+                            planned_bytes_per_s=planned,
+                            checksum_index=checksum_index, basin=basin,
+                            ordered=ordered, branches=[branch])
+
+    # -- branching basin: one plan per root->sink path -----------------------
+    paths = basin.paths()
+    rates = basin.branch_rates()
+    ids = _branch_ids(paths)
+    crossing = {t.name: sum(1 for p in paths if t.name in p)
+                for t in basin.tiers}
+    branches: list[BranchPlan] = []
+    for bid, path in zip(ids, paths):
+        sub = basin.path_basin(path)
+        hops, _, planned = _plan_path(
+            sub, item_bytes, stages, ordered, max_workers, max_capacity,
+            target=rates[path])
+        branches.append(BranchPlan(
+            branch_id=bid, path=path, hops=hops,
+            rate_bytes_per_s=planned, weight=0.0,
+            private_tiers=tuple(n for n in path if crossing[n] == 1)))
+    aggregate = sum(b.rate_bytes_per_s for b in branches)
+    for b in branches:
+        b.weight = (b.rate_bytes_per_s / aggregate) if aggregate > 0 \
+            else 1.0 / len(branches)
+    primary = max(branches, key=lambda b: b.rate_bytes_per_s)
+    return TransferPlan(hops=primary.hops, item_bytes=float(item_bytes),
+                        planned_bytes_per_s=aggregate,
+                        checksum_index=None, basin=basin,
+                        ordered=ordered, branches=branches,
+                        checksum_at_split=bool(checksum))
 
 
 # ---------------------------------------------------------------------------
@@ -318,13 +444,20 @@ def _percentiles(sorted_samples: Sequence[float]
             sorted_samples[int(0.9 * (n - 1))])
 
 
-def diagnose_service(samples: Sequence[float]) -> Optional[str]:
+def diagnose_service(samples: Sequence[float], *,
+                     workers: int = 1) -> Optional[str]:
     """Classify a stalled side's regime from its per-item service times.
 
     Returns ``"latency"`` (high-dispersion samples: stochastic per-item
     latency dominates — more concurrency is the remedy), ``"bandwidth"``
     (tight samples: the pipe is steadily saturated — accept the lower
     rate), or ``None`` when there are too few samples to say.
+
+    ``workers`` widens the dispersion threshold for samples taken by a
+    pool sharing one pipe: N workers on a saturated pipe see per-item
+    completions spread across ``[1x .. Nx]`` the transmit time (queueing
+    phase, not stochastic latency), so what counts as "dispersed" must
+    scale with the pool size.
     """
     if len(samples) < MIN_DIAGNOSIS_SAMPLES:
         return None
@@ -332,11 +465,182 @@ def diagnose_service(samples: Sequence[float]) -> Optional[str]:
     p10, med, p90 = _percentiles(s)
     if med <= 0:
         return None
-    return "latency" if (p90 - p10) / med > LATENCY_DISPERSION else "bandwidth"
+    threshold = LATENCY_DISPERSION + 0.5 * (max(1, workers) - 1)
+    return "latency" if (p90 - p10) / med > threshold else "bandwidth"
+
+
+@dataclasses.dataclass
+class _Evidence:
+    """One branch-hop's observed limitation, before attribution."""
+
+    branch: BranchPlan
+    hop: HopPlan
+    report: StageReport
+    up_limited: bool
+    busy: bool                  # the busy-hop rule fired (no stalls)
+    candidate_tier: str         # tier the raw stall accounting implicates
+    #: samples were taken by a worker pool sharing one saturated pipe
+    #: (dispatcher-fed culprit branch) — regime diagnosis must widen its
+    #: dispersion threshold by the pool size
+    pipe_shared: bool = False
+
+
+def _collect_evidence(plan: TransferPlan,
+                      reports: Sequence[StageReport],
+                      culprits: frozenset[str],
+                      has_intake: bool) -> list[_Evidence]:
+    """Per-branch-hop limitation evidence.
+
+    Two regimes.  With split-node intake data (``has_intake`` — the
+    parallel mover), per-worker stall accounting is phase noise across
+    competing branch pipelines; evidence reduces to the two robust
+    signals: a branch the split node singled out (``culprits``) that also
+    underdelivers over its *active* window is busy on its own channel —
+    everything else is a shadow of the culprit and carries no evidence.
+    Without intake data (a linear plan, or fan-in branches that own their
+    sources), the stall/busy classification is first-hand, as pre-DAG."""
+    by_name = {r.name: r for r in reports}
+    multipath = plan.is_multipath
+    out: list[_Evidence] = []
+    for branch in plan.branches:
+        for hop in branch.hops:
+            key = f"{branch.branch_id}/{hop.name}" if multipath else hop.name
+            rep = by_name.get(key)
+            if rep is None and multipath:
+                rep = by_name.get(hop.name)
+            if rep is None or rep.elapsed_s <= 0:
+                continue
+            if rep.throughput_bytes_per_s <= 0:
+                continue
+            # rate over the stage's *active* window: a branch that
+            # finished its share early and idled behind a slow sibling
+            # must not read that tail as underdelivery
+            active = rep.active_s if rep.active_s > 0 else rep.elapsed_s
+            active_rate = rep.bytes / active if active > 0 else 0.0
+            underdelivered = (active_rate
+                              < hop.rate_bytes_per_s
+                              * (1.0 - STALL_THRESHOLD))
+            if has_intake and multipath:
+                if branch.branch_id not in culprits or not underdelivered:
+                    continue
+                out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                     up_limited=True, busy=True,
+                                     candidate_tier=hop.up_tier,
+                                     pipe_shared=True))
+                continue
+            worker_time = rep.elapsed_s * hop.workers
+            r_up = rep.stall_up_s / worker_time
+            r_down = rep.stall_down_s / worker_time
+            busy = False
+            if max(r_up, r_down) >= STALL_THRESHOLD:
+                # the side we mostly waited on is the side that limited us
+                up_limited = r_up >= r_down
+            elif (len(rep.service_up_s) >= MIN_DIAGNOSIS_SAMPLES
+                  and underdelivered):
+                # the busy-hop case: no waiting on either side, yet the hop
+                # underdelivered against its own planned rate — its per-item
+                # acquisition service (pull + transform, the modeled upstream
+                # tier) is slower than planned; the samples say which regime
+                up_limited = True
+                busy = True
+            else:
+                continue
+            out.append(_Evidence(
+                branch=branch, hop=hop, report=rep, up_limited=up_limited,
+                busy=busy,
+                candidate_tier=hop.up_tier if up_limited else hop.down_tier))
+    return out
+
+
+def _intake_culprits(plan: TransferPlan,
+                     intake_ratio: Optional[Mapping[str, float]]
+                     ) -> frozenset[str]:
+    """Branches the split node's backpressure singles out as slow.
+
+    The parallel mover measures, per branch, the fraction of the segment
+    its dispatcher spent blocked pushing into that branch's intake queue
+    (§2.2: coordination through buffer state).  A backpressure ratio both
+    above the stall threshold and well above the *least* backpressured
+    sibling marks a culprit: the branch is draining its share slower than
+    the split node can supply it.  When every branch backpressures alike
+    (a healthy, well-fed fan-out) nobody is flagged — the relative test
+    is what separates "this branch is slow" from "supply outruns all"."""
+    if not intake_ratio or not plan.is_multipath:
+        return frozenset()
+    vals = [intake_ratio.get(b.branch_id, 0.0) for b in plan.branches]
+    floor = min(vals)
+    return frozenset(
+        b.branch_id for b in plan.branches
+        if intake_ratio.get(b.branch_id, 0.0) >= STALL_THRESHOLD
+        and intake_ratio.get(b.branch_id, 0.0) > 2.0 * floor)
+
+
+def _attributed_tier(ev: _Evidence, evidence: Sequence[_Evidence],
+                     plan: TransferPlan,
+                     culprits: frozenset[str],
+                     has_intake: bool) -> Optional[str]:
+    """Resolve one piece of evidence to the tier it actually indicts.
+
+    Linear plans: the raw candidate, as always.  Branching plans apply
+    the private-tier and corroboration rules (module docstring): evidence
+    from a culprit branch (split-node backpressure singled it out) or
+    busy evidence lands on the branch's private tier; stall evidence
+    against a shared tier needs every sibling branch crossing that tier
+    to concur, else it is a routing shadow and is dropped.  When split-
+    node backpressure data exists (``has_intake``) it overrides the
+    noisier per-worker accounting: with culprits flagged, only their
+    evidence counts; with none flagged, busy evidence is discarded
+    (underdelivery without intake asymmetry indicts the shared supply,
+    never one branch)."""
+    if not plan.is_multipath:
+        return ev.candidate_tier
+    private = (ev.branch.private_tiers[-1] if ev.branch.private_tiers
+               else ev.candidate_tier)
+    if has_intake:
+        # evidence was pre-filtered to culprit branches that underdeliver
+        # over their active window (_collect_evidence): the defect is in
+        # the branch's own channel, i.e. its deepest private tier
+        return private
+    # no intake data (each branch owns a real source — the fan-in case):
+    # per-worker accounting is first-hand evidence
+    if ev.busy:
+        # time went into this branch's own pull+transform — its private
+        # channel.  Deepest private tier = the branch-specific element.
+        return private
+    tier = ev.candidate_tier
+    if tier in ev.branch.private_tiers:
+        return tier
+    return tier if _corroborated(ev, evidence, plan, tier, culprits) else None
+
+
+def _corroborated(ev: _Evidence, evidence: Sequence[_Evidence],
+                  plan: TransferPlan, tier: str,
+                  culprits: frozenset[str]) -> bool:
+    """Shared-tier evidence holds only when every sibling branch crossing
+    the tier implicates it too; a lone branch starving upstream of a
+    split node is a routing shadow."""
+    siblings = [b for b in plan.branches
+                if b.branch_id != ev.branch.branch_id and tier in b.path]
+    for sib in siblings:
+        if not any(e.branch.branch_id == sib.branch_id
+                   and _raw_or_private(e, culprits) == tier
+                   for e in evidence):
+            return False
+    return True
+
+
+def _raw_or_private(ev: _Evidence, culprits: frozenset[str]) -> str:
+    """The tier a sibling's evidence points at, for corroboration checks."""
+    if ((ev.busy or ev.branch.branch_id in culprits)
+            and ev.branch.private_tiers):
+        return ev.branch.private_tiers[-1]
+    return ev.candidate_tier
 
 
 def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
-           damping: float = 0.5) -> TransferPlan:
+           damping: float = 0.5,
+           intake_ratio: Optional[Mapping[str, float]] = None
+           ) -> TransferPlan:
     """Revise a plan from observed stall ratios and service-time samples.
 
     For each hop, the stall accounting of its :class:`StageReport` says
@@ -353,6 +657,17 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
       the tier's bandwidth estimate toward the hop's observed throughput
       and accept the reduced line rate.
 
+    On a branching plan, reports tagged ``"<branch>/<stage>"`` attribute
+    per branch (private-tier + corroboration rules, module docstring),
+    and the rebuilt plan re-allocates branch rates from the revised
+    estimates — traffic rebalances toward healthy branches instead of
+    the whole plan degrading uniformly.  ``intake_ratio`` (branch id ->
+    fraction of the segment the split node spent backpressured against
+    that branch's intake, supplied by the parallel mover) sharpens the
+    attribution: a branch the split node singles out is a culprit and
+    its evidence lands on its private tier whatever the raw stall side
+    says (see :func:`_intake_culprits`).
+
     ``damping`` blends old estimate and observation (1.0 = trust the
     measurement outright).  Returns a new :class:`TransferPlan` built on
     the re-estimated basin, its per-hop verdicts in
@@ -368,32 +683,54 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     # replans keeps showing what was learned even after the remedy quiets
     # the stall (describe() is the operator surface)
     diagnosis: dict[str, str] = dict(plan.diagnosis)
-    by_name = {r.name: r for r in reports}
-    for hop in plan.hops:
-        rep = by_name.get(hop.name)
-        if rep is None or rep.elapsed_s <= 0:
-            continue
-        observed = rep.throughput_bytes_per_s
-        if observed <= 0:
-            continue
-        worker_time = rep.elapsed_s * hop.workers
-        r_up = rep.stall_up_s / worker_time
-        r_down = rep.stall_down_s / worker_time
-        if max(r_up, r_down) >= STALL_THRESHOLD:
-            # the side we mostly waited on is the side that limited us
-            up_limited = r_up >= r_down
-        elif (len(rep.service_up_s) >= MIN_DIAGNOSIS_SAMPLES
-              and observed < hop.rate_bytes_per_s * (1.0 - STALL_THRESHOLD)):
-            # the busy-hop case: no waiting on either side, yet the hop
-            # underdelivered against its own planned rate — its per-item
-            # acquisition service (pull + transform, the modeled upstream
-            # tier) is slower than planned; the samples say which regime
-            up_limited = True
+    culprits = _intake_culprits(plan, intake_ratio)
+    evidence = _collect_evidence(plan, reports, culprits,
+                                 intake_ratio is not None)
+    multipath = plan.is_multipath
+    resolved = []
+    for ev in evidence:
+        tier_name = _attributed_tier(ev, evidence, plan, culprits,
+                                     intake_ratio is not None)
+        if tier_name is not None:
+            resolved.append((ev, tier_name))
+    # one application per tier: corroborated shared-tier evidence arrives
+    # once per branch, but each branch only saw its own traffic share —
+    # the tier's effective rate is the SUM over corroborating branches,
+    # applied once (N damped per-share updates would collapse a healthy
+    # shared tier's estimate to ~1/N of reality)
+    grouped: dict[str, list[_Evidence]] = {}
+    order: list[str] = []
+    for ev, tier_name in resolved:
+        if multipath and tier_name not in ev.branch.private_tiers:
+            key = tier_name
         else:
-            continue
-        tier_name = hop.up_tier if up_limited else hop.down_tier
-        samples = rep.service_up_s if up_limited else rep.service_down_s
-        regime = diagnose_service(samples)
+            key = f"{ev.branch.branch_id}\x00{ev.hop.name}\x00{tier_name}"
+        if key not in grouped:
+            grouped[key] = []
+            order.append(key)
+        grouped[key].append(ev)
+
+    def _active_rate(e: _Evidence) -> float:
+        rep = e.report
+        active = rep.active_s if rep.active_s > 0 else rep.elapsed_s
+        return rep.bytes / active
+
+    for key in order:
+        evs = grouped[key]
+        tier_name = key if "\x00" not in key else key.split("\x00")[2]
+        # one contribution per distinct report: with untagged reports (a
+        # multipath plan driven through a single pipeline) the lookup
+        # fallback hands every branch the SAME report, and summing or
+        # pooling it once per branch would inflate the estimate N-fold
+        uniq = list({id(e.report): e for e in evs}.values())
+        samples = [s for e in uniq
+                   for s in (e.report.service_up_s if e.up_limited
+                             else e.report.service_down_s)]
+        pool = max((e.hop.workers for e in evs if e.pipe_shared),
+                   default=1)
+        regime = diagnose_service(samples, workers=pool)
+        diag_keys = [(f"{e.branch.branch_id}/{e.hop.name}" if multipath
+                      else e.hop.name) for e in evs]
         if regime == "latency":
             # the pipe is fine; per-item setup cost is what we waited on.
             # median service over the modeled transmit time is the latency
@@ -405,26 +742,31 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
                                   + damping * max(0.0, med - transmit))
             jit_est[tier_name] = ((1.0 - damping) * jit_est[tier_name]
                                   + damping * max(0.0, p90 - p10))
-            diagnosis[hop.name] = f"latency-bound({tier_name})"
+            for k in diag_keys:
+                diagnosis[k] = f"latency-bound({tier_name})"
         else:
             # saturated (or undiagnosable): the limiting side's *effective*
-            # delivery rate was the hop's observed throughput
+            # delivery rate was the observed throughput — summed over the
+            # corroborating branches' distinct reports for a shared tier,
+            # and over the active window, so a parallel branch's idle
+            # tail (waiting for a slower sibling) does not deflate it
+            observed = sum(_active_rate(e) for e in uniq)
             est[tier_name] = ((1.0 - damping) * est[tier_name]
                               + damping * observed)
             if regime == "bandwidth":
-                diagnosis[hop.name] = f"bandwidth-bound({tier_name})"
+                for k in diag_keys:
+                    diagnosis[k] = f"bandwidth-bound({tier_name})"
 
     new_tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=est[t.name],
                                      latency_s=lat_est[t.name],
                                      jitter_s=jit_est[t.name])
                  for t in plan.basin.tiers]
-    # explicit links are physical (bandwidth + rtt) and survive; implicit
-    # ones were derived from the old tier estimates and must re-derive,
-    # otherwise an upward revision stays clamped at the stale link rate
-    links = plan.basin.links if plan.basin.explicit_links else None
-    new_basin = DrainageBasin(new_tiers, links)
+    # derived links re-derive from the revised tiers, explicit (physical)
+    # links survive — replace_tiers encodes that distinction
+    new_basin = plan.basin.replace_tiers(new_tiers)
     revised = plan_transfer(
         new_basin, plan.item_bytes, stages=plan.stages,
-        checksum=plan.checksum_index is not None, ordered=plan.ordered)
+        checksum=plan.checksum_index is not None or plan.checksum_at_split,
+        ordered=plan.ordered)
     revised.diagnosis = diagnosis
     return revised

@@ -21,6 +21,12 @@ Design points lifted from the paper:
   paper's concurrent data mover (section 3.1: latency insensitivity).
 * **Measurability** — per-stage stall/throughput stats expose where the
   basin actually chokes, so the fidelity gap can be attributed.
+
+Branching paths (DAG basins) run as a :class:`ParallelBranchPipeline`:
+one :class:`StagePipeline` per branch, each with its own source, all
+draining into a shared merge buffer as ``(branch_id, item)`` pairs, and
+every branch's :class:`StageReport` tagged ``"<branch>/<stage>"`` so the
+planner's ``replan`` can attribute a stall to the one degraded branch.
 """
 
 from __future__ import annotations
@@ -75,6 +81,12 @@ class StageReport:
     stall_up_s: float      # waiting on upstream (source starvation)
     stall_down_s: float    # waiting on our buffer (downstream backpressure)
     errors: int
+    #: start -> last completed item: the stage's *active* window.  In a
+    #: parallel-branch segment a fast branch finishes early and idles
+    #: until the slowest branch drains; rates judged over ``elapsed_s``
+    #: would read that idle tail as underdelivery.  0.0 = unknown (treat
+    #: as ``elapsed_s``).
+    active_s: float = 0.0
     #: bounded reservoir of per-item upstream service times (pull->item);
     #: the regime signature planner.replan diagnoses latency- vs
     #: bandwidth-bound stalls from
@@ -135,6 +147,7 @@ def merge_reports(chunks: Sequence[Sequence[StageReport]]) -> list[StageReport]:
             m.items += r.items
             m.bytes += r.bytes
             m.elapsed_s += r.elapsed_s
+            m.active_s += r.active_s
             m.stall_up_s += r.stall_up_s
             m.stall_down_s += r.stall_down_s
             m.errors += r.errors
@@ -175,6 +188,7 @@ class Stage(Generic[T, U]):
         self._finished = 0
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
+        self._t_last: Optional[float] = None
         self._service_up = _Reservoir()
         self._service_down = _Reservoir(seed=0xD011)
 
@@ -219,6 +233,7 @@ class Stage(Generic[T, U]):
                         self._items += 1
                         self._bytes += self.sizeof(out)
                         self._service_down.add(dt_down)
+                        self._t_last = self._clock()
             except Exception:
                 with self._lock:
                     self._errors += 1
@@ -248,6 +263,16 @@ class Stage(Generic[T, U]):
 
     # -- reporting -----------------------------------------------------------
 
+    def reset_service_reservoirs(self) -> None:
+        """Start fresh per-item service windows.  Online replanning over
+        a continuously running stage consumes samples one revision window
+        at a time; without a reset, a long-gone regime's samples linger
+        in the uniform reservoir and keep polluting every later
+        diagnosis."""
+        with self._lock:
+            self._service_up = _Reservoir()
+            self._service_down = _Reservoir(seed=0xD011)
+
     def report(self) -> StageReport:
         # explicit None checks: a virtual clock legitimately starts at 0.0
         end = self._t_end if self._t_end is not None else self._clock()
@@ -258,6 +283,8 @@ class Stage(Generic[T, U]):
                 items=self._items,
                 bytes=self._bytes,
                 elapsed_s=end - start,
+                active_s=(self._t_last - start
+                          if self._t_last is not None else 0.0),
                 stall_up_s=self._stall_up_s,
                 stall_down_s=self.buffer.stats.producer_stall_s,
                 errors=self._errors,
@@ -326,6 +353,100 @@ class StagePipeline:
         """The slowest stage by observed throughput (ties to basin model)."""
         reps = self.reports()
         return min(reps, key=lambda r: r.throughput_bytes_per_s or float("inf"))
+
+
+class ParallelBranchPipeline:
+    """Parallel-branch execution: one :class:`StagePipeline` per branch.
+
+    Each branch runs its own stage chain over its own source (a fan-in of
+    shard iterators, or the per-branch queues a mover's dispatcher fills
+    for fan-out).  Branch outputs drain concurrently into one shared
+    merge buffer as ``(branch_id, item)`` pairs — the executable form of
+    a fan-in (merge) node — and :meth:`reports` returns every branch's
+    stage reports with names tagged ``"<branch>/<stage>"``, the key
+    :func:`repro.core.planner.replan` uses for per-branch attribution.
+    """
+
+    def __init__(self, branches: Sequence[tuple[str, StagePipeline]], *,
+                 merge_capacity: int = 8,
+                 clock: Optional[Callable[[], float]] = None,
+                 upstreams: Optional[dict[str, BurstBuffer]] = None):
+        if not branches:
+            raise ValueError("need at least one branch")
+        ids = [bid for bid, _ in branches]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate branch ids: {ids}")
+        self.branches = list(branches)
+        self._clock = clock or time.monotonic
+        self.merge: BurstBuffer[tuple[str, Any]] = BurstBuffer(
+            merge_capacity, name="branch-merge", clock=self._clock)
+        # per-branch feed buffers to close when that branch exits: on a
+        # branch failure this unblocks a dispatcher mid-put instead of
+        # deadlocking it against a pipeline that stopped pulling
+        self._upstreams = dict(upstreams or {})
+        self._drainers: list[threading.Thread] = []
+        self._open_branches = 0
+        self._lock = threading.Lock()
+        self._started = False
+
+    def start(self) -> "ParallelBranchPipeline":
+        if self._started:
+            raise RuntimeError("pipeline already started")
+        self._started = True
+        self._open_branches = len(self.branches)
+
+        def drain(bid: str, pipe: StagePipeline) -> None:
+            try:
+                for item in pipe.output.drain():
+                    try:
+                        self.merge.put((bid, item))
+                    except BufferClosed:
+                        return
+            finally:
+                up = self._upstreams.get(bid)
+                if up is not None:
+                    up.close()
+                with self._lock:
+                    # last branch out closes the merge (mirror of the
+                    # last-worker-out rule inside Stage)
+                    self._open_branches -= 1
+                    if self._open_branches == 0:
+                        self.merge.close()
+
+        for bid, pipe in self.branches:
+            pipe.start()
+        self._drainers = [
+            threading.Thread(target=drain, args=(bid, pipe),
+                             name=f"drain-{bid}", daemon=True)
+            for bid, pipe in self.branches
+        ]
+        for t in self._drainers:
+            t.start()
+        return self
+
+    @property
+    def output(self) -> BurstBuffer:
+        """The merge buffer; yields ``(branch_id, item)`` pairs."""
+        return self.merge
+
+    def __iter__(self) -> Iterator[tuple[str, Any]]:
+        if not self._started:
+            self.start()
+        return self.merge.drain()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for _, pipe in self.branches:
+            pipe.join(timeout)
+        for t in self._drainers:
+            t.join(timeout)
+
+    def reports(self) -> list[StageReport]:
+        """Every branch's stage reports, names tagged ``<branch>/<stage>``."""
+        out: list[StageReport] = []
+        for bid, pipe in self.branches:
+            for r in pipe.reports():
+                out.append(dataclasses.replace(r, name=f"{bid}/{r.name}"))
+        return out
 
 
 def _default_sizeof(x: Any) -> int:

@@ -22,6 +22,7 @@ import dataclasses
 import json
 import os
 import threading
+import time
 from typing import TYPE_CHECKING, Optional
 
 if TYPE_CHECKING:          # circular-import guard (mover imports telemetry)
@@ -150,6 +151,21 @@ class TelemetryRegistry:
         with open(tmp, "w") as f:
             f.write(payload)
         os.replace(tmp, path)
+
+    def append_jsonl(self, path: str, *,
+                     timestamp: Optional[float] = None) -> None:
+        """Append one snapshot line to a JSONL time series.
+
+        Where :meth:`dump_json` overwrites a point-in-time file, this
+        keeps the history: one compact JSON object per flush, stamped
+        with wall time, so a dashboard (or
+        ``examples/telemetry_timeseries.py``) can plot per-layer rate
+        trends over a run.  Aggregates are cumulative-from-start; the
+        consumer differences adjacent lines for interval rates."""
+        snapshot = json.loads(self.to_json())
+        snapshot["ts"] = time.time() if timestamp is None else timestamp
+        with open(path, "a") as f:
+            f.write(json.dumps(snapshot, sort_keys=True) + "\n")
 
     def clear(self) -> None:
         with self._lock:

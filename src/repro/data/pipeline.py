@@ -27,11 +27,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.basin import DrainageBasin, tpu_input_basin
+from repro.core.basin import DrainageBasin, sharded_input_basin, \
+    tpu_input_basin
 from repro.core.mover import TransferReport
 from repro.core.planner import TransferPlan, plan_transfer, replan
-from repro.core.staging import (Stage, StagePipeline, StageReport,
-                                iter_segments, merge_reports)
+from repro.core.staging import (ParallelBranchPipeline, Stage, StagePipeline,
+                                StageReport, iter_segments, merge_reports)
 from repro.core.telemetry import TelemetryRegistry, get_registry
 from repro.models.config import ModelConfig
 
@@ -151,6 +152,19 @@ class InputPipeline:
     order is preserved.  A mid-epoch regime shift in the dataset store is
     answered mid-epoch, not at the next epoch.  ``replan()`` remains
     callable between iterations for epoch-cadence revision.
+
+    **Shard fan-in**: pass a *list* of sources and the pipeline plans the
+    N-shard -> host merge topology
+    (:func:`~repro.core.basin.sharded_input_basin`): one planned pull
+    branch per shard, all merging into the shared decode/place path via a
+    :class:`~repro.core.staging.ParallelBranchPipeline`.  Per-shard stage
+    reports come back tagged ``"shard-k/pull"``, so ``replan()`` revises
+    each shard branch independently (one slow shard is attributed, not
+    averaged over the fleet).  Batch order is preserved *within* a shard;
+    interleaving across shards follows delivery order.  Online segmented
+    replanning (``replan_every_items``) applies to the merged decode/place
+    tail, with the shard plan revising at the same cadence; the basin (or
+    a custom one) must plan exactly one branch per shard source.
     """
 
     def __init__(self, source: Any, *, basin: Optional[DrainageBasin] = None,
@@ -160,10 +174,21 @@ class InputPipeline:
                  plan: Optional[TransferPlan] = None,
                  telemetry: Optional[TelemetryRegistry] = None,
                  replan_every_items: Optional[int] = None):
+        self.sources: Optional[list[Any]] = None
+        if isinstance(source, (list, tuple)):
+            if len(source) > 1:
+                self.sources = list(source)
+            else:
+                source = source[0]
         self.source = source
-        self.basin = basin or (plan.basin if plan is not None
-                               else tpu_input_basin())
-        self.pc = pc or getattr(source, "pc", PipelineConfig(1, 128))
+        if self.sources is not None:
+            self.basin = basin or (plan.basin if plan is not None
+                                   else sharded_input_basin(len(self.sources)))
+        else:
+            self.basin = basin or (plan.basin if plan is not None
+                                   else tpu_input_basin())
+        self.pc = pc or getattr(self.sources[0] if self.sources else source,
+                                "pc", PipelineConfig(1, 128))
         self.mesh = mesh
         self.batch_axes = batch_axes
         self.to_device = to_device
@@ -173,9 +198,35 @@ class InputPipeline:
             else getattr(self.pc, "replan_every_items", 0) or 0)
         self.item_bytes = self._estimate_item_bytes()
         ordered = not (self.pc.staging_workers and self.pc.staging_workers > 1)
-        self.plan = plan or plan_transfer(
-            self.basin, self.item_bytes, stages=("decode", "stage"),
-            ordered=ordered)
+        #: fan-in only: the multipath plan for the per-shard pull branches
+        self.shard_plan: Optional[TransferPlan] = None
+        if self.sources is not None:
+            self.shard_plan = plan_transfer(
+                self.basin, self.item_bytes, stages=("pull",),
+                ordered=ordered)
+            if len(self.shard_plan.branches) != len(self.sources):
+                raise ValueError(
+                    f"fan-in basin plans {len(self.shard_plan.branches)} "
+                    f"branches but {len(self.sources)} shard sources were "
+                    "given; pass a basin with one root->sink path per "
+                    "shard (e.g. sharded_input_basin(n_shards))")
+            # the shared tail (merge tier onward) runs as one linear
+            # decode/place pipeline fed by the merged shard branches
+            tail_path = self.basin.paths()[0]
+            tail = self.basin.path_basin(tail_path)
+            tail_basin = DrainageBasin(tail.tiers[1:])
+            self.plan = plan or plan_transfer(
+                tail_basin, self.item_bytes, stages=("decode", "stage"),
+                ordered=ordered)
+            self._clamp_tail_promise()
+        else:
+            self.plan = plan or plan_transfer(
+                self.basin, self.item_bytes, stages=("decode", "stage"),
+                ordered=ordered)
+        self._shard_pbp: Optional[ParallelBranchPipeline] = None
+        #: per-stage totals already consumed by a shard-plan revision
+        #: (see _fresh_shard_reports)
+        self._shard_seen: dict[str, StageReport] = {}
         self._pipeline: Optional[StagePipeline] = None
         self._t_start: Optional[float] = None
         self._recorded = False
@@ -232,37 +283,82 @@ class InputPipeline:
         # run's stage reports
         self._active_plan = self.plan
         self._pipeline = None
+        self._shard_pbp = None
+        self._shard_seen = {}
         self._prior_reports = []
         self._prior_consumer_stall_s = 0.0
         self._delivered = 0
         self._t_start = time.monotonic()
         self._recorded = False
 
+        if self.sources is not None:
+            return self._run_fanin()
+
         def run() -> Iterator[dict]:
-            for segment in iter_segments(iter(self.source),
-                                         self.replan_every_items):
-                if self._pipeline is not None:
-                    # segment boundary == buffer boundary: every staged
-                    # batch was delivered, so the plan can swap without
-                    # loss; fold the drained segment's stalls into the
-                    # next plan before building it
-                    self.replan(_fresh_only=True)
-                    self._prior_reports = merge_reports(
-                        [self._prior_reports, self._pipeline.reports()])
-                    self._prior_consumer_stall_s += \
-                        self._pipeline.output.stats.consumer_stall_s
-                self._pipeline = StagePipeline(segment, self._build_stages())
-                for item in self._pipeline:
-                    self._delivered += 1
-                    yield item
+            yield from self._run_segments(iter(self.source))
             self.record_telemetry()
 
         return run()
 
+    def _run_segments(self, source_it: Iterator[Any]) -> Iterator[dict]:
+        """The online-replanning boundary protocol, shared by the linear
+        and fan-in paths: run the stream in segments; at each segment
+        boundary (== buffer boundary: every staged batch was delivered,
+        so the plan can swap without loss) fold the drained pipeline's
+        stalls into the next plan before rebuilding on it."""
+        for segment in iter_segments(source_it, self.replan_every_items):
+            if self._pipeline is not None:
+                self.replan(_fresh_only=True)
+                self._prior_reports = merge_reports(
+                    [self._prior_reports, self._pipeline.reports()])
+                self._prior_consumer_stall_s += \
+                    self._pipeline.output.stats.consumer_stall_s
+            self._pipeline = StagePipeline(segment, self._build_stages())
+            for item in self._pipeline:
+                self._delivered += 1
+                yield item
+
+    def _clamp_tail_promise(self) -> None:
+        """Fan-in only: the tail plan alone promises the merge-to-device
+        rate, but delivery is bounded by the shard branches' conserved
+        aggregate — the fidelity gap must measure against the slower of
+        the two or it reads ~1.0 even when every tier performs as
+        modeled."""
+        if self.shard_plan is not None:
+            self.plan.planned_bytes_per_s = min(
+                self.plan.planned_bytes_per_s,
+                self.shard_plan.planned_bytes_per_s)
+
+    def _run_fanin(self) -> Iterator[dict]:
+        """One planned pull branch per shard source, merged into the
+        shared decode/place tail — the executable N-shard fan-in.
+
+        Online segmented replanning (``replan_every_items``) applies to
+        the merged tail: the shard branch pipelines run continuously
+        (their merge buffer simply backpressures across the boundary)
+        while the decode/place stages drain and rebuild on the revised
+        tail plan.  The shard plan itself revises at the same cadence
+        from the cumulative ``shard-k/pull`` reports."""
+        branches = []
+        for b, src in zip(self.shard_plan.branches, self.sources):
+            hop = b.hops[0]
+            branches.append((b.branch_id, StagePipeline(
+                iter(src),
+                [Stage(hop.name, capacity=hop.capacity,
+                       workers=hop.workers)])))
+        self._shard_pbp = ParallelBranchPipeline(branches)
+        merged = (item for _bid, item in self._shard_pbp)
+        yield from self._run_segments(merged)
+        self._shard_pbp.join()
+        self.record_telemetry()
+
     def reports(self) -> list[StageReport]:
-        """Per-stage reports merged over every segment run so far."""
+        """Per-stage reports merged over every segment run so far; in
+        fan-in mode the per-shard pull reports (tagged ``shard-k/pull``)
+        ride along."""
         live = self._pipeline.reports() if self._pipeline else []
-        return merge_reports([self._prior_reports, live])
+        shard = self._shard_pbp.reports() if self._shard_pbp else []
+        return merge_reports([self._prior_reports, shard, live])
 
     def record_telemetry(self) -> Optional[TransferReport]:
         """Record the stream's progress so far (for consumers that stop
@@ -293,14 +389,59 @@ class InputPipeline:
         only the final segment (the one no boundary folded) — already-
         consumed segments are not re-applied.  A manual call *mid*-
         segment still overlaps the upcoming boundary fold; keep manual
-        calls between iterations."""
+        calls between iterations.
+
+        In fan-in mode the per-shard branch plan revises too, from the
+        ``shard-k/pull``-tagged reports: a single slow shard gets its own
+        verdict and loses traffic share, instead of dragging the whole
+        shard fleet's estimate down."""
         if _fresh_only or self.replan_every_items:
             reps = self._pipeline.reports() if self._pipeline else []
         else:
             reps = self.reports()
         if reps:
-            self.plan = replan(self.plan, reps, damping=damping)
+            tail = [r for r in reps if "/" not in r.name]
+            if tail:
+                self.plan = replan(self.plan, tail, damping=damping)
+        if self.shard_plan is not None and self._shard_pbp is not None:
+            shard_reps = self._fresh_shard_reports()
+            if shard_reps:
+                self.shard_plan = replan(self.shard_plan, shard_reps,
+                                         damping=damping)
+        self._clamp_tail_promise()
         return self.plan
+
+    def _fresh_shard_reports(self) -> list[StageReport]:
+        """Shard-branch reports covering only the window since the last
+        revision.  The branch pipelines run continuously, so their
+        reports are cumulative-from-start; re-feeding the same early
+        stall seconds through ``replan`` at every boundary would
+        re-apply consumed evidence and defeat damping (the linear path's
+        'already-consumed segments are not re-applied' invariant)."""
+        fresh = []
+        for r in self._shard_pbp.reports():
+            prev = self._shard_seen.get(r.name)
+            if prev is not None:
+                delta = dataclasses.replace(
+                    r,
+                    items=r.items - prev.items,
+                    bytes=r.bytes - prev.bytes,
+                    elapsed_s=r.elapsed_s - prev.elapsed_s,
+                    active_s=max(0.0, r.active_s - prev.active_s),
+                    stall_up_s=r.stall_up_s - prev.stall_up_s,
+                    stall_down_s=r.stall_down_s - prev.stall_down_s)
+            else:
+                delta = r
+            self._shard_seen[r.name] = r
+            if delta.elapsed_s > 0 and delta.items > 0:
+                fresh.append(delta)
+        # counters difference cleanly; the service reservoirs cannot, so
+        # start them fresh once consumed — a long-gone regime's samples
+        # must not keep steering every later diagnosis
+        for _, pipe in self._shard_pbp.branches:
+            for stage in pipe.stages:
+                stage.reset_service_reservoirs()
+        return fresh
 
     def fidelity_gap(self) -> Optional[float]:
         """Live achieved-vs-planned gap of the staging path (<0 means the

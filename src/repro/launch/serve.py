@@ -7,7 +7,12 @@ The serving path is the paper's two workload classes composed:
 * **streaming** — decode: tokens are produced step by step and move to
   the client sink *while being generated*, staged through a burst buffer
   so a slow client never stalls the accelerator (the low-jitter
-  decoupling of §2.1).
+  decoupling of §2.1),
+* **fan-out** — pass ``generate`` a list of client sinks and the token
+  stream replicates down one planned branch per client
+  (:func:`~repro.core.basin.decode_fanout_basin` + the mover's parallel
+  mirror mode): per-branch stage reports let ``replan`` pin a stall on
+  the one slow client instead of degrading every stream.
 
 Usage (CPU smoke):
   python -m repro.launch.serve --arch repro-100m --smoke --batch 4 \
@@ -25,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.basin import decode_stream_basin
+from repro.core.basin import decode_fanout_basin, decode_stream_basin
 from repro.core.codesign import CodesignPlan
 from repro.core.mover import MoverConfig, UnifiedDataMover
 from repro.core.planner import plan_transfer
@@ -55,8 +60,11 @@ def observed_client_gbps(registry: TelemetryRegistry) -> Optional[float]:
     so a transfer paced by decode compute (no downstream backpressure in
     its stage reports) says nothing about the client — feeding it back
     would ratchet the client-tier estimate down to the producer's rate
-    with no way to recover.  Returns ``None`` when no client-limited
-    stream has been recorded (the modeled default applies)."""
+    with no way to recover.  Fan-out (mirror) transfers count bytes once
+    per client delivery, so their aggregate rate is divided by the branch
+    count to recover a per-client estimate.  Returns ``None`` when no
+    client-limited stream has been recorded (the modeled default
+    applies)."""
     rates = []
     for r in registry.reports("serve"):
         if r.elapsed_s <= 0 or r.bytes <= 0:
@@ -64,7 +72,9 @@ def observed_client_gbps(registry: TelemetryRegistry) -> Optional[float]:
         if not any(s.stall_down_s >= CLIENT_LIMITED_STALL * r.elapsed_s
                    for s in r.stage_reports):
             continue                     # producer-paced: no client evidence
-        rates.append(r.throughput_bytes_per_s)
+        n_clients = len({s.name.split("/")[0] for s in r.stage_reports
+                         if "/" in s.name}) or 1
+        rates.append(r.throughput_bytes_per_s / n_clients)
     if not rates:
         return None
     window = rates[-DRAIN_RATE_WINDOW:]
@@ -106,6 +116,14 @@ class Server:
             return decode_stream_basin()
         return decode_stream_basin(client_gbps=drain)
 
+    def fanout_basin(self, n_clients: int):
+        """The decode fan-out basin for ``n_clients`` concurrent streams,
+        its per-client tier re-estimated from observed drain rates."""
+        drain = observed_client_gbps(self.telemetry)
+        if drain is None:
+            return decode_fanout_basin(n_clients)
+        return decode_fanout_basin(n_clients, client_gbps=drain)
+
     def generate(self, batch: dict, n_tokens: int,
                  sink=None) -> np.ndarray:
         """Greedy-decode ``n_tokens``; each step's tokens stream to ``sink``
@@ -115,16 +133,18 @@ class Server:
         because the token stream must arrive in decode order.  The basin's
         client tier is re-estimated from observed drain rates between
         requests, and with ``replan_every_tokens`` set the plan also
-        revises online inside one long generation."""
+        revises online inside one long generation.
+
+        ``sink`` may be a *list* of callables — concurrent client streams.
+        The token stream then replicates down one planned branch per
+        client (decode fan-out, mover parallel mirror mode): every client
+        receives every token, each branch carries its own staging depth,
+        and the per-branch stage reports attribute a stall to the one
+        slow client."""
         logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
         out = [np.asarray(tok)]
         n_batch = int(tok.shape[0])
-        plan = plan_transfer(self.stream_basin(),
-                             item_bytes=max(1, n_batch * 4),
-                             stages=("token-stream",), ordered=True)
-        mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
-                                 telemetry=self.telemetry, layer="serve")
 
         def produce() -> Iterator[np.ndarray]:
             nonlocal tok, cache
@@ -134,10 +154,38 @@ class Server:
                                  keepdims=True).astype(jnp.int32)
                 yield np.asarray(tok)
 
+        sinks = list(sink) if isinstance(sink, (list, tuple)) else None
         collected: list[np.ndarray] = []
-        report = mover.streaming_transfer(
-            produce(), sink or collected.append, plan=plan,
-            replan_every_items=self.replan_every_tokens)
+        if sinks and len(sinks) > 1:
+            plan = plan_transfer(self.fanout_basin(len(sinks)),
+                                 item_bytes=max(1, n_batch * 4),
+                                 stages=("token-stream",), ordered=True)
+            mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                                     telemetry=self.telemetry, layer="serve")
+            # branch order follows basin link order == client order
+            sink_map = {b.branch_id: s
+                        for b, s in zip(plan.branches, sinks)}
+            first = plan.branches[0].branch_id
+            first_sink = sink_map[first]
+
+            def tee(item):
+                collected.append(item)
+                first_sink(item)
+
+            sink_map[first] = tee
+            report = mover.parallel_transfer(
+                produce(), sink_map, plan=plan, mode="mirror",
+                replan_every_items=self.replan_every_tokens)
+        else:
+            one_sink = sinks[0] if sinks else sink
+            plan = plan_transfer(self.stream_basin(),
+                                 item_bytes=max(1, n_batch * 4),
+                                 stages=("token-stream",), ordered=True)
+            mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
+                                     telemetry=self.telemetry, layer="serve")
+            report = mover.streaming_transfer(
+                produce(), one_sink or collected.append, plan=plan,
+                replan_every_items=self.replan_every_tokens)
         out.extend(collected)
         self.last_report = report
         return np.concatenate(out, axis=1)

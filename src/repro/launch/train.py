@@ -90,7 +90,8 @@ class Trainer:
 
     def run(self, source, n_steps: int, *, inject_failure_at: int = -1,
             replan_every: int = 0, telemetry_json: Optional[str] = None,
-            telemetry_every: int = 10) -> list[dict]:
+            telemetry_every: int = 10,
+            telemetry_jsonl: Optional[str] = None) -> list[dict]:
         """Train ``n_steps``.  ``replan_every > 0`` folds observed input
         stall ratios and service-time samples back into the transfer plan
         *online*, every that many batches, at a buffer boundary inside the
@@ -100,7 +101,10 @@ class Trainer:
         fidelity gaps always measure against the plan the stream started
         with.  ``telemetry_json`` dumps the cross-layer
         :class:`~repro.core.telemetry.TelemetryRegistry` to that path every
-        ``telemetry_every`` steps (atomic rename — safe to poll)."""
+        ``telemetry_every`` steps (atomic rename — safe to poll);
+        ``telemetry_jsonl`` additionally *appends* one snapshot line per
+        flush to that path — a time series the trend example
+        (``examples/telemetry_timeseries.py``) reads back."""
         pc = getattr(source, "pc", None)
         pipeline = InputPipeline(
             source, basin=tpu_input_basin(), pc=pc, mesh=self.mesh,
@@ -138,14 +142,19 @@ class Trainer:
                    "input_stall_s": pipeline.consumer_stall_s(),
                    "input_fidelity_gap": pipeline.fidelity_gap()}
             self.metrics_log.append(rec)
-            if telemetry_json and done % max(1, telemetry_every) == 0:
-                get_registry().dump_json(telemetry_json)
+            if done % max(1, telemetry_every) == 0:
+                if telemetry_json:
+                    get_registry().dump_json(telemetry_json)
+                if telemetry_jsonl:
+                    get_registry().append_jsonl(telemetry_jsonl)
             if self.ckpt is not None:
                 self.ckpt.maybe_save(self.step_idx, {
                     "params": self.params, "opt": self.opt_state})
         pipeline.record_telemetry()
         if telemetry_json:
             get_registry().dump_json(telemetry_json)
+        if telemetry_jsonl:
+            get_registry().append_jsonl(telemetry_jsonl)
         if self.ckpt is not None:
             self.ckpt.wait()
             self.ckpt.maybe_save(self.step_idx, {
@@ -176,7 +185,11 @@ def main() -> None:
                          "registry to PATH as JSON (atomic rename; for "
                          "dashboards)")
     ap.add_argument("--telemetry-every", type=int, default=10,
-                    help="step cadence of --telemetry-json dumps")
+                    help="step cadence of --telemetry-json/-jsonl dumps")
+    ap.add_argument("--telemetry-jsonl", default=None, metavar="PATH",
+                    help="append one telemetry snapshot per flush to PATH "
+                         "as a JSONL time series (see "
+                         "examples/telemetry_timeseries.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -196,7 +209,8 @@ def main() -> None:
                       inject_failure_at=args.inject_failure_at,
                       replan_every=args.replan_every,
                       telemetry_json=args.telemetry_json,
-                      telemetry_every=args.telemetry_every)
+                      telemetry_every=args.telemetry_every,
+                      telemetry_jsonl=args.telemetry_jsonl)
     for rec in log[-5:]:
         gap = rec.get("input_fidelity_gap")
         gap_s = f" gap {gap:+.3f}" if gap is not None else ""

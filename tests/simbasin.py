@@ -29,6 +29,17 @@ tier parameters, not of host load.
 Conventions: items are ``bytes`` payloads (``_default_sizeof`` counts
 them), jitter draws are seeded per-tier in service order, and a regime
 shift scheduled ``at_item=k`` applies from the k-th served item onward.
+
+Branching topologies: each branch of a DAG basin gets its own
+:class:`SimulatedTier` (its own seed, its own ``shift_at`` script), served
+inside that branch's stage transform (:meth:`SimHarness.service`).  Tiers
+in branch scenarios should pass ``wall_scale=BRANCH_WALL_SCALE`` so
+wall-time queue dynamics (who backpressures, who starves) mirror the
+scripted virtual dynamics — that occupancy signal is what lets ``replan``
+attribute a stall to the one degraded branch.  Per-branch item counts are
+deterministic (the mover's split dispatcher routes by weighted deficit
+round-robin), so a branch's ``shift_at`` index refers to *its own* served
+items regardless of sibling branches.
 """
 
 from __future__ import annotations
@@ -128,7 +139,8 @@ class SimulatedTier:
     def __init__(self, clock: VirtualClock, *, bandwidth_bytes_per_s: float,
                  latency_s: float = 0.0, jitter_s: float = 0.0,
                  seed: int = 0, name: str = "sim-tier",
-                 wall_pacing_s: float = 1e-4):
+                 wall_pacing_s: float = 1e-4,
+                 wall_scale: float = 0.0):
         self._clock = clock
         self.name = name
         self.bandwidth_bytes_per_s = float(bandwidth_bytes_per_s)
@@ -140,6 +152,14 @@ class SimulatedTier:
         # timing assertion depends on it — virtual results are a function
         # of the script; the sleep only shapes thread interleaving.
         self.wall_pacing_s = wall_pacing_s
+        # branching topologies additionally need wall-time *dynamics* to
+        # track virtual dynamics: when sibling branch pipelines compete,
+        # queue occupancy (who is full, who starves) is the attribution
+        # signal, and it only mirrors the script if a slow serve is also
+        # slower in wall time.  wall_scale > 0 sleeps that fraction of
+        # each serve's virtual duration; stall *ratios* then separate
+        # cleanly per branch while all absolute timing stays virtual.
+        self.wall_scale = float(wall_scale)
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
         self._cum_tx = 0.0              # total transmit work accepted so far
@@ -197,8 +217,10 @@ class SimulatedTier:
         completion = tx_done + latency + jitter
         self._clock.set_thread(completion)
         self._clock.advance_to(completion)
-        if self.wall_pacing_s:
-            time.sleep(self.wall_pacing_s)
+        pace = self.wall_pacing_s + self.wall_scale * max(
+            0.0, completion - arrival)
+        if pace:
+            time.sleep(min(pace, 0.05))
         return completion
 
 
@@ -231,6 +253,12 @@ class SimulatedSink:
         self.items += 1
 
 
+#: default wall-pacing fraction for branching scenarios: slow serves are
+#: proportionally slow in wall time, so cross-branch queue dynamics (the
+#: stall-attribution signal) mirror the script (SimulatedTier.wall_scale)
+BRANCH_WALL_SCALE = 0.1
+
+
 class SimHarness:
     """One simulation context: a fresh clock plus factories wired to it."""
 
@@ -239,6 +267,22 @@ class SimHarness:
 
     def tier(self, **kwargs) -> SimulatedTier:
         return SimulatedTier(self.clock, **kwargs)
+
+    def branch_tier(self, name: str, **kwargs) -> SimulatedTier:
+        """A tier for one branch of a branching topology: independently
+        seeded (from its name) and wall-paced so sibling-branch dynamics
+        separate (see module docstring)."""
+        kwargs.setdefault("seed", sum(name.encode()) or 1)
+        kwargs.setdefault("wall_scale", BRANCH_WALL_SCALE)
+        return SimulatedTier(self.clock, name=name, **kwargs)
+
+    def service(self, tier: SimulatedTier):
+        """A stage transform serving each item through ``tier`` — the
+        executable form of a branch's private channel."""
+        def transform(item):
+            tier.serve(len(item) if hasattr(item, "__len__") else 1)
+            return item
+        return transform
 
     def source(self, tier: SimulatedTier, n_items: int,
                item_bytes: int) -> SimulatedSource:

@@ -1,0 +1,588 @@
+"""DAG-structured basins: topology, multipath planning, parallel-branch
+movement, and per-branch replan attribution (the PR-3 tentpole).
+
+The acceptance scenario — a two-branch basin where one branch degrades
+mid-transfer — runs on the deterministic simulated-basin harness: replan
+must pin the verdict on the degraded branch alone and rebalance traffic
+toward the healthy one.
+"""
+
+import numpy as np
+import pytest
+
+from simbasin import SimHarness
+
+from repro.core.basin import (DrainageBasin, GBPS, Link, MIB, Tier, TierKind,
+                              checkpoint_basin, decode_fanout_basin,
+                              decode_stream_basin, mirrored_checkpoint_basin,
+                              paper_basin, sharded_input_basin,
+                              tpu_input_basin)
+from repro.core.planner import plan_transfer
+
+
+def _tiers():
+    return [
+        Tier("src", TierKind.SOURCE, 40.0 * GBPS, latency_s=1e-5),
+        Tier("staging", TierKind.BURST_BUFFER, 40.0 * GBPS, latency_s=1e-5),
+        Tier("path-a", TierKind.SINK, 10.0 * GBPS),
+        Tier("path-b", TierKind.SINK, 10.0 * GBPS),
+    ]
+
+
+def _fanout_basin(src_gbps=40.0, a_gbps=10.0, b_gbps=10.0):
+    src, staging, a, b = _tiers()
+    import dataclasses
+    src = dataclasses.replace(src, bandwidth_bytes_per_s=src_gbps * GBPS)
+    a = dataclasses.replace(a, bandwidth_bytes_per_s=a_gbps * GBPS)
+    b = dataclasses.replace(b, bandwidth_bytes_per_s=b_gbps * GBPS)
+    return DrainageBasin([src, staging, a, b],
+                         [Link("src", "staging"),
+                          Link("staging", "path-a"),
+                          Link("staging", "path-b")])
+
+
+# -- topology ----------------------------------------------------------------
+
+def test_linear_basin_is_degenerate_dag():
+    b = tpu_input_basin()
+    assert b.is_linear
+    assert len(b.paths()) == 1
+    assert b.paths()[0] == tuple(t.name for t in b.tiers)
+    assert b.roots() == ["dataset-store"] and b.sinks() == ["hbm"]
+    assert b.split_tiers() == [] and b.merge_tiers() == []
+
+
+def test_fanout_split_detected():
+    b = _fanout_basin()
+    assert not b.is_linear
+    assert b.split_tiers() == ["staging"]
+    assert b.paths() == [("src", "staging", "path-a"),
+                         ("src", "staging", "path-b")]
+
+
+def test_fanin_merge_detected():
+    b = sharded_input_basin(3)
+    assert b.merge_tiers() == ["host-burst-buffer"]
+    assert b.roots() == ["shard-0", "shard-1", "shard-2"]
+    assert len(b.paths()) == 3
+
+
+def test_cycle_rejected():
+    t = [Tier("a", TierKind.SOURCE, 1e9), Tier("b", TierKind.CHANNEL, 1e9),
+         Tier("c", TierKind.SINK, 1e9)]
+    with pytest.raises(ValueError, match="cycle"):
+        DrainageBasin(t, [Link("a", "b"), Link("b", "c"), Link("c", "a")])
+
+
+def test_disconnected_tier_rejected():
+    t = [Tier("a", TierKind.SOURCE, 1e9), Tier("b", TierKind.SINK, 1e9),
+         Tier("island", TierKind.CHANNEL, 1e9)]
+    with pytest.raises(ValueError, match="disconnected"):
+        DrainageBasin(t, [Link("a", "b")])
+
+
+def test_path_basin_is_linear_view():
+    b = _fanout_basin()
+    sub = b.path_basin(("src", "staging", "path-a"))
+    assert sub.is_linear
+    assert [t.name for t in sub.tiers] == ["src", "staging", "path-a"]
+    # shared Tier objects: the sub-basin sees the same estimates
+    assert sub.tiers[0] is b.tier("src")
+
+
+def test_branch_rates_conserve_shared_tier():
+    """Branch rates through a shared tier sum to <= its effective rate."""
+    b = _fanout_basin(src_gbps=12.0)        # src is the shared bottleneck
+    rates = b.branch_rates()
+    assert sum(rates.values()) <= 12.0 * GBPS * (1 + 1e-9)
+    # both branches private-capable of 10, squeezed fairly to 6 each
+    for r in rates.values():
+        assert r == pytest.approx(6.0 * GBPS)
+
+
+def test_aggregate_throughput_sums_branches():
+    b = _fanout_basin()                     # 40 Gbps src, 2 x 10 Gbps sinks
+    assert b.achievable_throughput() == pytest.approx(20.0 * GBPS)
+
+
+def test_replace_tiers_rederives_derived_links():
+    import dataclasses
+    b = _fanout_basin()
+    slow = [dataclasses.replace(t, bandwidth_bytes_per_s=1.0 * GBPS)
+            if t.name == "path-a" else t for t in b.tiers]
+    revised = b.replace_tiers(slow)
+    assert revised.link("staging", "path-a").bandwidth_bytes_per_s \
+        == pytest.approx(1.0 * GBPS)
+    assert revised.paths() == b.paths()
+
+
+# -- multipath planning ------------------------------------------------------
+
+def test_multipath_plan_has_branch_per_path():
+    plan = plan_transfer(_fanout_basin(), 1 * MIB, stages=("deliver",))
+    assert plan.is_multipath
+    assert [b.branch_id for b in plan.branches] == ["path-a", "path-b"]
+    assert sum(b.weight for b in plan.branches) == pytest.approx(1.0)
+    assert plan.planned_bytes_per_s == pytest.approx(
+        sum(b.rate_bytes_per_s for b in plan.branches))
+    for b in plan.branches:
+        assert b.private_tiers == (b.branch_id,)
+
+
+def test_multipath_weights_follow_capacity():
+    plan = plan_transfer(_fanout_basin(a_gbps=15.0, b_gbps=5.0), 1 * MIB,
+                         stages=("deliver",))
+    by = {b.branch_id: b for b in plan.branches}
+    assert by["path-a"].weight > by["path-b"].weight
+
+
+def test_legacy_basins_plan_as_single_branch():
+    """All pre-DAG call sites keep working: one branch mirroring hops."""
+    for basin, stages, ordered in [
+        (paper_basin(), ("stage",), False),
+        (tpu_input_basin(), ("decode", "stage"), True),
+        (checkpoint_basin(), ("serialize",), False),
+        (decode_stream_basin(), ("token-stream",), True),
+    ]:
+        plan = plan_transfer(basin, 1 * MIB, stages=stages, ordered=ordered)
+        assert not plan.is_multipath
+        assert len(plan.branches) == 1
+        assert plan.branches[0].hops == plan.hops
+        assert plan.branches[0].weight == 1.0
+        assert plan.branches[0].rate_bytes_per_s == pytest.approx(
+            plan.planned_bytes_per_s)
+
+
+def test_single_path_dag_equivalent_to_linear():
+    """The equivalence acceptance: a chain expressed as an explicit DAG
+    (derived links) plans identically to the implicit linear form."""
+    tiers = [
+        Tier("a", TierKind.SOURCE, 10 * GBPS, latency_s=5e-3,
+             jitter_s=20e-3),
+        Tier("b", TierKind.BURST_BUFFER, 100 * GBPS, latency_s=1e-5),
+        Tier("c", TierKind.SINK, 40 * GBPS, latency_s=1e-4),
+    ]
+    linear = DrainageBasin(tiers)
+    dag = DrainageBasin(tiers, [Link("a", "b"), Link("b", "c")])
+    assert dag.is_linear
+    for stages in (("move",), ("pull", "push")):
+        p_lin = plan_transfer(linear, 4 * MIB, stages=stages, checksum=True)
+        p_dag = plan_transfer(dag, 4 * MIB, stages=stages, checksum=True)
+        assert p_lin.hops == p_dag.hops
+        assert p_lin.planned_bytes_per_s == pytest.approx(
+            p_dag.planned_bytes_per_s)
+        assert p_lin.checksum_index == p_dag.checksum_index
+
+
+def test_describe_is_branch_aware():
+    plan = plan_transfer(_fanout_basin(), 1 * MIB, stages=("deliver",))
+    text = plan.describe()
+    assert "2 branches" in text
+    assert "path-a" in text and "path-b" in text
+    assert "aggregate" in text
+    # the linear format is unchanged
+    lin = plan_transfer(tpu_input_basin(), 1 * MIB, stages=("decode",
+                                                            "stage"))
+    assert lin.describe().startswith("TransferPlan(decode[")
+
+
+def test_prebuilt_dag_basins_plan_cleanly():
+    for basin in (sharded_input_basin(4), mirrored_checkpoint_basin(),
+                  decode_fanout_basin(3)):
+        plan = plan_transfer(basin, 1 * MIB, stages=("s",))
+        assert plan.is_multipath
+        assert len(plan.branches) == len(basin.paths())
+        assert plan.planned_bytes_per_s > 0
+
+
+# -- parallel-branch movement (deterministic, virtual clock) -----------------
+
+ITEM = 1 * MIB
+
+
+def test_parallel_split_delivers_everything(simbasin):
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    tier_a = simbasin.branch_tier("path-a", bandwidth_bytes_per_s=10 * GBPS)
+    tier_b = simbasin.branch_tier("path-b", bandwidth_bytes_per_s=10 * GBPS)
+    src = simbasin.source(simbasin.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                                        wall_pacing_s=0.0), 40, ITEM)
+    got = []
+    rep = simbasin.mover(plan=plan).parallel_transfer(
+        iter(src), got.append,
+        transforms={"path-a": [("deliver", simbasin.service(tier_a))],
+                    "path-b": [("deliver", simbasin.service(tier_b))]},
+        mode="split")
+    assert rep.items == 40 and len(got) == 40
+    # equal weights deal the stream evenly (deterministic DRR)
+    assert tier_a.served == 20 and tier_b.served == 20
+    names = {r.name for r in rep.stage_reports}
+    assert names == {"path-a/deliver", "path-b/deliver"}
+
+
+def test_parallel_split_beats_one_branch(simbasin):
+    """Two healthy branches move the stream ~2x faster than one: the
+    aggregate-rate claim, in virtual time."""
+    def run(n_branches):
+        h = SimHarness()
+        basin = (_fanout_basin() if n_branches == 2 else
+                 DrainageBasin(_tiers()[:3]))
+        plan = plan_transfer(basin, ITEM, stages=("deliver",))
+        tiers = {bid: h.branch_tier(bid, bandwidth_bytes_per_s=10 * GBPS)
+                 for bid in ("path-a", "path-b")[:n_branches]}
+        src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                              wall_pacing_s=0.0), 60, ITEM)
+        tf = {bid: [("deliver", h.service(t))] for bid, t in tiers.items()}
+        if n_branches == 1:
+            rep = h.mover(plan=plan).bulk_transfer(
+                iter(src), lambda _: None, transforms=tf["path-a"])
+        else:
+            rep = h.mover(plan=plan).parallel_transfer(
+                iter(src), lambda _: None, transforms=tf, mode="split")
+        return rep.elapsed_s
+
+    assert run(2) < 0.65 * run(1)
+
+
+def test_parallel_mirror_replicates_to_every_branch(simbasin):
+    plan = plan_transfer(mirrored_checkpoint_basin(), ITEM,
+                         stages=("serialize",))
+    got = {b.branch_id: [] for b in plan.branches}
+    sinks = {bid: got[bid].append for bid in got}
+    src = simbasin.source(simbasin.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                                        wall_pacing_s=0.0), 12, ITEM)
+    rep = simbasin.mover(plan=plan).parallel_transfer(
+        iter(src), sinks, mode="mirror")
+    assert all(len(v) == 12 for v in got.values())
+    assert rep.items == 24          # deliveries: every item moved twice
+
+
+def test_parallel_checksum_hashes_each_source_item_once(simbasin):
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    payloads = [bytes([i]) * 1024 for i in range(20)]
+
+    def run(mode):
+        return simbasin.mover(plan=plan, checksum=True).parallel_transfer(
+            iter(payloads), lambda _: None, mode=mode, checksum=True)
+
+    import hashlib
+    acc = bytearray(32)
+    for p in payloads:
+        d = hashlib.sha256(p).digest()
+        for i in range(32):
+            acc[i] ^= d[i]
+    assert run("split").checksum == bytes(acc).hex()
+    # mirror replicates deliveries but the stream digest is unchanged
+    assert run("mirror").checksum == bytes(acc).hex()
+
+
+# -- the acceptance scenario: one branch degrades mid-transfer ---------------
+
+def _degrade_scenario(online_chunk):
+    """120 items over two 10 Gbps branches; branch A collapses to 0.5 Gbps
+    from its 30th served item — the start of A's third 15-item segment
+    share under the equal-weight deal with ``online_chunk=30``, so the
+    third segment's samples are purely degraded.  Returns (report, mover,
+    starting plan)."""
+    h = SimHarness()
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    tier_a = h.branch_tier("path-a", bandwidth_bytes_per_s=10 * GBPS)
+    tier_a.shift_at(30, bandwidth_bytes_per_s=0.5 * GBPS)
+    tier_b = h.branch_tier("path-b", bandwidth_bytes_per_s=10 * GBPS)
+    src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                          wall_pacing_s=0.0), 120, ITEM)
+    mover = h.mover(plan=plan)
+    rep = mover.parallel_transfer(
+        iter(src), lambda _: None,
+        transforms={"path-a": [("deliver", h.service(tier_a))],
+                    "path-b": [("deliver", h.service(tier_b))]},
+        mode="split", replan_every_items=online_chunk)
+    return rep, mover, plan
+
+
+def test_replan_attributes_degrade_to_one_branch_only():
+    """The acceptance criterion, deterministic form: replayed reports of
+    a degraded-A segment (A backpressures the split node and
+    underdelivers with a tight service signature; B starves in A's
+    shadow) must produce a verdict for the degraded branch ONLY, on its
+    private tier.  Synthetic replay — no threads, no host-load noise;
+    the threaded end-to-end form of the same scenario is asserted with
+    load-robust invariants in the two tests below."""
+    from repro.core.planner import replan
+    from repro.core.staging import StageReport
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    share = 30 * ITEM
+    reports = [
+        StageReport(name="path-a/deliver", items=30, bytes=share,
+                    elapsed_s=0.5, active_s=0.5, stall_up_s=0.02,
+                    stall_down_s=0.0, errors=0,
+                    service_up_s=[33.5e-3 + 1e-5 * (i % 3)
+                                  for i in range(30)]),
+        StageReport(name="path-b/deliver", items=30, bytes=share,
+                    elapsed_s=0.5, active_s=0.45, stall_up_s=0.7,
+                    stall_down_s=0.0, errors=0,
+                    service_up_s=[33.5e-3 + 1e-5 * (i % 3)
+                                  for i in range(30)]),
+    ]
+    revised = replan(plan, reports, damping=1.0,
+                     intake_ratio={"path-a": 0.85, "path-b": 0.02})
+    assert set(revised.diagnosis) == {"path-a/deliver"}
+    assert "path-a" in revised.diagnosis["path-a/deliver"]
+    by = {b.branch_id: b for b in revised.branches}
+    assert by["path-b"].weight > by["path-a"].weight
+
+
+def test_threaded_degrade_attributes_degraded_branch():
+    """Threaded end-to-end form: the degraded branch must carry a verdict
+    naming its own private tier, and the healthy branch must never be
+    diagnosed bandwidth-bound (which would wrongly strip its traffic
+    share).  A stray latency verdict on the healthy branch under extreme
+    host load is tolerated — it is weight-neutral; the strict
+    one-branch-only claim is pinned by the deterministic replay above
+    and the recorded corpus fixture."""
+    rep, mover, _ = _degrade_scenario(online_chunk=30)
+    diag = mover.last_plan.diagnosis
+    assert any(k.startswith("path-a/") for k in diag), diag
+    assert "path-a" in diag["path-a/deliver"]
+    assert "bandwidth-bound" not in diag.get("path-b/deliver", ""), diag
+
+
+def test_replan_rebalances_toward_healthy_branch():
+    rep, mover, plan = _degrade_scenario(online_chunk=30)
+    start = {b.branch_id: b.weight for b in plan.branches}
+    final = {b.branch_id: b.weight for b in mover.last_plan.branches}
+    assert start["path-a"] == pytest.approx(start["path-b"])
+    assert final["path-b"] > final["path-a"]
+    assert rep.replans >= 1
+
+
+def test_online_rebalance_beats_static_split():
+    static, _, _ = _degrade_scenario(online_chunk=0)
+    online, _, _ = _degrade_scenario(online_chunk=30)
+    assert static.items == online.items == 120
+    assert online.elapsed_s < 0.9 * static.elapsed_s
+
+
+# -- consumer: mirrored checkpoint save / fastest restore --------------------
+
+def test_mirrored_save_and_fallback_restore(tmp_path):
+    from repro.checkpoint.manager import (CheckpointManager, save_checkpoint,
+                                          verify_checkpoint)
+    tree = {"w": np.arange(24, dtype=np.float32).reshape(4, 6)}
+    root, mirror = str(tmp_path / "p"), str(tmp_path / "m")
+    save_checkpoint(root, 3, tree, mirror_root=mirror)
+    assert verify_checkpoint(root, 3) and verify_checkpoint(mirror, 3)
+
+    mgr = CheckpointManager(root, mirror_root=mirror)
+    step, restored = mgr.restore_latest(
+        {"w": np.zeros((4, 6), np.float32)})
+    assert step == 3
+    assert np.allclose(np.asarray(restored["w"]), tree["w"])
+
+    # torn primary: restore falls back to the mirror replica
+    import shutil
+    shutil.rmtree(str(tmp_path / "p" / "step_0000000003"))
+    step, restored = mgr.restore_latest(
+        {"w": np.zeros((4, 6), np.float32)})
+    assert step == 3
+    assert np.allclose(np.asarray(restored["w"]), tree["w"])
+
+
+def test_mirrored_manager_save_via_mover(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager, latest_step
+    tree = {"w": np.ones((8, 8), np.float32),
+            "b": np.zeros(16, np.float32)}
+    mgr = CheckpointManager(str(tmp_path / "p"), every_steps=1,
+                            mirror_root=str(tmp_path / "m"))
+    assert mgr.maybe_save(1, tree)
+    mgr.wait()
+    assert latest_step(str(tmp_path / "p")) == 1
+    assert latest_step(str(tmp_path / "m")) == 1
+    # the mirrored (multipath) plan persisted for the next save
+    assert mgr._mirror_plan is not None and mgr._mirror_plan.is_multipath
+
+
+# -- consumer: input-pipeline shard fan-in -----------------------------------
+
+def test_input_pipeline_shard_fanin():
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import (InputPipeline, PipelineConfig,
+                                     SyntheticTokenSource)
+    cfg = get_smoke_config("repro-100m")
+    pc = PipelineConfig(global_batch=4, seq_len=16)
+    shards = [SyntheticTokenSource(cfg, pc, n_batches=4) for _ in range(3)]
+    pipe = InputPipeline(shards, pc=pc, to_device=False)
+    assert pipe.shard_plan is not None and pipe.shard_plan.is_multipath
+    assert [b.branch_id for b in pipe.shard_plan.branches] == \
+        ["shard-0", "shard-1", "shard-2"]
+    batches = list(pipe)
+    assert len(batches) == 12
+    names = {r.name for r in pipe.reports()}
+    assert {"shard-0/pull", "shard-1/pull", "shard-2/pull",
+            "decode", "stage"} <= names
+    pipe.replan()                   # revises shard plan from tagged reports
+    assert pipe.shard_plan.is_multipath
+
+
+def test_input_pipeline_fanin_rejects_branch_source_mismatch():
+    """A basin whose path count differs from the shard-source count must
+    fail loudly at construction — a silent zip() would drop shards."""
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import (InputPipeline, PipelineConfig,
+                                     SyntheticTokenSource)
+    cfg = get_smoke_config("repro-100m")
+    pc = PipelineConfig(global_batch=4, seq_len=16)
+    shards = [SyntheticTokenSource(cfg, pc, n_batches=3) for _ in range(3)]
+    with pytest.raises(ValueError, match="shard sources"):
+        InputPipeline(shards, basin=tpu_input_basin(), pc=pc,
+                      to_device=False)
+    with pytest.raises(ValueError, match="shard sources"):
+        InputPipeline(shards, basin=sharded_input_basin(2), pc=pc,
+                      to_device=False)
+
+
+def test_input_pipeline_fanin_honours_online_replan_cadence():
+    """replan_every_items stays live in fan-in mode: the merged tail runs
+    in segments and every batch is still delivered exactly once."""
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import (InputPipeline, PipelineConfig,
+                                     SyntheticTokenSource)
+    cfg = get_smoke_config("repro-100m")
+    pc = PipelineConfig(global_batch=4, seq_len=16)
+    shards = [SyntheticTokenSource(cfg, pc, n_batches=5) for _ in range(2)]
+    pipe = InputPipeline(shards, pc=pc, to_device=False,
+                         replan_every_items=4)
+    assert pipe.replan_every_items == 4
+    batches = list(pipe)
+    assert len(batches) == 10
+    # cumulative reports still cover everything, shard tags included
+    merged = {r.name: r for r in pipe.reports()}
+    assert merged["decode"].items == 10
+    assert merged["shard-0/pull"].items + merged["shard-1/pull"].items == 10
+
+
+def test_fanin_promise_bounded_by_shard_aggregate():
+    """The input-layer promise must fold in the shard branches' conserved
+    aggregate — the fast merge-to-device tail alone would inflate it and
+    make every fidelity gap read ~1.0."""
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import (InputPipeline, PipelineConfig,
+                                     SyntheticTokenSource)
+    cfg = get_smoke_config("repro-100m")
+    pc = PipelineConfig(global_batch=4, seq_len=16)
+    shards = [SyntheticTokenSource(cfg, pc, n_batches=2) for _ in range(2)]
+    pipe = InputPipeline(shards, pc=pc, to_device=False)
+    assert pipe.plan.planned_bytes_per_s <= \
+        pipe.shard_plan.planned_bytes_per_s * (1 + 1e-9)
+    pipe.replan()       # the clamp survives plan revision too
+    assert pipe.plan.planned_bytes_per_s <= \
+        pipe.shard_plan.planned_bytes_per_s * (1 + 1e-9)
+
+
+def test_mirror_promise_paces_at_slowest_branch(simbasin):
+    """Mirror-mode reports promise n x the weakest branch rate, not the
+    split-mode aggregate — replication can never beat its slowest copy."""
+    plan = plan_transfer(mirrored_checkpoint_basin(), ITEM,
+                         stages=("serialize",))
+    src = simbasin.source(simbasin.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                                        wall_pacing_s=0.0), 8, ITEM)
+    rep = simbasin.mover(plan=plan).parallel_transfer(
+        iter(src), lambda _: None, mode="mirror")
+    rates = [b.rate_bytes_per_s for b in plan.branches]
+    assert rep.planned_bytes_per_s == pytest.approx(len(rates) * min(rates))
+    assert rep.planned_bytes_per_s < plan.planned_bytes_per_s
+
+
+def test_mirrored_restore_rejects_bit_rotted_replica(tmp_path):
+    """A corrupt shard whose shape/dtype survive np.load must still fail
+    the first replica (manifest re-hash) and fall back to the mirror."""
+    from repro.checkpoint.manager import CheckpointManager, save_checkpoint
+    tree = {"w": np.arange(16, dtype=np.float32)}
+    root, mirror = str(tmp_path / "p"), str(tmp_path / "m")
+    save_checkpoint(root, 2, tree, mirror_root=mirror)
+    # bit-rot the primary's shard in place: same shape, same dtype
+    shard = tmp_path / "p" / "step_0000000002" / "leaf_00000.npy"
+    arr = np.load(shard)
+    arr[3] += 1.0
+    np.save(shard, arr)
+    mgr = CheckpointManager(root, mirror_root=mirror)
+    step, restored = mgr.restore_latest({"w": np.zeros(16, np.float32)})
+    assert step == 2
+    assert np.allclose(np.asarray(restored["w"]), tree["w"])
+
+
+def test_shared_tier_revision_sums_branch_shares():
+    """Corroborated shared-tier evidence applies ONCE with the branches'
+    summed rate — per-share damped updates would collapse a healthy
+    shared tier's estimate to ~1/N of its real rate."""
+    from repro.core.planner import replan
+    from repro.core.staging import StageReport
+    basin = sharded_input_basin(4, shard_gbps=40.0, host_staging_gbps=8.0)
+    plan = plan_transfer(basin, 1 * MIB, stages=("pull",))
+    # every shard starves downstream at the shared host tier, each
+    # observing its ~1/4 share of the tier's true 1 GB/s delivery
+    share = 8.0 * GBPS / 4
+    reports = []
+    for b in plan.branches:
+        hop = b.hops[0]
+        reports.append(StageReport(
+            name=f"{b.branch_id}/{hop.name}", items=64,
+            bytes=int(share * 2.0), elapsed_s=2.0, active_s=2.0,
+            stall_up_s=0.0, stall_down_s=hop.workers * 2.0 * 0.7,
+            errors=0,
+            service_down_s=[1 * MIB / share + 1e-5 * (i % 2)
+                            for i in range(40)]))
+    revised = replan(plan, reports, damping=1.0)
+    host = revised.basin.tier("host-burst-buffer")
+    # aggregate observation = 4 shares = the tier's true rate
+    assert host.bandwidth_bytes_per_s == pytest.approx(8.0 * GBPS, rel=0.01)
+
+
+def test_mirrored_restore_falls_back_to_older_intact_step(tmp_path):
+    """When the only replica holding the newest step is corrupt, restore
+    must fall back to an older intact checkpoint rather than raise."""
+    from repro.checkpoint.manager import CheckpointManager, save_checkpoint
+    old = {"w": np.full(8, 1.0, np.float32)}
+    new = {"w": np.full(8, 2.0, np.float32)}
+    root, mirror = str(tmp_path / "p"), str(tmp_path / "m")
+    save_checkpoint(root, 1, old, mirror_root=mirror)
+    # step 2 exists only in the primary (crash between the two commits)
+    save_checkpoint(root, 2, new)
+    # ... and its shard bit-rots
+    shard = tmp_path / "p" / "step_0000000002" / "leaf_00000.npy"
+    arr = np.load(shard)
+    arr[0] += 5.0
+    np.save(shard, arr)
+    mgr = CheckpointManager(root, mirror_root=mirror)
+    step, restored = mgr.restore_latest({"w": np.zeros(8, np.float32)})
+    assert step == 1
+    assert np.allclose(np.asarray(restored["w"]), old["w"])
+
+
+def test_untagged_report_not_multiplied_across_branches():
+    """A multipath plan driven through one pipeline yields UNTAGGED
+    reports; the lookup fallback hands every branch the same report, and
+    the shared-tier revision must count it once — not once per branch."""
+    from repro.core.planner import replan
+    from repro.core.staging import StageReport
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    observed = 0.105e9          # one pipeline, starved upstream of src
+    rep = StageReport(name="deliver", items=64, bytes=int(observed * 2.0),
+                      elapsed_s=2.0, active_s=2.0,
+                      stall_up_s=plan.hops[0].workers * 2.0 * 0.7,
+                      stall_down_s=0.0, errors=0)
+    revised = replan(plan, [rep], damping=1.0)
+    src = revised.basin.tier("src")
+    assert src.bandwidth_bytes_per_s == pytest.approx(observed, rel=0.01)
+
+
+def test_single_root_restore_keeps_strict_contract(tmp_path):
+    """Without a mirror, a failing newest checkpoint raises — it must not
+    silently resume from an older step (masking corruption)."""
+    from repro.checkpoint.manager import CheckpointManager, save_checkpoint
+    mgr = CheckpointManager(str(tmp_path))
+    save_checkpoint(str(tmp_path), 1, {"w": np.ones(4, np.float32)})
+    save_checkpoint(str(tmp_path), 2, {"w": np.ones(4, np.float32)})
+    # tear step 2's shard away entirely
+    (tmp_path / "step_0000000002" / "leaf_00000.npy").unlink()
+    with pytest.raises(Exception):
+        mgr.restore_latest({"w": np.zeros(4, np.float32)})

@@ -1,0 +1,137 @@
+"""Property tests for the DAG planner (satellite of the multipath
+tentpole): branch-rate conservation at shared tiers, linear-planner
+equivalence on single-path basins, and replan idempotence on stall-free
+per-branch reports."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.basin import DrainageBasin, GBPS, Link, MIB, Tier, TierKind
+from repro.core.planner import plan_transfer, replan
+from repro.core.staging import StageReport
+
+
+def _fanout(src_gbps, branch_gbps):
+    """src -> staging -> one sink per branch rate."""
+    tiers = [
+        Tier("src", TierKind.SOURCE, src_gbps * GBPS, latency_s=1e-5),
+        Tier("staging", TierKind.BURST_BUFFER, src_gbps * GBPS,
+             latency_s=1e-5),
+    ] + [
+        Tier(f"sink-{i}", TierKind.SINK, g * GBPS)
+        for i, g in enumerate(branch_gbps)
+    ]
+    links = [Link("src", "staging")] + [
+        Link("staging", f"sink-{i}") for i in range(len(branch_gbps))
+    ]
+    return DrainageBasin(tiers, links)
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=1.0, max_value=200.0),
+       branch_gbps=st.lists(st.floats(min_value=0.5, max_value=50.0),
+                            min_size=2, max_size=5))
+def test_branch_rates_conserve_every_shared_element(src_gbps, branch_gbps):
+    """Rate conservation: branch rates through any shared tier sum to no
+    more than its rate, and each branch stays within its own weakest
+    element."""
+    basin = _fanout(src_gbps, branch_gbps)
+    rates = basin.branch_rates()
+    assert sum(rates.values()) <= src_gbps * GBPS * (1 + 1e-9)
+    for path, rate in rates.items():
+        own_cap = min(basin.tier(n).bandwidth_bytes_per_s for n in path)
+        assert rate <= own_cap * (1 + 1e-9)
+        assert rate >= 0.0
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=1.0, max_value=200.0),
+       branch_gbps=st.lists(st.floats(min_value=0.5, max_value=50.0),
+                            min_size=2, max_size=5),
+       item_mib=st.floats(min_value=0.25, max_value=8.0))
+def test_multipath_plan_weights_and_aggregate(src_gbps, branch_gbps,
+                                              item_mib):
+    plan = plan_transfer(_fanout(src_gbps, branch_gbps), item_mib * MIB,
+                         stages=("deliver",))
+    assert len(plan.branches) == len(branch_gbps)
+    assert sum(b.weight for b in plan.branches) == pytest.approx(1.0)
+    assert plan.planned_bytes_per_s == pytest.approx(
+        sum(b.rate_bytes_per_s for b in plan.branches))
+    # aggregate promise never exceeds the basin's conserved capacity
+    assert plan.planned_bytes_per_s <= \
+        plan.basin.achievable_throughput() * (1 + 1e-9)
+
+
+@settings(max_examples=40)
+@given(bws=st.lists(st.floats(min_value=0.5, max_value=200.0),
+                    min_size=2, max_size=5),
+       latency_ms=st.floats(min_value=0.0, max_value=20.0),
+       jitter_ms=st.floats(min_value=0.0, max_value=50.0),
+       item_mib=st.floats(min_value=0.1, max_value=16.0))
+def test_single_path_dag_plans_like_linear(bws, latency_ms, jitter_ms,
+                                           item_mib):
+    """Equivalence: the same chain expressed implicitly (the pre-DAG
+    constructor) and as an explicit single-path DAG yields identical hop
+    plans, promise, and checksum placement."""
+    tiers = [Tier(f"t{i}", TierKind.CHANNEL, b * GBPS,
+                  latency_s=latency_ms / 1e3,
+                  jitter_s=jitter_ms / 1e3 if i == 0 else 0.0)
+             for i, b in enumerate(bws)]
+    linear = DrainageBasin(tiers)
+    dag = DrainageBasin(tiers, [Link(a.name, b.name)
+                                for a, b in zip(tiers, tiers[1:])])
+    assert dag.is_linear
+    for stages in (("move",), ("pull", "push")):
+        p_lin = plan_transfer(linear, item_mib * MIB, stages=stages,
+                              checksum=True)
+        p_dag = plan_transfer(dag, item_mib * MIB, stages=stages,
+                              checksum=True)
+        assert p_lin.hops == p_dag.hops
+        assert p_lin.checksum_index == p_dag.checksum_index
+        assert p_lin.planned_bytes_per_s == pytest.approx(
+            p_dag.planned_bytes_per_s)
+
+
+def _quiet_branch_reports(plan):
+    """Stall-free, at-rate per-branch reports (tagged names)."""
+    out = []
+    for b in plan.branches:
+        for hop in b.hops:
+            elapsed = 2.0
+            nbytes = int(hop.rate_bytes_per_s * elapsed)
+            out.append(StageReport(
+                name=f"{b.branch_id}/{hop.name}", items=32, bytes=nbytes,
+                elapsed_s=elapsed, active_s=elapsed,
+                stall_up_s=0.0, stall_down_s=0.0, errors=0))
+    return out
+
+
+@settings(max_examples=40)
+@given(src_gbps=st.floats(min_value=2.0, max_value=200.0),
+       branch_gbps=st.lists(st.floats(min_value=0.5, max_value=50.0),
+                            min_size=2, max_size=4),
+       item_mib=st.floats(min_value=0.25, max_value=8.0))
+def test_replan_idempotent_on_stall_free_branch_reports(src_gbps,
+                                                        branch_gbps,
+                                                        item_mib):
+    """Per-branch reports with no stalls and at-plan delivery carry no
+    evidence: the revised multipath plan equals the original, branch for
+    branch, weight for weight."""
+    plan = plan_transfer(_fanout(src_gbps, branch_gbps), item_mib * MIB,
+                         stages=("deliver",))
+    revised = replan(plan, _quiet_branch_reports(plan),
+                     intake_ratio={b.branch_id: 0.0
+                                   for b in plan.branches})
+    assert revised.diagnosis == {}
+    assert [b.branch_id for b in revised.branches] == \
+        [b.branch_id for b in plan.branches]
+    for old, new in zip(plan.branches, revised.branches):
+        assert new.hops == old.hops
+        assert new.weight == pytest.approx(old.weight)
+        assert new.rate_bytes_per_s == pytest.approx(old.rate_bytes_per_s)
+    assert revised.planned_bytes_per_s == pytest.approx(
+        plan.planned_bytes_per_s)

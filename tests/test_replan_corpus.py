@@ -1,0 +1,84 @@
+"""Replan regression corpus: recorded StageReport fixtures replayed
+through ``replan``, asserting the diagnosed verdict is stable.
+
+Each JSON under ``tests/data/stage_reports/`` captures one observed
+scenario — the basin model at the time, the per-hop stage reports a
+transfer produced (service-time reservoirs included), optional split-node
+intake backpressure, and the verdicts the replanner reached.  Replaying
+them pins the diagnosis logic: a refactor that flips a recorded verdict
+is a behaviour change that must be deliberate (update the fixture in the
+same commit, with a reason)."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.core.basin import DrainageBasin, GBPS, Link, Tier, TierKind
+from repro.core.planner import plan_transfer, replan
+from repro.core.staging import StageReport
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "data", "stage_reports")
+FIXTURES = sorted(glob.glob(os.path.join(DATA_DIR, "*.json")))
+
+
+def load_fixture(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def build_basin(spec: dict) -> DrainageBasin:
+    tiers = [
+        Tier(t["name"], TierKind(t["kind"]),
+             t["bandwidth_gbps"] * GBPS,
+             latency_s=t.get("latency_ms", 0.0) / 1e3,
+             jitter_s=t.get("jitter_ms", 0.0) / 1e3)
+        for t in spec["basin"]["tiers"]
+    ]
+    links_spec = spec["basin"].get("links")
+    links = None
+    if links_spec is not None:
+        links = [
+            Link(l["src"], l["dst"],
+                 l["gbps"] * GBPS if l.get("gbps") is not None else None,
+                 rtt_s=l.get("rtt_ms", 0.0) / 1e3)
+            for l in links_spec
+        ]
+    return DrainageBasin(tiers, links)
+
+
+def replay(spec: dict):
+    """The corpus replay protocol, shared with the fixture generator."""
+    basin = build_basin(spec)
+    plan = plan_transfer(basin, spec["item_bytes"],
+                         stages=tuple(spec["stages"]),
+                         ordered=spec.get("ordered", False))
+    reports = [StageReport(**r) for r in spec["reports"]]
+    return replan(plan, reports, damping=spec.get("damping", 1.0),
+                  intake_ratio=spec.get("intake_ratio"))
+
+
+def test_corpus_is_present():
+    assert len(FIXTURES) >= 5, (
+        f"expected the recorded-report corpus under {DATA_DIR}")
+
+
+@pytest.mark.parametrize("path", FIXTURES,
+                         ids=[os.path.basename(p) for p in FIXTURES])
+def test_replayed_verdict_is_stable(path):
+    spec = load_fixture(path)
+    revised = replay(spec)
+    assert revised.diagnosis == spec["expected_diagnosis"], (
+        f"{os.path.basename(path)}: verdict drifted — if deliberate, "
+        "update the fixture's expected_diagnosis with a rationale")
+    planned = spec.get("expected_planned_relative")
+    if planned is not None:
+        base = plan_transfer(build_basin(spec), spec["item_bytes"],
+                             stages=tuple(spec["stages"]),
+                             ordered=spec.get("ordered", False))
+        ratio = revised.planned_bytes_per_s / base.planned_bytes_per_s
+        if planned == "lower":
+            assert ratio < 1.0 - 1e-9
+        elif planned == "unchanged":
+            assert ratio == pytest.approx(1.0)

@@ -85,3 +85,41 @@ def test_summary_equality_is_field_wise():
     a = LayerSummary(layer="x", transfers=1, items=2, bytes=3, elapsed_s=0.5)
     b = LayerSummary(layer="x", transfers=1, items=2, bytes=3, elapsed_s=0.5)
     assert a == b                                  # dataclass semantics
+
+
+def test_append_jsonl_time_series(tmp_path):
+    """Satellite: append mode keeps a history — one snapshot line per
+    flush, each a full to_json payload plus a wall-time stamp."""
+    reg = TelemetryRegistry()
+    path = str(tmp_path / "ts.jsonl")
+    for i in range(1, 4):
+        reg.record("input", _report(nbytes=i * (1 << 20), planned=4e6))
+        reg.append_jsonl(path, timestamp=1000.0 + i)
+    lines = [json.loads(l) for l in open(path) if l.strip()]
+    assert len(lines) == 3
+    assert [l["ts"] for l in lines] == [1001.0, 1002.0, 1003.0]
+    # cumulative aggregates: bytes grow monotonically line over line
+    totals = [l["layers"]["input"]["bytes"] for l in lines]
+    assert totals == sorted(totals) and totals[-1] > totals[0]
+    # each line individually round-trips through from_json
+    restored = TelemetryRegistry.from_json(json.dumps(lines[-1]))
+    assert restored.summary()["input"].transfers == 3
+
+
+def test_timeseries_example_prints_trends(tmp_path):
+    import subprocess
+    import sys
+    reg = TelemetryRegistry()
+    path = str(tmp_path / "ts.jsonl")
+    for i in range(1, 4):
+        reg.record("input", _report(nbytes=i * (1 << 20), planned=4e6))
+        reg.append_jsonl(path, timestamp=1000.0 + i)
+    example = os.path.join(os.path.dirname(__file__), "..", "examples",
+                           "telemetry_timeseries.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, example, path], env=env,
+                         capture_output=True, text=True, check=True)
+    assert "input" in out.stdout
+    assert "MB/s" in out.stdout
