@@ -22,10 +22,23 @@ def payload_stream(n_items: int, item_bytes: int, *, latency_s: float = 0.0,
         yield base
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    """CSV row: name,us_per_call,derived."""
+#: machine-readable result rows accumulated by ``emit`` — the harness
+#: (benchmarks/run.py ``--json``) snapshots this per suite into
+#: ``BENCH_<suite>.json`` so the perf trajectory is tracked over time
+RESULTS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "",
+         **extra: Any) -> None:
+    """CSV row: name,us_per_call,derived.  ``extra`` keyword fields ride
+    along in the JSON result row only (structured throughput/speedup/
+    replan-count numbers that would be lossy as a derived string)."""
     print(f"{name},{us_per_call:.2f},{derived}")
     sys.stdout.flush()
+    row: dict[str, Any] = {"name": name, "us_per_call": us_per_call,
+                           "derived": derived}
+    row.update(extra)
+    RESULTS.append(row)
 
 
 def time_it(fn: Callable[[], Any], *, repeats: int = 3) -> tuple[float, Any]:

@@ -5,16 +5,27 @@ dry-run artifacts (compile-time analysis, CPU container); host-path
 numbers (staging/mover) are measured wall-clock and used for *relative*
 claims mirroring the paper's figures.
 
+``--json DIR`` additionally writes one machine-readable
+``BENCH_<suite>.json`` per suite (rows incl. structured throughput/
+speedup/replan-count fields, pass/fail status) so the perf trajectory is
+tracked across commits; CI uploads these as artifacts.  ``--quick`` runs
+only the fast deterministic suites (virtual-time / analytic — suitable
+for the tier-1 loop).
+
     PYTHONPATH=src python -m benchmarks.run [--only fig2,roofline]
+    PYTHONPATH=src python -m benchmarks.run --quick --json bench-json
 """
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
-from . import (fig2_latency_sweep, fig4_cca_sweep, fig8_bulk_streaming,
-               fig10_storage_bound, fig11_staged_vs_direct, global_tuning,
-               kernel_bench, multipath, online_replan, planned_vs_fixed,
+from . import (common, fig2_latency_sweep, fig4_cca_sweep,
+               fig8_bulk_streaming, fig10_storage_bound,
+               fig11_staged_vs_direct, global_tuning, kernel_bench,
+               live_swap, multipath, online_replan, planned_vs_fixed,
                roofline, table5_basin_volumes)
 
 SUITES = {
@@ -26,27 +37,60 @@ SUITES = {
     "fig11": fig11_staged_vs_direct,
     "global_tuning": global_tuning,
     "kernels": kernel_bench,
+    "live_swap": live_swap,
     "multipath": multipath,
     "online_replan": online_replan,
     "planned_vs_fixed": planned_vs_fixed,
     "roofline": roofline,
 }
 
+#: deterministic-in-virtual-time / analytic suites, fast enough for the
+#: per-push CI loop (no wall-clock sleeps, no model compiles)
+QUICK = ["table5", "live_swap", "multipath"]
+
+
+def _write_json(json_dir: str, name: str, rows: list, error: str) -> None:
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"suite": name, "ok": not error, "error": error or None,
+                   "rows": rows}, f, indent=2)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"run only the fast deterministic suites {QUICK}")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write BENCH_<suite>.json result files into DIR")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(SUITES)
+    if args.only:
+        names = args.only.split(",")
+    elif args.quick:
+        names = list(QUICK)
+    else:
+        names = list(SUITES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
+        start = len(common.RESULTS)
+        error = ""
         try:
             SUITES[name].run()
         except Exception as e:
             failed.append(name)
-            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            error = f"{type(e).__name__}: {e}"
+            print(f"{name}/ERROR,0.0,{error}")
             traceback.print_exc(file=sys.stderr)
+        except SystemExit as e:
+            # suites raise SystemExit on a failed acceptance gate — record
+            # it as a failure but keep running the remaining suites
+            failed.append(name)
+            error = str(e)
+            print(f"{name}/GATE-FAILED,0.0,{error}")
+        if args.json is not None:
+            _write_json(args.json, name, common.RESULTS[start:], error)
     if failed:
         raise SystemExit(f"benchmark suites failed: {failed}")
 

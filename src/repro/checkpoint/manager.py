@@ -143,9 +143,12 @@ def save_checkpoint(root: str, step: int, tree: Any, *,
 
     ``replan_every_items > 0`` revises the staging plan online every that
     many shards (a large model's save is a long transfer — a filesystem
-    that degrades mid-save is answered mid-save).  Passing a persistent
-    ``mover`` lets revisions carry across checkpoints: the mover's plan is
-    the live estimate, updated by each save's observed stalls.
+    that degrades mid-save is answered mid-save).  Revisions apply
+    **zero-drain**: the shard pipeline persists across revision windows
+    and re-sizes in place, so a long save never pays a teardown bubble at
+    the planning boundary.  Passing a persistent ``mover`` lets revisions
+    carry across checkpoints: the mover's plan is the live estimate,
+    updated by each save's observed stalls.
 
     ``mirror_root`` turns the save into a dual-tier mirror: every shard
     replicates down both branches of a mirrored-checkpoint plan (local

@@ -48,7 +48,8 @@ from .fidelity import (
     roofline,
 )
 from .mover import MoverConfig, TransferReport, UnifiedDataMover
-from .planner import HopPlan, TransferPlan, plan_transfer, replan
+from .planner import (HopPlan, HopRevision, PlanDelta, TransferPlan,
+                      plan_delta, plan_transfer, replan)
 from .staging import Stage, StagePipeline, StageReport
 from .telemetry import LayerSummary, TelemetryRegistry, get_registry
 
@@ -63,7 +64,8 @@ __all__ = [
     "HardwareSpec", "HloCost", "RooflineReport", "TPU_V5E",
     "analyze_hlo_text", "model_flops_dense", "roofline",
     "MoverConfig", "TransferReport", "UnifiedDataMover",
-    "HopPlan", "TransferPlan", "plan_transfer", "replan",
+    "HopPlan", "HopRevision", "PlanDelta", "TransferPlan", "plan_delta",
+    "plan_transfer", "replan",
     "LayerSummary", "TelemetryRegistry", "get_registry",
     "Stage", "StagePipeline", "StageReport",
 ]

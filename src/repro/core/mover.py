@@ -32,6 +32,37 @@ healthy ones.
 Every transfer returns a :class:`TransferReport` carrying achieved
 throughput and the fidelity gap against the planned basin — making the
 paper's headline metric a first-class, always-on observable.
+
+Zero-drain replanning (the default hot path)
+--------------------------------------------
+
+Online replanning (``replan_every_items``) used to buy adaptivity with a
+teardown bubble: every boundary drained the buffer path and rebuilt the
+stage pipeline from scratch, so a long stream repeatedly fell off line
+rate exactly when the plan was being corrected — the class of host-side
+self-inflicted stall arXiv:2308.10312 identifies as a dominant cause of
+sub-provisioned throughput.  The hot path is now **zero-drain**: one
+persistent pipeline per transfer, kept alive across revision boundaries.
+A revision is computed from the boundary *window*'s evidence
+(:func:`~repro.core.staging.delta_reports` over the running stages'
+cumulative counters) and applied as a
+:func:`~repro.core.planner.plan_delta` to the live pipeline — buffers
+resize in place, worker pools grow/retire against the live queues, and
+the split dispatcher swaps branch weights without stopping — so the data
+path sustains the paper's deterministic supply *through* the correction.
+Segment boundaries are demoted to accounting-only checkpoints; the
+stream-wide checksum and merged :class:`StageReport` observables are
+identical to the drain-per-segment path (equivalence-tested), which
+remains available as ``drain_per_segment=True`` for comparison
+(``benchmarks/live_swap.py`` measures the removed bubble).
+
+Split-mode dispatch additionally offers ``route="steal"``: a pull-based
+work-stealing route where every branch pulls from one shared intake, so
+a transiently slow branch stops accumulating queued items *within* a
+segment instead of waiting for the next weight rebalance (at the cost of
+scripted routing determinism).  Fan-out deliveries can run through a
+per-client drainer pool (``drainer_pool=True``) so one blocking client
+write no longer serializes its siblings at the merge buffer.
 """
 
 from __future__ import annotations
@@ -40,15 +71,27 @@ import dataclasses
 import hashlib
 import threading
 import time
+import traceback
 from typing import Any, Callable, Iterable, Iterator, Mapping, Optional, \
     Sequence
 
 from .basin import DrainageBasin
 from .burst_buffer import BufferClosed, BurstBuffer
-from .planner import BranchPlan, TransferPlan, replan as _replan
+from .planner import BranchPlan, STALL_THRESHOLD, TransferPlan, \
+    plan_delta, replan as _replan
 from .staging import ParallelBranchPipeline, Stage, StagePipeline, \
-    StageReport, _default_sizeof, iter_segments, merge_reports
+    StageReport, _default_sizeof, delta_reports, iter_segments, \
+    merge_reports
 from .telemetry import TelemetryRegistry
+
+#: items replicated per ``put_many`` batch by the mirror-mode dispatcher
+#: (one lock round-trip per branch queue per batch instead of per item)
+MIRROR_BATCH = 8
+
+#: a live-window intake flag only holds when the flagged branch is also
+#: at least this much slower per byte (busy time) than the fastest
+#: branch — see UnifiedDataMover._validated_intake
+BUSY_CULPRIT_RATIO = 1.5
 
 
 @dataclasses.dataclass
@@ -103,6 +146,80 @@ class _StreamDigest:
 
     def hexdigest(self) -> Optional[str]:
         return bytes(self._acc).hex() if self._acc is not None else None
+
+
+def _drain_batched(buf: BurstBuffer) -> Iterator[Any]:
+    """Drain a buffer via ``get_many``: one lock round-trip per batch of
+    *already-staged* items.  Unlike put-side batching this adds no
+    latency — ``get_many`` returns immediately with at least one item —
+    it only stops the hot merge-drain loop paying one lock acquisition
+    per item."""
+    while True:
+        try:
+            batch = buf.get_many(MIRROR_BATCH)
+        except BufferClosed:
+            return
+        yield from batch
+
+
+class _DrainerPool:
+    """Per-client drainer pool for fan-out deliveries.
+
+    The merge buffer of a parallel-branch transfer drains in one loop; a
+    delivery callable that blocks (one slow client write) would therefore
+    serialize every sibling behind it.  The pool gives each branch/client
+    its own small burst buffer plus one drainer thread, so a blocking
+    write stalls only its own client's queue while siblings keep
+    receiving — the buffer-decoupling story of §2.1 applied to the last
+    hop.  A client whose sink raises is retired: its error is kept for
+    :meth:`close` and later deliveries to it are dropped (reported via
+    the ``False`` return of :meth:`submit`) instead of failing siblings
+    mid-stream."""
+
+    def __init__(self, sinks: Mapping[str, Callable[[Any], None]],
+                 capacities: Mapping[str, int],
+                 clock: Callable[[], float]):
+        self._bufs: dict[str, BurstBuffer] = {}
+        self._threads: list[threading.Thread] = []
+        self._errors: dict[str, str] = {}
+        self._lock = threading.Lock()
+        for bid, fn in sinks.items():
+            buf: BurstBuffer = BurstBuffer(max(1, capacities.get(bid, 8)),
+                                           name=f"{bid}.deliver", clock=clock)
+            self._bufs[bid] = buf
+            t = threading.Thread(target=self._drain, args=(bid, buf, fn),
+                                 name=f"deliver-{bid}", daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def _drain(self, bid: str, buf: BurstBuffer,
+               fn: Callable[[Any], None]) -> None:
+        try:
+            for item in buf.drain():
+                fn(item)
+        except Exception:
+            with self._lock:
+                self._errors[bid] = traceback.format_exc()
+            buf.close()      # unblock a submitter; later deliveries drop
+
+    def submit(self, bid: str, item: Any) -> bool:
+        """Queue one delivery; False when the client already failed."""
+        try:
+            self._bufs[bid].put(item)
+            return True
+        except BufferClosed:
+            return False
+
+    def close(self) -> None:
+        """End-of-stream: drain every queue, join drainers, surface the
+        first client failure (siblings completed their own streams)."""
+        for buf in self._bufs.values():
+            buf.close()
+        for t in self._threads:
+            t.join()
+        if self._errors:
+            bid, tb = sorted(self._errors.items())[0]
+            raise RuntimeError(f"client sink {bid!r} failed:\n{tb}")
 
 
 @dataclasses.dataclass
@@ -185,6 +302,109 @@ class UnifiedDataMover:
             self.telemetry.record(self.layer, report)
         return report
 
+    def _run_live(
+        self,
+        source: Iterable[Any],
+        sink: Callable[[Any], None],
+        all_transforms: Sequence[tuple[str, Callable[[Any], Any]]],
+        capacity: Optional[int],
+        workers: Optional[int],
+        plan: Optional[TransferPlan],
+        chunk: int,
+        damping: float,
+    ) -> tuple[int, int, list[StageReport], int, Optional[TransferPlan]]:
+        """The zero-drain hot path: ONE persistent pipeline for the whole
+        transfer.  Revision boundaries are accounting-only checkpoints —
+        the window's evidence (cumulative-counter deltas) feeds ``replan``
+        and the resulting :class:`~repro.core.planner.PlanDelta` is
+        applied to the running stages in place (buffer resize, worker
+        spawn/retire), so no staged item drains and the supply never
+        falls off line rate while the plan is being corrected."""
+        active = plan
+        params = self._stage_params(all_transforms, active, capacity,
+                                    workers)
+        pipeline = self._build_pipeline(iter(source), all_transforms,
+                                        params, active)
+        pipeline.start()
+        items = 0
+        nbytes = 0
+        replans = 0
+        prev_cum: list[StageReport] = []
+        boundary = chunk
+        for item in pipeline.output.drain():
+            sink(item)
+            items += 1
+            nbytes += _default_sizeof(item)
+            if chunk and items >= boundary:
+                boundary += chunk
+                cum = pipeline.reports()
+                window = delta_reports(cum, prev_cum)
+                prev_cum = cum
+                for st in pipeline.stages:
+                    # windows must not re-diagnose a consumed regime
+                    st.reset_service_reservoirs()
+                if not window:
+                    continue
+                revised = _replan(active, window, damping=damping)
+                delta = plan_delta(active, revised)
+                active = revised
+                if delta:
+                    replans += 1
+                    new_params = self._stage_params(all_transforms, active,
+                                                    capacity, workers)
+                    for st, (cap, wrk) in zip(pipeline.stages, new_params):
+                        st.resize(capacity=cap, workers=wrk)
+        pipeline.join()
+        return items, nbytes, pipeline.reports(), replans, active
+
+    def _run_segmented(
+        self,
+        source: Iterable[Any],
+        sink: Callable[[Any], None],
+        all_transforms: Sequence[tuple[str, Callable[[Any], Any]]],
+        capacity: Optional[int],
+        workers: Optional[int],
+        plan: Optional[TransferPlan],
+        chunk: int,
+        damping: float,
+    ) -> tuple[int, int, list[StageReport], int, Optional[TransferPlan]]:
+        """The historical drain-per-segment path: tear the pipeline down
+        at every boundary and rebuild it on the revised plan.  Kept as an
+        explicit fallback (``drain_per_segment=True``) — it is the
+        baseline the zero-drain path is equivalence-tested and benchmarked
+        against (``benchmarks/live_swap.py``)."""
+        active = plan
+        merged: list[StageReport] = []      # folded incrementally: bounded
+        last_reports: list[StageReport] = []
+        replans = 0
+        items = 0
+        nbytes = 0
+        for segment in iter_segments(iter(source), chunk):
+            if last_reports:
+                # buffer boundary: the previous segment fully drained, so
+                # the plan can swap without dropping staged items
+                # (hypothesis -> change -> measure, mid-transfer)
+                revised = _replan(active, last_reports,
+                                  damping=damping)
+                # same revision signature as the live path (plan_delta),
+                # so the two execution modes count replans identically
+                if plan_delta(active, revised):
+                    replans += 1
+                active = revised
+            params = self._stage_params(all_transforms, active, capacity,
+                                        workers)
+            pipeline = self._build_pipeline(segment, all_transforms, params,
+                                            active)
+            pipeline.start()
+            for item in pipeline.output.drain():
+                sink(item)
+                items += 1
+                nbytes += _default_sizeof(item)
+            pipeline.join()
+            last_reports = pipeline.reports()
+            merged = merge_reports([merged, last_reports])
+        return items, nbytes, merged, replans, active
+
     def _run(
         self,
         mode: str,
@@ -197,6 +417,7 @@ class UnifiedDataMover:
         plan: Optional[TransferPlan],
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
+        drain_per_segment: bool = False,
     ) -> TransferReport:
         own_plan = plan is None
         plan = plan if plan is not None else self.plan
@@ -220,36 +441,15 @@ class UnifiedDataMover:
         # online replanning needs a plan to revise; without one the
         # transfer runs as a single segment
         chunk = replan_every_items if plan is not None else 0
-        active = plan
-        merged: list[StageReport] = []      # folded incrementally: bounded
-        last_reports: list[StageReport] = []
-        replans = 0
-        items = 0
-        nbytes = 0
         t0 = self._clock()
-        for segment in iter_segments(iter(source), chunk):
-            if last_reports:
-                # buffer boundary: the previous segment fully drained, so
-                # the plan can swap without dropping staged items
-                # (hypothesis -> change -> measure, mid-transfer)
-                revised = _replan(active, last_reports,
-                                  damping=replan_damping)
-                if ([(h.capacity, h.workers) for h in revised.hops]
-                        != [(h.capacity, h.workers) for h in active.hops]):
-                    replans += 1
-                active = revised
-            params = self._stage_params(all_transforms, active, capacity,
-                                        workers)
-            pipeline = self._build_pipeline(segment, all_transforms, params,
-                                            active)
-            pipeline.start()
-            for item in pipeline.output.drain():
-                sink(item)
-                items += 1
-                nbytes += _default_sizeof(item)
-            pipeline.join()
-            last_reports = pipeline.reports()
-            merged = merge_reports([merged, last_reports])
+        if drain_per_segment and chunk:
+            items, nbytes, merged, replans, active = self._run_segmented(
+                source, sink, all_transforms, capacity, workers, plan,
+                chunk, replan_damping)
+        else:
+            items, nbytes, merged, replans, active = self._run_live(
+                source, sink, all_transforms, capacity, workers, plan,
+                chunk, replan_damping)
         elapsed = self._clock() - t0
         self.last_plan = active
         if own_plan and self.plan is not None:
@@ -286,18 +486,22 @@ class UnifiedDataMover:
         plan: Optional[TransferPlan] = None,
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
+        drain_per_segment: bool = False,
     ) -> TransferReport:
         """Move a dataset at rest (paper section 2.2, *Bulk Transfer*).
 
         ``replan_every_items > 0`` makes the transfer *self-revising*: the
-        path runs in segments of that many items, and at each segment
-        boundary (a buffer boundary — every staged item delivered) the
-        observed stall ratios and service-time samples feed
-        :func:`~repro.core.planner.replan`, whose revised plan drives the
-        next segment.  A mid-transfer regime shift is answered mid-transfer
-        instead of at the next pipeline construction."""
+        observed stall ratios and service-time samples of each revision
+        window feed :func:`~repro.core.planner.replan`, and the revised
+        plan is applied **zero-drain** to the one persistent pipeline
+        (buffers resize in place, worker pools grow/retire live) — a
+        mid-transfer regime shift is answered mid-transfer with no
+        teardown bubble.  ``drain_per_segment=True`` selects the
+        historical segment-drain-and-rebuild path instead (the
+        equivalence/benchmark baseline)."""
         return self._run("bulk", source, sink, transforms, capacity, workers,
-                         checksum, plan, replan_every_items, replan_damping)
+                         checksum, plan, replan_every_items, replan_damping,
+                         drain_per_segment)
 
     def streaming_transfer(
         self,
@@ -311,17 +515,18 @@ class UnifiedDataMover:
         plan: Optional[TransferPlan] = None,
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
+        drain_per_segment: bool = False,
     ) -> TransferReport:
         """Move a still-growing stream (paper section 2.2, *Streaming
         Transfer*): the source iterator may block while data is produced;
         staging overlaps production with transit, which is exactly what the
         buffer path provides.  Identical machinery, different source
         contract — the unified-mover property.  ``replan_every_items``
-        revises the plan online at buffer boundaries, as in
-        :meth:`bulk_transfer`."""
+        revises the plan online, applied zero-drain to the persistent
+        pipeline as in :meth:`bulk_transfer`."""
         return self._run("streaming", source, sink, transforms, capacity,
                          workers, checksum, plan, replan_every_items,
-                         replan_damping)
+                         replan_damping, drain_per_segment)
 
     # -- parallel-branch path (DAG plans) --------------------------------------
 
@@ -332,10 +537,21 @@ class UnifiedDataMover:
         | Mapping[str, Sequence[tuple[str, Callable[[Any], Any]]]],
         capacity: Optional[int],
         workers: Optional[int],
+        route: str = "deal",
     ) -> tuple[dict[str, BurstBuffer], ParallelBranchPipeline]:
-        """Per-branch input queue + stage chain from a multipath plan."""
+        """Per-branch input queue + stage chain from a multipath plan.
+
+        ``route="steal"`` wires every branch to ONE shared intake queue
+        (sized to the branches' aggregate first-hop capacity): branches
+        pull items as they free up instead of being dealt a share, so a
+        transiently slow branch self-throttles within the segment."""
         queues: dict[str, BurstBuffer] = {}
         branches: list[tuple[str, StagePipeline]] = []
+        shared: Optional[BurstBuffer] = None
+        if route == "steal":
+            agg = sum(b.hops[0].capacity for b in plan.branches)
+            shared = BurstBuffer(capacity or max(1, agg),
+                                 name="steal.inq", clock=self._clock)
         for b in plan.branches:
             tf = (transforms.get(b.branch_id, ())
                   if isinstance(transforms, Mapping) else transforms)
@@ -347,38 +563,70 @@ class UnifiedDataMover:
                     name, capacity=capacity or hop.capacity,
                     workers=workers or hop.workers, transform=fn,
                     clock=self._clock))
-            q = BurstBuffer(b.hops[0].capacity,
-                            name=f"{b.branch_id}.inq", clock=self._clock)
+            if shared is not None:
+                q = shared
+            else:
+                q = BurstBuffer(b.hops[0].capacity,
+                                name=f"{b.branch_id}.inq", clock=self._clock)
             queues[b.branch_id] = q
             branches.append((b.branch_id, StagePipeline(q.drain(), stages)))
-        return queues, ParallelBranchPipeline(branches, clock=self._clock,
-                                              upstreams=queues)
+        pbp = ParallelBranchPipeline(
+            branches, clock=self._clock,
+            upstreams=None if shared is not None else queues,
+            shared_upstream=shared)
+        return queues, pbp
 
     @staticmethod
     def _dispatch(segment: Iterator[Any], queues: dict[str, BurstBuffer],
-                  branch_plans: Sequence[BranchPlan], mode: str,
-                  on_item: Callable[[Any], Any]) -> Callable[[], None]:
+                  weights: dict[str, float], order: Sequence[str],
+                  mode: str, on_item: Callable[[Any], Any],
+                  route: str = "deal",
+                  mirror_batch: int = MIRROR_BATCH,
+                  err_out: Optional[list[str]] = None
+                  ) -> Callable[[], None]:
         """The split/merge node, executable: pulls the source and routes.
 
-        ``split``: weighted deficit round-robin over the plan's branch
-        weights — deterministic routing, so a simulated run is a pure
-        function of the script.  ``mirror``: every item goes down every
-        branch (replication), pacing at the slowest branch's intake.
+        ``split`` + ``route="deal"``: weighted deficit round-robin over
+        ``weights`` — deterministic routing, so a simulated run is a pure
+        function of the script.  ``weights`` is read live per item: a
+        zero-drain plan revision swaps new branch shares into the dict and
+        the running dispatcher re-deals from the next item on.  ``split``
+        + ``route="steal"``: every item goes to the shared intake queue;
+        branches pull as they free up (self-balancing, not scripted).
+        ``mirror``: every item goes down every branch (replication),
+        batched ``mirror_batch`` deep — one ``put_many`` lock round-trip
+        per branch per batch — pacing at the slowest branch's intake.
+        The caller passes ``mirror_batch=1`` for ordered (latency-
+        sensitive) streams, where holding tokens to fill a batch would
+        trade delivery latency for lock traffic.
         """
-        weights = {b.branch_id: max(b.weight, 0.0) for b in branch_plans}
-        if sum(weights.values()) <= 0:
-            weights = {bid: 1.0 for bid in weights}
-        deficits = {bid: 0.0 for bid in weights}
-        order = [b.branch_id for b in branch_plans]
+        deficits = {bid: 0.0 for bid in order}
 
         def run() -> None:
             try:
+                if mode == "mirror":
+                    batch: list[Any] = []
+                    for item in segment:
+                        on_item(item)
+                        batch.append(item)
+                        if len(batch) >= mirror_batch:
+                            for bid in order:
+                                queues[bid].put_many(batch)
+                            batch = []
+                    if batch:
+                        for bid in order:
+                            queues[bid].put_many(batch)
+                    return
+                if route == "steal":
+                    shared = queues[order[0]]
+                    for item in segment:
+                        on_item(item)
+                        shared.put(item)
+                    return
                 for item in segment:
                     on_item(item)
-                    if mode == "mirror":
-                        for bid in order:
-                            queues[bid].put(item)
-                        continue
+                    # weights is read live: a zero-drain revision swaps
+                    # new (pre-normalized) shares in without stopping us
                     for bid in order:
                         deficits[bid] += weights[bid]
                     pick = max(order, key=lambda bid: deficits[bid])
@@ -386,11 +634,265 @@ class UnifiedDataMover:
                     queues[pick].put(item)
             except BufferClosed:
                 pass
+            except Exception:
+                # a raising SOURCE must fail the transfer, not silently
+                # truncate it: record for the caller to re-raise after
+                # the branches drain (parity with the staged path, where
+                # a source error surfaces through the stage join)
+                if err_out is not None:
+                    err_out.append(traceback.format_exc())
             finally:
                 for q in queues.values():
                     q.close()
 
         return run
+
+    @staticmethod
+    def _validated_intake(plan: TransferPlan,
+                          window: Sequence[StageReport],
+                          intake: dict[str, float],
+                          workers_by_report: Mapping[str, int]
+                          ) -> dict[str, float]:
+        """Corroborate a live window's intake backpressure before replan
+        sees it.
+
+        The intake ratio measures where the dispatcher's *blocked time*
+        landed — exact over a drained segment, but phase-noisy while the
+        pipeline keeps running: a window that straddles a regime
+        transition can charge a healthy branch with the frontier advance
+        a degraded sibling caused (and its routing shadow makes that same
+        healthy branch read as underdelivering, so the spurious flag
+        turns into a spurious verdict).  A true culprit is also *slower
+        per byte* on its own channel, and the window reports measure that
+        directly — busy time (``elapsed*workers`` minus both stall sides)
+        per byte, a per-item service quantity the scheduling phase cannot
+        inflate.  ``workers_by_report`` maps a tagged report name to the
+        worker count its stage *actually ran* this window — plan values
+        would be wrong under an explicit ``workers`` override or right
+        after a revision resized the pool.  Any flag-capable ratio whose
+        branch is not clearly the slowest (``BUSY_CULPRIT_RATIO`` over
+        the fastest) is zeroed, so the culprit rule only ever fires on
+        corroborated backpressure."""
+        busy_per_byte: dict[str, float] = {}
+        for branch in plan.branches:
+            busy = 0.0
+            nbytes = 0
+            for r in window:
+                if "/" not in r.name:
+                    continue
+                bid = r.name.split("/", 1)[0]
+                if bid != branch.branch_id:
+                    continue
+                wrk = workers_by_report.get(r.name, 1)
+                busy += max(0.0, r.elapsed_s * wrk
+                            - r.stall_up_s - r.stall_down_s)
+                nbytes += r.bytes
+            if nbytes > 0 and busy > 0:
+                busy_per_byte[branch.branch_id] = busy / nbytes
+        if len(busy_per_byte) < 2:
+            return intake
+        fastest = min(busy_per_byte.values())
+        out = dict(intake)
+        for bid, ratio in intake.items():
+            # a branch with NO byte evidence this window (too slow to
+            # complete a single item) cannot be exonerated — infinite
+            # busy-per-byte keeps its flag
+            if (ratio >= STALL_THRESHOLD
+                    and busy_per_byte.get(bid, float("inf"))
+                    < BUSY_CULPRIT_RATIO * fastest):
+                out[bid] = 0.0
+        return out
+
+    @staticmethod
+    def _normalized_weights(branches: Sequence[BranchPlan]
+                            ) -> dict[str, float]:
+        """Traffic shares the dispatcher deals by (uniform fallback when
+        a degenerate plan zeroes every weight)."""
+        w = {b.branch_id: max(b.weight, 0.0) for b in branches}
+        if sum(w.values()) <= 0:
+            w = {bid: 1.0 for bid in w}
+        return w
+
+    def _parallel_live(
+        self,
+        source: Iterable[Any],
+        deliver: Callable[[str, Any], bool],
+        plan: TransferPlan,
+        mode: str,
+        route: str,
+        transforms,
+        capacity: Optional[int],
+        workers: Optional[int],
+        chunk: int,
+        damping: float,
+        digest: _StreamDigest,
+    ) -> tuple[int, int, list[StageReport], int, TransferPlan]:
+        """Zero-drain parallel path: queues, branch stages, and the
+        dispatcher live for the whole transfer.  Revision checkpoints
+        compute the window's branch-tagged evidence + split-node intake
+        ratios, and apply the resulting plan delta to the running
+        machinery — weights swap into the live dispatcher, stages and
+        queues resize in place."""
+        active = plan
+        queues, pbp = self._branch_pipelines(active, transforms, capacity,
+                                             workers, route)
+        weights = self._normalized_weights(active.branches)
+        order = [b.branch_id for b in active.branches]
+        # ordered plans are the latency-sensitive streams (decode token
+        # fan-out): deliver per item instead of holding a batch
+        mirror_batch = 1 if plan.ordered else MIRROR_BATCH
+        source_err: list[str] = []
+        dispatch = threading.Thread(
+            target=self._dispatch(iter(source), queues, weights, order,
+                                  mode, digest.add, route, mirror_batch,
+                                  source_err),
+            name="branch-dispatch", daemon=True)
+        pbp.start()
+        dispatch.start()
+        items = 0
+        nbytes = 0
+        seen = 0            # attempted deliveries: the boundary clock —
+        #                     a retired drainer-pool client must not
+        #                     stretch every later revision window
+        replans = 0
+        prev_cum: list[StageReport] = []
+        prev_stall = {bid: 0.0 for bid in queues}
+        t_prev = self._clock()
+        # a boundary is chunk *source* items; mirror counts deliveries
+        # once per branch
+        step = chunk * (len(order) if mode == "mirror" else 1)
+        boundary = step
+        for bid, item in _drain_batched(pbp.output):
+            seen += 1
+            if deliver(bid, item):
+                items += 1
+                nbytes += _default_sizeof(item)
+            if step and seen >= boundary:
+                boundary += step
+                t_now = self._clock()
+                t_win = t_now - t_prev
+                t_prev = t_now
+                cum = pbp.reports()
+                window = delta_reports(cum, prev_cum)
+                prev_cum = cum
+                for _bid, pipe in pbp.branches:
+                    for st in pipe.stages:
+                        st.reset_service_reservoirs()
+                if route == "steal":
+                    # pull-based routing self-balances within the window
+                    # and a shared intake has no per-branch backpressure
+                    # signal: replan sees intake data with no culprits
+                    intake: dict[str, float] = {}
+                else:
+                    intake = {}
+                    for qbid, q in queues.items():
+                        stall = q.stats.producer_stall_s
+                        intake[qbid] = ((stall - prev_stall[qbid]) / t_win
+                                        if t_win > 0 else 0.0)
+                        prev_stall[qbid] = stall
+                if not window:
+                    continue
+                if intake:
+                    stage_workers = {
+                        f"{bid2}/{st.name}": st.workers
+                        for bid2, pipe in pbp.branches
+                        for st in pipe.stages}
+                    intake = self._validated_intake(active, window, intake,
+                                                    stage_workers)
+                revised = _replan(active, window, damping=damping,
+                                  intake_ratio=intake)
+                delta = plan_delta(active, revised)
+                active = revised
+                if delta:
+                    replans += 1
+                    for bid2, pipe in pbp.branches:
+                        b = active.branch(bid2)
+                        for i, st in enumerate(pipe.stages):
+                            hop = b.hop_for(i, st.name)
+                            st.resize(capacity=capacity or hop.capacity,
+                                      workers=workers or hop.workers)
+                    if route == "steal":
+                        agg = sum(b.hops[0].capacity
+                                  for b in active.branches)
+                        queues[order[0]].resize(capacity or max(1, agg))
+                    else:
+                        for b in active.branches:
+                            queues[b.branch_id].resize(b.hops[0].capacity)
+                    weights.update(self._normalized_weights(active.branches))
+        dispatch.join()
+        pbp.join()
+        if source_err:
+            raise RuntimeError(f"transfer source failed:\n{source_err[0]}")
+        return items, nbytes, pbp.reports(), replans, active
+
+    def _parallel_segmented(
+        self,
+        source: Iterable[Any],
+        deliver: Callable[[str, Any], bool],
+        plan: TransferPlan,
+        mode: str,
+        route: str,
+        transforms,
+        capacity: Optional[int],
+        workers: Optional[int],
+        chunk: int,
+        damping: float,
+        digest: _StreamDigest,
+    ) -> tuple[int, int, list[StageReport], int, TransferPlan]:
+        """Historical drain-per-segment parallel path (explicit
+        ``drain_per_segment=True``): full teardown + rebuild at every
+        boundary — the baseline the zero-drain path is measured against."""
+        active = plan
+        merged: list[StageReport] = []
+        last_reports: list[StageReport] = []
+        last_intake: dict[str, float] = {}
+        replans = 0
+        items = 0
+        nbytes = 0
+        for segment in iter_segments(iter(source), chunk):
+            if last_reports:
+                revised = _replan(active, last_reports,
+                                  damping=damping,
+                                  intake_ratio=last_intake)
+                if plan_delta(active, revised):
+                    replans += 1
+                active = revised
+            queues, pbp = self._branch_pipelines(active, transforms,
+                                                 capacity, workers, route)
+            weights = self._normalized_weights(active.branches)
+            order = [b.branch_id for b in active.branches]
+            source_err: list[str] = []
+            dispatch = threading.Thread(
+                target=self._dispatch(segment, queues, weights, order,
+                                      mode, digest.add, route,
+                                      1 if plan.ordered else MIRROR_BATCH,
+                                      source_err),
+                name="branch-dispatch", daemon=True)
+            t_seg0 = self._clock()
+            pbp.start()
+            dispatch.start()
+            for bid, item in _drain_batched(pbp.output):
+                if deliver(bid, item):
+                    items += 1
+                    nbytes += _default_sizeof(item)
+            dispatch.join()
+            pbp.join()
+            if source_err:
+                raise RuntimeError(
+                    f"transfer source failed:\n{source_err[0]}")
+            t_seg = self._clock() - t_seg0
+            # the split node's per-branch backpressure: the attribution
+            # signal replan uses to single out a slow branch (§2.2)
+            if route == "steal":
+                last_intake = {}
+            else:
+                last_intake = {
+                    bid: (q.stats.producer_stall_s / t_seg
+                          if t_seg > 0 else 0.0)
+                    for bid, q in queues.items()}
+            last_reports = pbp.reports()
+            merged = merge_reports([merged, last_reports])
+        return items, nbytes, merged, replans, active
 
     def parallel_transfer(
         self,
@@ -399,6 +901,7 @@ class UnifiedDataMover:
         *,
         plan: Optional[TransferPlan] = None,
         mode: str = "split",
+        route: str = "deal",
         transforms: Sequence[tuple[str, Callable[[Any], Any]]]
         | Mapping[str, Sequence[tuple[str, Callable[[Any], Any]]]] = (),
         capacity: Optional[int] = None,
@@ -406,6 +909,8 @@ class UnifiedDataMover:
         checksum: Optional[bool] = None,
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
+        drain_per_segment: bool = False,
+        drainer_pool: bool = False,
     ) -> TransferReport:
         """Move a stream down every branch of a multipath plan at once.
 
@@ -418,6 +923,14 @@ class UnifiedDataMover:
         at the slowest branch, which is the point: a mirror is only as
         durable as its slowest copy).
 
+        ``route`` picks the split-mode routing discipline:
+        ``"deal"`` (default) is the deterministic weighted-deficit
+        round-robin over the plan's branch weights; ``"steal"`` is
+        pull-based work stealing — every branch pulls one shared intake
+        queue, so a transiently slow branch stops accumulating queued
+        items *within* a segment instead of waiting for the next weight
+        rebalance, at the cost of scripted routing determinism.
+
         ``transforms`` applies to every branch, or a mapping
         ``branch_id -> transforms`` gives each branch its own chain (a
         mirrored save writes different directories per branch).  ``sink``
@@ -425,14 +938,26 @@ class UnifiedDataMover:
         Integrity (``checksum``) hashes each *source* item once at the
         split node, overlapping branch transit.
 
-        ``replan_every_items > 0`` revises the plan at segment boundaries
-        from branch-tagged reports: a degraded branch gets its verdict in
-        ``plan.diagnosis["<branch>/<hop>"]`` and loses traffic share to
-        healthy branches (split mode) on the next segment.  Items/bytes
-        in the returned report count *deliveries* (mirror mode moves each
-        item once per branch)."""
+        ``replan_every_items > 0`` revises the plan online from
+        branch-tagged window reports: a degraded branch gets its verdict
+        in ``plan.diagnosis["<branch>/<hop>"]`` and loses traffic share
+        to healthy branches (split mode).  The revision applies
+        **zero-drain** — weights swap into the live dispatcher, stages
+        and queues resize in place (``drain_per_segment=True`` restores
+        the historical teardown-per-segment behaviour).
+
+        ``drainer_pool=True`` routes deliveries through a per-branch
+        drainer pool (one small buffer + drainer thread per branch), so
+        one blocking client write no longer serializes its siblings at
+        the merge buffer; a single shared ``sink`` callable must then be
+        thread-safe.  Items/bytes in the returned report count
+        *deliveries* (mirror mode moves each item once per branch)."""
         if mode not in ("split", "mirror"):
             raise ValueError(f"unknown parallel mode {mode!r}")
+        if route not in ("deal", "steal"):
+            raise ValueError(f"unknown split route {route!r}")
+        if route == "steal" and mode != "split":
+            raise ValueError("route='steal' requires mode='split'")
         own_plan = plan is None
         plan = plan if plan is not None else self.plan
         if plan is None or not plan.branches:
@@ -445,47 +970,44 @@ class UnifiedDataMover:
                 return sink[bid]
             return sink
 
+        pool: Optional[_DrainerPool] = None
+        if drainer_pool:
+            pool = _DrainerPool(
+                {b.branch_id: sink_for(b.branch_id) for b in plan.branches},
+                {b.branch_id: capacity or b.hops[-1].capacity
+                 for b in plan.branches},
+                self._clock)
+
+        def deliver(bid: str, item: Any) -> bool:
+            if pool is not None:
+                return pool.submit(bid, item)
+            sink_for(bid)(item)
+            return True
+
         chunk = replan_every_items
-        active = plan
-        merged: list[StageReport] = []
-        last_reports: list[StageReport] = []
-        last_intake: dict[str, float] = {}
-        replans = 0
-        items = 0
-        nbytes = 0
         t0 = self._clock()
-        for segment in iter_segments(iter(source), chunk):
-            if last_reports:
-                revised = _replan(active, last_reports,
-                                  damping=replan_damping,
-                                  intake_ratio=last_intake)
-                if (self._branch_params(revised)
-                        != self._branch_params(active)):
-                    replans += 1
-                active = revised
-            queues, pbp = self._branch_pipelines(active, transforms,
-                                                 capacity, workers)
-            dispatch = threading.Thread(
-                target=self._dispatch(segment, queues, active.branches,
-                                      mode, digest.add),
-                name="branch-dispatch", daemon=True)
-            t_seg0 = self._clock()
-            pbp.start()
-            dispatch.start()
-            for bid, item in pbp.output.drain():
-                sink_for(bid)(item)
-                items += 1
-                nbytes += _default_sizeof(item)
-            dispatch.join()
-            pbp.join()
-            t_seg = self._clock() - t_seg0
-            # the split node's per-branch backpressure: the attribution
-            # signal replan uses to single out a slow branch (§2.2)
-            last_intake = {
-                bid: (q.stats.producer_stall_s / t_seg if t_seg > 0 else 0.0)
-                for bid, q in queues.items()}
-            last_reports = pbp.reports()
-            merged = merge_reports([merged, last_reports])
+        try:
+            if drain_per_segment or not chunk:
+                items, nbytes, merged, replans, active = \
+                    self._parallel_segmented(
+                        source, deliver, plan, mode, route, transforms,
+                        capacity, workers, chunk, replan_damping, digest)
+            else:
+                items, nbytes, merged, replans, active = \
+                    self._parallel_live(
+                        source, deliver, plan, mode, route, transforms,
+                        capacity, workers, chunk, replan_damping, digest)
+        except BaseException:
+            # the primary failure wins: drain the pool for cleanup but do
+            # not let a retired client's error replace the real traceback
+            if pool is not None:
+                try:
+                    pool.close()
+                except RuntimeError:
+                    pass
+            raise
+        if pool is not None:
+            pool.close()
         elapsed = self._clock() - t0
         self.last_plan = active
         if own_plan and self.plan is not None:
@@ -508,13 +1030,6 @@ class UnifiedDataMover:
             planned_bytes_per_s=planned,
             replans=replans,
         ))
-
-    @staticmethod
-    def _branch_params(plan: TransferPlan) -> list[tuple]:
-        """The revision signature: staging params + routing weights."""
-        return [(b.branch_id, round(b.weight, 3),
-                 tuple((h.capacity, h.workers) for h in b.hops))
-                for b in plan.branches]
 
     # -- direct (un-staged) path, for comparison -------------------------------
 

@@ -241,6 +241,70 @@ class TransferPlan:
         return "\n".join(lines) + f"{diag})"
 
 
+@dataclasses.dataclass(frozen=True)
+class HopRevision:
+    """Revised staging parameters for one live hop."""
+
+    name: str
+    capacity: int
+    workers: int
+
+
+@dataclasses.dataclass
+class PlanDelta:
+    """What actually changed between two plans over the same topology —
+    the unit of **zero-drain** replanning.
+
+    A revised :class:`TransferPlan` is a full re-derivation; a running
+    pipeline does not need to be torn down to adopt it, only to apply the
+    difference: per-hop capacity/worker revisions (resized in place via
+    ``Stage.resize``) and per-branch traffic-weight shifts (swapped into
+    the live dispatcher).  Falsy when the revision changed nothing —
+    the mover's ``replans`` counter counts truthy deltas only."""
+
+    #: linear-path hop name -> revised params (changed hops only)
+    hops: dict[str, HopRevision] = dataclasses.field(default_factory=dict)
+    #: branch id -> hop name -> revised params (changed hops only)
+    branch_hops: dict[str, dict[str, HopRevision]] = \
+        dataclasses.field(default_factory=dict)
+    #: branch id -> new traffic weight (branches whose share shifted)
+    weights: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return bool(self.hops or self.branch_hops or self.weights)
+
+
+def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
+    """The applicable difference between two same-topology plans.
+
+    Hops match by name (a replan preserves stage names and order); a
+    weight counts as shifted beyond round-off at 3 decimals — the same
+    signature the drain-path revision counter used, so the two execution
+    modes count replans identically."""
+    delta = PlanDelta()
+    old_hops = {h.name: h for h in old.hops}
+    for h in new.hops:
+        prev = old_hops.get(h.name)
+        if prev is None or (h.capacity, h.workers) != (prev.capacity,
+                                                       prev.workers):
+            delta.hops[h.name] = HopRevision(h.name, h.capacity, h.workers)
+    old_branches = {b.branch_id: b for b in old.branches}
+    for b in new.branches:
+        prev = old_branches.get(b.branch_id)
+        if prev is not None and round(b.weight, 3) != round(prev.weight, 3):
+            delta.weights[b.branch_id] = b.weight
+        prev_hops = {h.name: h for h in prev.hops} if prev is not None else {}
+        changed = {}
+        for h in b.hops:
+            ph = prev_hops.get(h.name)
+            if ph is None or (h.capacity, h.workers) != (ph.capacity,
+                                                         ph.workers):
+                changed[h.name] = HopRevision(h.name, h.capacity, h.workers)
+        if changed:
+            delta.branch_hops[b.branch_id] = changed
+    return delta
+
+
 def _segment(tiers: Sequence[Tier], n_stages: int, j: int
              ) -> tuple[int, int]:
     """Tier-index span [lo, hi] that stage ``j`` of ``n_stages`` covers.

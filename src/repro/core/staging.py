@@ -27,6 +27,16 @@ one :class:`StagePipeline` per branch, each with its own source, all
 draining into a shared merge buffer as ``(branch_id, item)`` pairs, and
 every branch's :class:`StageReport` tagged ``"<branch>/<stage>"`` so the
 planner's ``replan`` can attribute a stall to the one degraded branch.
+
+Stages are **live-resizable**: :meth:`Stage.resize` grows or shrinks the
+worker pool against the running queues (spawn new workers / lazily retire
+surplus ones — no thread-pool teardown) and re-sizes the stage's burst
+buffer in place.  Together with :meth:`BurstBuffer.resize
+<repro.core.burst_buffer.BurstBuffer.resize>` this is what lets the mover
+apply a revised plan to a *running* pipeline (zero-drain replanning)
+instead of draining and rebuilding it at every segment boundary;
+:func:`delta_report` carves the continuously-running stage's cumulative
+counters into per-revision-window evidence for ``replan``.
 """
 
 from __future__ import annotations
@@ -158,6 +168,44 @@ def merge_reports(chunks: Sequence[Sequence[StageReport]]) -> list[StageReport]:
     return [merged[n] for n in order]
 
 
+def delta_report(cur: StageReport,
+                 prev: Optional[StageReport]) -> StageReport:
+    """The window between two cumulative reports of one *continuously
+    running* stage — the zero-drain counterpart of a per-segment report.
+
+    A persistent pipeline's counters accumulate from start; feeding the
+    same early stall seconds through ``replan`` at every revision
+    checkpoint would re-apply consumed evidence and defeat damping.  This
+    subtracts the previously-consumed totals, leaving exactly one
+    revision window's evidence.  Service reservoirs do not difference —
+    the caller resets them per window (``Stage.reset_service_reservoirs``)
+    so ``cur`` already carries only fresh samples, which pass through."""
+    if prev is None:
+        return cur
+    return dataclasses.replace(
+        cur,
+        items=cur.items - prev.items,
+        bytes=cur.bytes - prev.bytes,
+        elapsed_s=cur.elapsed_s - prev.elapsed_s,
+        active_s=max(0.0, cur.active_s - prev.active_s),
+        stall_up_s=cur.stall_up_s - prev.stall_up_s,
+        stall_down_s=cur.stall_down_s - prev.stall_down_s,
+        errors=cur.errors - prev.errors)
+
+
+def delta_reports(cur: Sequence[StageReport],
+                  prev: Sequence[StageReport]) -> list[StageReport]:
+    """Per-stage windows between two cumulative report snapshots (matched
+    by name; a stage absent from ``prev`` passes through whole)."""
+    by_name = {r.name: r for r in prev}
+    out = []
+    for r in cur:
+        d = delta_report(r, by_name.get(r.name))
+        if d.elapsed_s > 0 and d.items > 0:
+            out.append(d)
+    return out
+
+
 class Stage(Generic[T, U]):
     """One staging hop: pull from upstream, transform, stage into a buffer."""
 
@@ -185,7 +233,10 @@ class Stage(Generic[T, U]):
         self._stall_up_s = 0.0
         self._errors = 0
         self._error_tb: Optional[str] = None
-        self._finished = 0
+        self._upstream: Optional[Callable[[], Optional[T]]] = None
+        self._active = 0        # spawned minus exited workers
+        self._retire = 0        # pending lazy-retirement requests
+        self._spawned = 0       # lifetime worker counter (thread names)
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -198,65 +249,134 @@ class Stage(Generic[T, U]):
         """Begin staging.  ``upstream()`` returns the next item or ``None``
         at end-of-stream; it must be thread-safe for ``workers > 1``."""
         self._t_start = self._clock()
+        self._upstream = upstream
+        self._spawn(self.workers)
+
+    def _spawn(self, n: int) -> None:
+        """Add ``n`` workers against the live upstream/buffer (used at
+        start and by live pool growth — no pipeline teardown either way)."""
+        if n <= 0:
+            return
         # simulation seam: a virtual clock (tests/simbasin.py) anchors the
         # spawned workers' timelines to this instant, so simulated
-        # concurrency is deterministic; a real clock has no such hook
+        # concurrency is deterministic; a real clock has no such hook.
+        # Only the FIRST spawn anchors: a live pool growth must not
+        # re-anchor at the global frontier — that frontier includes the
+        # laggard completions of unrelated slow branches, and charging
+        # them to a healthy stage's new workers would be phantom delay.
         spawn_hook = getattr(self._clock, "on_threads_spawn", None)
-        if spawn_hook is not None:
+        if spawn_hook is not None and self._spawned == 0:
             spawn_hook()
-
-        def run() -> None:
-            try:
-                while True:
-                    t0 = self._clock()
-                    item = upstream()
-                    dt_up = self._clock() - t0
-                    with self._lock:
-                        self._stall_up_s += dt_up
-                    if item is None:
-                        break
-                    out = self.transform(item) if self.transform else item
-                    t1 = self._clock()
-                    with self._lock:
-                        # upstream service sample = pull + transform: the
-                        # full cost of acquiring one staged item.  A slow
-                        # transform (e.g. a storage fetch riding the hop)
-                        # keeps the worker busy rather than stalled, and
-                        # only this sample reveals it to the replanner.
-                        self._service_up.add(t1 - t0)
-                    try:
-                        self.buffer.put(out)
-                    except BufferClosed:
-                        break
-                    dt_down = self._clock() - t1
-                    with self._lock:
-                        self._items += 1
-                        self._bytes += self.sizeof(out)
-                        self._service_down.add(dt_down)
-                        self._t_last = self._clock()
-            except Exception:
-                with self._lock:
-                    self._errors += 1
-                    self._error_tb = traceback.format_exc()
-            finally:
-                with self._lock:
-                    # last worker out closes the buffer (explicit counter:
-                    # checking thread liveness races when several workers
-                    # exit together and nobody closes)
-                    self._finished += 1
-                    if self._finished == len(self._threads):
-                        self._t_end = self._clock()
-                        self.buffer.close()
-
-        self._threads = [
-            threading.Thread(target=run, name=f"{self.name}-{i}", daemon=True)
-            for i in range(self.workers)
-        ]
-        for t in self._threads:
+        with self._lock:
+            threads = [
+                threading.Thread(target=self._run_worker,
+                                 name=f"{self.name}-{self._spawned + i}",
+                                 daemon=True)
+                for i in range(n)
+            ]
+            self._spawned += n
+            self._active += n
+            # prune exited workers so a long-lived pipeline's grow/retire
+            # churn doesn't accumulate dead Thread objects without bound
+            self._threads = [t for t in self._threads
+                             if t.is_alive()] + threads
+        for t in threads:
             t.start()
 
+    def _run_worker(self) -> None:
+        upstream = self._upstream
+        try:
+            while True:
+                with self._lock:
+                    # lazy retirement: a live pool shrink takes effect at
+                    # the worker's next loop head, never mid-item
+                    if self._retire > 0:
+                        self._retire -= 1
+                        return
+                t0 = self._clock()
+                item = upstream()
+                dt_up = self._clock() - t0
+                with self._lock:
+                    self._stall_up_s += dt_up
+                if item is None:
+                    break
+                out = self.transform(item) if self.transform else item
+                t1 = self._clock()
+                with self._lock:
+                    # upstream service sample = pull + transform: the
+                    # full cost of acquiring one staged item.  A slow
+                    # transform (e.g. a storage fetch riding the hop)
+                    # keeps the worker busy rather than stalled, and
+                    # only this sample reveals it to the replanner.
+                    self._service_up.add(t1 - t0)
+                try:
+                    self.buffer.put(out)
+                except BufferClosed:
+                    break
+                dt_down = self._clock() - t1
+                with self._lock:
+                    self._items += 1
+                    self._bytes += self.sizeof(out)
+                    self._service_down.add(dt_down)
+                    self._t_last = self._clock()
+        except Exception:
+            with self._lock:
+                self._errors += 1
+                self._error_tb = traceback.format_exc()
+        finally:
+            with self._lock:
+                # last worker out closes the buffer (explicit counter:
+                # checking thread liveness races when several workers
+                # exit together and nobody closes).  Retired workers only
+                # decrement — resize never shrinks the target below one,
+                # so the count reaches zero exactly at end-of-stream.
+                self._active -= 1
+                if self._active == 0 and self._t_end is None:
+                    self._t_end = self._clock()
+                    self.buffer.close()
+
+    def resize(self, *, capacity: Optional[int] = None,
+               workers: Optional[int] = None) -> None:
+        """Apply revised staging parameters to the *running* stage.
+
+        ``capacity`` re-sizes the stage's burst buffer in place
+        (:meth:`BurstBuffer.resize
+        <repro.core.burst_buffer.BurstBuffer.resize>`); ``workers`` grows
+        the pool by spawning workers against the live queues or shrinks it
+        by lazily retiring surplus workers (each exits at its next loop
+        head — no thread-pool teardown, no staged item dropped).  Both are
+        no-ops when the value is unchanged; the worker target is clamped
+        to >= 1 so the stream can always finish."""
+        if capacity is not None and capacity != self.buffer.capacity:
+            self.buffer.resize(capacity)
+        if workers is None:
+            return
+        target = max(1, int(workers))
+        grow = 0
+        with self._lock:
+            if self._t_end is not None:
+                # stream already ended: record the target for reporting
+                # but there is nothing left to staff
+                self.workers = target
+                return
+            current = self._active - self._retire
+            self.workers = target
+            if target > current:
+                grow = target - current
+                # growth first cancels pending retirements (cheaper than
+                # spawning a thread while another is about to exit)
+                cancelled = min(self._retire, grow)
+                self._retire -= cancelled
+                grow -= cancelled
+            elif target < current:
+                self._retire += current - target
+        if grow > 0 and self._upstream is not None:
+            self._spawn(grow)
+
     def join(self, timeout: Optional[float] = None) -> None:
-        for t in self._threads:
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
             t.join(timeout)
         if self._error_tb:
             raise RuntimeError(f"stage {self.name} failed:\n{self._error_tb}")
@@ -370,7 +490,8 @@ class ParallelBranchPipeline:
     def __init__(self, branches: Sequence[tuple[str, StagePipeline]], *,
                  merge_capacity: int = 8,
                  clock: Optional[Callable[[], float]] = None,
-                 upstreams: Optional[dict[str, BurstBuffer]] = None):
+                 upstreams: Optional[dict[str, BurstBuffer]] = None,
+                 shared_upstream: Optional[BurstBuffer] = None):
         if not branches:
             raise ValueError("need at least one branch")
         ids = [bid for bid, _ in branches]
@@ -384,6 +505,10 @@ class ParallelBranchPipeline:
         # branch failure this unblocks a dispatcher mid-put instead of
         # deadlocking it against a pipeline that stopped pulling
         self._upstreams = dict(upstreams or {})
+        # work-stealing route: every branch pulls one shared intake, which
+        # must only close when the LAST branch exits (a lone dead branch
+        # leaves its siblings pulling; all dead unblocks the dispatcher)
+        self._shared_upstream = shared_upstream
         self._drainers: list[threading.Thread] = []
         self._open_branches = 0
         self._lock = threading.Lock()
@@ -410,8 +535,11 @@ class ParallelBranchPipeline:
                     # last branch out closes the merge (mirror of the
                     # last-worker-out rule inside Stage)
                     self._open_branches -= 1
-                    if self._open_branches == 0:
-                        self.merge.close()
+                    last = self._open_branches == 0
+                if last:
+                    if self._shared_upstream is not None:
+                        self._shared_upstream.close()
+                    self.merge.close()
 
         for bid, pipe in self.branches:
             pipe.start()

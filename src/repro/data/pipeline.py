@@ -32,7 +32,7 @@ from repro.core.basin import DrainageBasin, sharded_input_basin, \
 from repro.core.mover import TransferReport
 from repro.core.planner import TransferPlan, plan_transfer, replan
 from repro.core.staging import (ParallelBranchPipeline, Stage, StagePipeline,
-                                StageReport, iter_segments, merge_reports)
+                                StageReport, delta_reports, merge_reports)
 from repro.core.telemetry import TelemetryRegistry, get_registry
 from repro.models.config import ModelConfig
 
@@ -145,13 +145,16 @@ class InputPipeline:
     sets ``pc.staging_workers > 1``.  Explicit ``pc.staging_capacity`` /
     ``pc.staging_workers`` remain per-workload overrides.
 
-    Replanning is **online**: with ``replan_every_items > 0`` (argument or
-    ``pc.replan_every_items``) the stream runs in segments of that many
-    batches and the plan is revised from observed stalls at each segment
-    boundary — a buffer boundary, so no staged batch is dropped and batch
-    order is preserved.  A mid-epoch regime shift in the dataset store is
-    answered mid-epoch, not at the next epoch.  ``replan()`` remains
-    callable between iterations for epoch-cadence revision.
+    Replanning is **online and zero-drain**: with
+    ``replan_every_items > 0`` (argument or ``pc.replan_every_items``)
+    ONE persistent pipeline serves the whole stream, and every that many
+    delivered batches the plan is revised from that window's observed
+    stalls and applied to the *running* stages in place (buffer resize,
+    worker grow/retire) — no staged batch is dropped, batch order is
+    preserved, and the device feed never rides a teardown bubble.  A
+    mid-epoch regime shift in the dataset store is answered mid-epoch,
+    not at the next epoch.  ``replan()`` remains callable between
+    iterations for epoch-cadence revision.
 
     **Shard fan-in**: pass a *list* of sources and the pipeline plans the
     N-shard -> host merge topology
@@ -227,18 +230,16 @@ class InputPipeline:
         #: per-stage totals already consumed by a shard-plan revision
         #: (see _fresh_shard_reports)
         self._shard_seen: dict[str, StageReport] = {}
+        #: tail-stage totals already consumed by a live-swap revision
+        #: (see _fresh_tail_reports)
+        self._tail_seen: dict[str, StageReport] = {}
         self._pipeline: Optional[StagePipeline] = None
         self._t_start: Optional[float] = None
         self._recorded = False
-        # the plan whose staging parameters the running pipeline was
-        # built with; replan() revises self.plan for the NEXT segment /
-        # iteration, so live metrics must keep measuring against this one
+        # the plan whose staging parameters the running pipeline
+        # currently carries; replan() revises self.plan, which
+        # _apply_plan_live() then applies to the running stages
         self._active_plan = self.plan
-        # reports of segments whose pipelines already drained (online
-        # replanning runs one pipeline per segment); the live pipeline's
-        # reports are merged in on demand
-        self._prior_reports: list[StageReport] = []
-        self._prior_consumer_stall_s = 0.0
         self._delivered = 0
 
     def _build_stages(self) -> list[Stage]:
@@ -285,8 +286,7 @@ class InputPipeline:
         self._pipeline = None
         self._shard_pbp = None
         self._shard_seen = {}
-        self._prior_reports = []
-        self._prior_consumer_stall_s = 0.0
+        self._tail_seen = {}
         self._delivered = 0
         self._t_start = time.monotonic()
         self._recorded = False
@@ -301,22 +301,52 @@ class InputPipeline:
         return run()
 
     def _run_segments(self, source_it: Iterator[Any]) -> Iterator[dict]:
-        """The online-replanning boundary protocol, shared by the linear
-        and fan-in paths: run the stream in segments; at each segment
-        boundary (== buffer boundary: every staged batch was delivered,
-        so the plan can swap without loss) fold the drained pipeline's
-        stalls into the next plan before rebuilding on it."""
-        for segment in iter_segments(source_it, self.replan_every_items):
-            if self._pipeline is not None:
+        """The zero-drain online-replanning protocol, shared by the
+        linear and fan-in paths: ONE persistent pipeline serves the whole
+        stream; every ``replan_every_items`` delivered batches is an
+        accounting-only checkpoint — the window's stall evidence revises
+        the plan, and the revision is applied to the *running* stages in
+        place (``Stage.resize``), so no staged batch drains and the
+        device feed never rides a rebuild bubble."""
+        self._pipeline = StagePipeline(source_it, self._build_stages())
+        chunk = self.replan_every_items
+        boundary = chunk
+        for item in self._pipeline:
+            self._delivered += 1
+            yield item
+            if chunk and self._delivered >= boundary:
+                boundary += chunk
                 self.replan(_fresh_only=True)
-                self._prior_reports = merge_reports(
-                    [self._prior_reports, self._pipeline.reports()])
-                self._prior_consumer_stall_s += \
-                    self._pipeline.output.stats.consumer_stall_s
-            self._pipeline = StagePipeline(segment, self._build_stages())
-            for item in self._pipeline:
-                self._delivered += 1
-                yield item
+                self._apply_plan_live()
+
+    def _apply_plan_live(self) -> None:
+        """Apply the revised plan to the running pipeline — the
+        zero-drain swap.  Tail stages re-size against the revised tail
+        hops (explicit ``pc`` overrides still win, and device placement
+        stays single-worker for ordering); fan-in shard pull stages
+        re-size against their revised branch hops."""
+        if self._pipeline is not None:
+            decode_hop = self.plan.hop_for(0, "decode")
+            place_hop = self.plan.hop_for(1, "stage")
+            for st in self._pipeline.stages:
+                if st.name == "decode":
+                    st.resize(
+                        capacity=self.pc.staging_capacity
+                        or decode_hop.capacity,
+                        workers=self.pc.staging_workers or decode_hop.workers)
+                elif st.name == "stage":
+                    st.resize(capacity=self.pc.staging_capacity
+                              or place_hop.capacity, workers=1)
+        if self._shard_pbp is not None and self.shard_plan is not None:
+            for bid, pipe in self._shard_pbp.branches:
+                try:
+                    b = self.shard_plan.branch(bid)
+                except KeyError:
+                    continue
+                for i, st in enumerate(pipe.stages):
+                    hop = b.hop_for(i, st.name)
+                    st.resize(capacity=hop.capacity, workers=hop.workers)
+        self._active_plan = self.plan
 
     def _clamp_tail_promise(self) -> None:
         """Fan-in only: the tail plan alone promises the merge-to-device
@@ -333,12 +363,11 @@ class InputPipeline:
         """One planned pull branch per shard source, merged into the
         shared decode/place tail — the executable N-shard fan-in.
 
-        Online segmented replanning (``replan_every_items``) applies to
-        the merged tail: the shard branch pipelines run continuously
-        (their merge buffer simply backpressures across the boundary)
-        while the decode/place stages drain and rebuild on the revised
-        tail plan.  The shard plan itself revises at the same cadence
-        from the cumulative ``shard-k/pull`` reports."""
+        Online replanning (``replan_every_items``) applies to the merged
+        tail zero-drain: the shard branch pipelines AND the decode/place
+        stages run continuously, and each revision window re-sizes both
+        in place.  The shard plan revises at the same cadence from the
+        windowed ``shard-k/pull`` report deltas."""
         branches = []
         for b, src in zip(self.shard_plan.branches, self.sources):
             hop = b.hops[0]
@@ -353,12 +382,12 @@ class InputPipeline:
         self.record_telemetry()
 
     def reports(self) -> list[StageReport]:
-        """Per-stage reports merged over every segment run so far; in
-        fan-in mode the per-shard pull reports (tagged ``shard-k/pull``)
-        ride along."""
+        """Per-stage reports of the current iteration's (persistent)
+        pipeline; in fan-in mode the per-shard pull reports (tagged
+        ``shard-k/pull``) ride along."""
         live = self._pipeline.reports() if self._pipeline else []
         shard = self._shard_pbp.reports() if self._shard_pbp else []
-        return merge_reports([self._prior_reports, shard, live])
+        return merge_reports([shard, live])
 
     def record_telemetry(self) -> Optional[TransferReport]:
         """Record the stream's progress so far (for consumers that stop
@@ -384,19 +413,19 @@ class InputPipeline:
         manually between iterations.  The revised plan takes effect on
         the next segment (online) or iteration (manual).
 
-        With online replanning active, each boundary revision consumes
-        its segment's reports, and a manual call between iterations sees
-        only the final segment (the one no boundary folded) — already-
-        consumed segments are not re-applied.  A manual call *mid*-
-        segment still overlaps the upcoming boundary fold; keep manual
-        calls between iterations.
+        With online replanning active, each checkpoint revision consumes
+        its window's report deltas, and a manual call between iterations
+        sees only the final (not-yet-consumed) window — consumed
+        evidence is never re-applied.  A manual call *mid*-window still
+        overlaps the upcoming checkpoint fold; keep manual calls between
+        iterations.
 
         In fan-in mode the per-shard branch plan revises too, from the
         ``shard-k/pull``-tagged reports: a single slow shard gets its own
         verdict and loses traffic share, instead of dragging the whole
         shard fleet's estimate down."""
         if _fresh_only or self.replan_every_items:
-            reps = self._pipeline.reports() if self._pipeline else []
+            reps = self._fresh_tail_reports()
         else:
             reps = self.reports()
         if reps:
@@ -411,33 +440,30 @@ class InputPipeline:
         self._clamp_tail_promise()
         return self.plan
 
+    def _fresh_tail_reports(self) -> list[StageReport]:
+        """Tail-stage reports covering only the window since the last
+        revision (:func:`repro.core.staging.delta_reports` over the
+        persistent pipeline's cumulative counters); reservoirs start
+        fresh once consumed, so a long-gone regime's samples never keep
+        steering later diagnoses."""
+        if not self._pipeline:
+            return []
+        cur = self._pipeline.reports()
+        fresh = delta_reports(cur, list(self._tail_seen.values()))
+        self._tail_seen = {r.name: r for r in cur}
+        for stage in self._pipeline.stages:
+            stage.reset_service_reservoirs()
+        return fresh
+
     def _fresh_shard_reports(self) -> list[StageReport]:
         """Shard-branch reports covering only the window since the last
-        revision.  The branch pipelines run continuously, so their
-        reports are cumulative-from-start; re-feeding the same early
-        stall seconds through ``replan`` at every boundary would
-        re-apply consumed evidence and defeat damping (the linear path's
-        'already-consumed segments are not re-applied' invariant)."""
-        fresh = []
-        for r in self._shard_pbp.reports():
-            prev = self._shard_seen.get(r.name)
-            if prev is not None:
-                delta = dataclasses.replace(
-                    r,
-                    items=r.items - prev.items,
-                    bytes=r.bytes - prev.bytes,
-                    elapsed_s=r.elapsed_s - prev.elapsed_s,
-                    active_s=max(0.0, r.active_s - prev.active_s),
-                    stall_up_s=r.stall_up_s - prev.stall_up_s,
-                    stall_down_s=r.stall_down_s - prev.stall_down_s)
-            else:
-                delta = r
-            self._shard_seen[r.name] = r
-            if delta.elapsed_s > 0 and delta.items > 0:
-                fresh.append(delta)
-        # counters difference cleanly; the service reservoirs cannot, so
-        # start them fresh once consumed — a long-gone regime's samples
-        # must not keep steering every later diagnosis
+        revision — same protocol as the tail: re-feeding consumed stall
+        seconds through ``replan`` at every boundary would re-apply
+        evidence and defeat damping, and a consumed window's reservoir
+        samples must not keep polluting later diagnoses."""
+        cur = self._shard_pbp.reports()
+        fresh = delta_reports(cur, list(self._shard_seen.values()))
+        self._shard_seen = {r.name: r for r in cur}
         for _, pipe in self._shard_pbp.branches:
             for stage in pipe.stages:
                 stage.reset_service_reservoirs()
@@ -456,7 +482,8 @@ class InputPipeline:
 
     def consumer_stall_s(self) -> float:
         """Total time the training step waited on input — the pipeline's
-        fidelity-gap contribution (0 when the basin is balanced)."""
-        live = (self._pipeline.output.stats.consumer_stall_s
+        fidelity-gap contribution (0 when the basin is balanced).  The
+        zero-drain pipeline persists for the whole iteration, so its
+        output buffer's cumulative stall is the whole story."""
+        return (self._pipeline.output.stats.consumer_stall_s
                 if self._pipeline else 0.0)
-        return self._prior_consumer_stall_s + live

@@ -12,7 +12,12 @@ The serving path is the paper's two workload classes composed:
   stream replicates down one planned branch per client
   (:func:`~repro.core.basin.decode_fanout_basin` + the mover's parallel
   mirror mode): per-branch stage reports let ``replan`` pin a stall on
-  the one slow client instead of degrading every stream.
+  the one slow client instead of degrading every stream.  Deliveries run
+  through a **per-client drainer pool** (one small buffer + drainer
+  thread per client), so one blocking client write no longer serializes
+  its siblings at the merge buffer — a transient client stall is
+  absorbed by that client's own staging depth while the other streams
+  keep flowing.
 
 Usage (CPU smoke):
   python -m repro.launch.serve --arch repro-100m --smoke --batch 4 \
@@ -140,7 +145,9 @@ class Server:
         client (decode fan-out, mover parallel mirror mode): every client
         receives every token, each branch carries its own staging depth,
         and the per-branch stage reports attribute a stall to the one
-        slow client."""
+        slow client.  Deliveries drain through the mover's per-client
+        drainer pool, so one client blocking on a write stalls only its
+        own stream while its siblings keep receiving."""
         logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
         out = [np.asarray(tok)]
@@ -175,7 +182,8 @@ class Server:
             sink_map[first] = tee
             report = mover.parallel_transfer(
                 produce(), sink_map, plan=plan, mode="mirror",
-                replan_every_items=self.replan_every_tokens)
+                replan_every_items=self.replan_every_tokens,
+                drainer_pool=True)
         else:
             one_sink = sinks[0] if sinks else sink
             plan = plan_transfer(self.stream_basin(),

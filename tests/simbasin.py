@@ -63,9 +63,16 @@ class VirtualClock:
     virtual position (``thread_now``/``set_thread``), which is what makes
     latency *overlap* across concurrent workers while a shared pipe still
     serializes.  A thread's timeline starts at the spawn epoch — anchored
-    by :meth:`on_threads_spawn`, which the production ``Stage.start``
-    invokes just before spawning its workers — so simulated concurrency is
-    a pure function of the script, never of the host's thread scheduling.
+    by :meth:`on_threads_spawn`, which ``Stage`` invokes only at its
+    FIRST spawn (``Stage.start``).  Workers added later by a live pool
+    growth (``Stage.resize``) deliberately inherit that first epoch
+    rather than re-anchoring at the current frontier: the frontier is a
+    max over *all* branches, and charging a slow sibling's laggard
+    completions to a healthy stage's new workers would be phantom delay
+    (early arrivals are harmless — the work-conserving pipe model
+    serializes their transmissions anyway).  Simulated concurrency stays
+    a pure function of the script, never of the host's thread
+    scheduling.
 
     Timelines are rate-accurate but phase-approximate: a consumer's k-th
     service may be modeled up to ~one item's service time before the k-th
