@@ -1,54 +1,121 @@
-"""Fig. 2 — latency sweep: OOTB (single-stream, synchronous) vs tuned
-(staged, concurrent) path.
+"""Fig. 2 — latency sweep: BDP-sized vs naive window across 0-100 ms RTT.
 
 The paper shows default host settings collapsing under link latency while
-a co-designed host holds throughput flat.  The mechanism being measured
-is concurrency: the tuned path keeps several transfers in flight so
-per-item link latency overlaps; the OOTB path serializes every item with
-the full RTT.  Here the 'WAN hop' is a transform stage that sleeps the
-one-way latency per item: the staged configuration runs 4 concurrent
-movers through it (zx's concurrency model), the direct configuration is
-the synchronous copy loop.
+a co-designed host holds throughput flat.  The governing mechanism
+(§3.1/§3.2) is the transport window: a link admits only ``window``
+unACKed bytes, so delivery is ``min(line_rate, window / RTT)`` — a window
+sized to the bandwidth-delay product rides the line rate at any latency,
+a default-sized window degrades in proportion to RTT.
+
+This suite runs both configurations through the REAL windowed transport
+path (``plan_transfer`` window sizing -> ``WindowedStage`` credit/ACK
+clocking) on the simulated basin — virtual time, zero jitter, so every
+number is a pure function of the script and the suite is CI-gateable:
+
+* the BDP-sized path must deliver >= 90% of the planned line rate at
+  every RTT (the paper's "flat" curve),
+* the naive path must sit at its window ceiling (<= ~window/RTT) once
+  the BDP exceeds the window, degrading ∝ RTT.
+
+Rows carry structured ``window_bytes`` / ``rtt_ms`` / ``throughput_mb_s``
+JSON fields so CI tracks the windowed-transport trajectory over time.
 """
 
-import time
+import os
+import sys
 
-from repro.core.mover import MoverConfig, UnifiedDataMover
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
 
-from .common import emit, payload_stream
+from simbasin import SimHarness  # noqa: E402
 
-N_ITEMS = 24
-ITEM = 1 << 20   # 1 MiB
+from repro.core.basin import DrainageBasin, GBPS, Link, MIB, Tier, \
+    TierKind  # noqa: E402
+from repro.core.planner import plan_transfer  # noqa: E402
+
+from .common import emit
+
+N_ITEMS = 48
+ITEM = 4 * MIB
+LINK_GBPS = 100.0
+#: the "default host config" stream buffer (§3.2's silent throughput
+#: killer): fine at metro RTTs, ~100x under BDP at 100 ms
+NAIVE_WINDOW = 8 * MIB
+RTTS_MS = (0, 10, 25, 50, 74, 100)
+
+#: acceptance gates (deterministic in virtual time)
+BDP_MIN_PLANNED_FRACTION = 0.9
+NAIVE_CEILING_SLACK = 1.15
 
 
-def _wan(latency_s):
-    def hop(item):
-        time.sleep(latency_s)      # per-item link latency (tc-netem style)
-        return item
-    return hop
+def _basin(rtt_ms: float) -> DrainageBasin:
+    return DrainageBasin(
+        tiers=[
+            Tier("src", TierKind.SOURCE, 200.0 * GBPS, latency_s=1e-5),
+            Tier("bb", TierKind.BURST_BUFFER, 200.0 * GBPS, latency_s=1e-5),
+            Tier("dst", TierKind.SINK, 200.0 * GBPS, latency_s=1e-5),
+        ],
+        links=[
+            Link("src", "bb", 200.0 * GBPS),
+            Link("bb", "dst", LINK_GBPS * GBPS, rtt_s=rtt_ms / 1e3),
+        ],
+    )
+
+
+def _run_one(rtt_ms: float, max_window_bytes):
+    plan = plan_transfer(_basin(rtt_ms), ITEM, stages=("move",),
+                         max_window_bytes=max_window_bytes)
+    h = SimHarness()
+    link = h.link(bandwidth_bytes_per_s=LINK_GBPS * GBPS,
+                  rtt_s=rtt_ms / 1e3)
+    src = h.source(h.tier(bandwidth_bytes_per_s=1000.0 * GBPS,
+                          wall_pacing_s=0.0), N_ITEMS, ITEM)
+    mover = h.mover(plan=plan)
+    report = mover.bulk_transfer(iter(src), lambda _: None,
+                                 transforms=[("move", h.service(link))])
+    return plan, report
 
 
 def run() -> None:
-    for latency_ms in (0, 10, 50, 100):
-        lat = latency_ms / 1e3
-        mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
-                                             staging_workers=4,
-                                             checksum=False))
-        staged = mover.bulk_transfer(
-            payload_stream(N_ITEMS, ITEM), lambda x: None,
-            transforms=[("wan", _wan(lat))])
-        # OOTB: one stream, each item pays the latency serially
-        t0 = time.monotonic()
-        n = 0
-        for item in payload_stream(N_ITEMS, ITEM):
-            _wan(lat)(item)
-            n += 1
-        direct_s = time.monotonic() - t0
-        direct_bps = N_ITEMS * ITEM / direct_s if direct_s else 0.0
-        ratio = staged.throughput_bytes_per_s / max(direct_bps, 1.0)
-        emit(f"fig2/latency_{latency_ms}ms_staged",
-             staged.elapsed_s / N_ITEMS * 1e6,
-             f"{staged.throughput_bytes_per_s / 1e6:.1f} MB/s")
-        emit(f"fig2/latency_{latency_ms}ms_direct",
-             direct_s / N_ITEMS * 1e6,
-             f"{direct_bps / 1e6:.1f} MB/s staged/direct={ratio:.2f}x")
+    failures = []
+    for rtt_ms in RTTS_MS:
+        bdp_plan, bdp = _run_one(rtt_ms, None)
+        naive_plan, naive = _run_one(rtt_ms, NAIVE_WINDOW)
+        planned = bdp_plan.planned_bytes_per_s
+        win = bdp_plan.hops[0].window_bytes
+        emit(f"fig2/rtt_{rtt_ms}ms_bdp_window",
+             bdp.elapsed_s / N_ITEMS * 1e6,
+             f"{bdp.throughput_bytes_per_s / 1e6:.1f}MB/s "
+             f"win={win / 1e6:.0f}MB planned="
+             f"{planned / 1e6:.0f}MB/s",
+             window_bytes=win, rtt_ms=rtt_ms,
+             throughput_mb_s=bdp.throughput_bytes_per_s / 1e6)
+        naive_win = naive_plan.hops[0].window_bytes
+        emit(f"fig2/rtt_{rtt_ms}ms_naive_window",
+             naive.elapsed_s / N_ITEMS * 1e6,
+             f"{naive.throughput_bytes_per_s / 1e6:.1f}MB/s "
+             f"win={naive_win / 1e6:.0f}MB "
+             f"bdp/naive={bdp.throughput_bytes_per_s / max(naive.throughput_bytes_per_s, 1.0):.1f}x",
+             window_bytes=naive_win, rtt_ms=rtt_ms,
+             throughput_mb_s=naive.throughput_bytes_per_s / 1e6)
+
+        # gate 1: the BDP-sized window holds the planned rate, flat in RTT
+        if bdp.throughput_bytes_per_s < BDP_MIN_PLANNED_FRACTION * planned:
+            failures.append(
+                f"rtt={rtt_ms}ms: BDP window delivered "
+                f"{bdp.throughput_bytes_per_s / 1e6:.1f}MB/s < "
+                f"{BDP_MIN_PLANNED_FRACTION:.0%} of planned "
+                f"{planned / 1e6:.1f}MB/s")
+        # gate 2: once BDP exceeds the naive window, delivery is pinned
+        # at its ceiling (window/RTT) — degradation ∝ RTT
+        rtt_s = rtt_ms / 1e3
+        if rtt_s > 0 and LINK_GBPS * GBPS * rtt_s > NAIVE_WINDOW:
+            ceiling = NAIVE_WINDOW / rtt_s
+            if naive.throughput_bytes_per_s > ceiling * NAIVE_CEILING_SLACK:
+                failures.append(
+                    f"rtt={rtt_ms}ms: naive window delivered "
+                    f"{naive.throughput_bytes_per_s / 1e6:.1f}MB/s above "
+                    f"its window/RTT ceiling {ceiling / 1e6:.1f}MB/s")
+    if failures:
+        raise SystemExit("fig2 windowed-transport gate failed: "
+                         + "; ".join(failures))
+

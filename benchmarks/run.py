@@ -46,7 +46,7 @@ SUITES = {
 
 #: deterministic-in-virtual-time / analytic suites, fast enough for the
 #: per-push CI loop (no wall-clock sleeps, no model compiles)
-QUICK = ["table5", "live_swap", "multipath"]
+QUICK = ["table5", "fig2", "live_swap", "multipath"]
 
 
 def _write_json(json_dir: str, name: str, rows: list, error: str) -> None:

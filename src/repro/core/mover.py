@@ -60,9 +60,28 @@ Split-mode dispatch additionally offers ``route="steal"``: a pull-based
 work-stealing route where every branch pulls from one shared intake, so
 a transiently slow branch stops accumulating queued items *within* a
 segment instead of waiting for the next weight rebalance (at the cost of
-scripted routing determinism).  Fan-out deliveries can run through a
-per-client drainer pool (``drainer_pool=True``) so one blocking client
-write no longer serializes its siblings at the merge buffer.
+scripted routing determinism).  Replanning under stealing attributes per
+branch from **pull rates** at the shared intake (bytes per busy
+worker-second — see :meth:`UnifiedDataMover._steal_intake`), since a
+shared queue backpressures nobody in particular.  Fan-out deliveries can
+run through a per-client drainer pool (``drainer_pool=True``) so one
+blocking client write no longer serializes its siblings at the merge
+buffer.
+
+Windowed (RTT-governed) hops
+----------------------------
+
+A plan hop whose segment crosses a latency-bearing link carries a
+``window_bytes``/``rtt_s`` pair, and every execution path — bulk,
+streaming, and both parallel modes — builds that hop as a
+:class:`~repro.core.staging.WindowedStage` (the single
+:meth:`UnifiedDataMover._make_stage` seam): in-flight bytes are capped
+at the window and credit returns one RTT after transmission, so an
+under-windowed CHANNEL delivers ``window / RTT`` however much bandwidth
+is provisioned — the paper's §3.1/§3.2 collapse, executable.  A
+window-bound verdict's remedy applies **zero-drain**: the live swap
+grows the running stage's window (``Stage.resize(window_bytes=...)``)
+and credit-blocked workers wake into the new credit immediately.
 """
 
 from __future__ import annotations
@@ -77,11 +96,11 @@ from typing import Any, Callable, Iterable, Iterator, Mapping, Optional, \
 
 from .basin import DrainageBasin
 from .burst_buffer import BufferClosed, BurstBuffer
-from .planner import BranchPlan, STALL_THRESHOLD, TransferPlan, \
+from .planner import BranchPlan, HopPlan, STALL_THRESHOLD, TransferPlan, \
     plan_delta, replan as _replan
 from .staging import ParallelBranchPipeline, Stage, StagePipeline, \
-    StageReport, _default_sizeof, delta_reports, iter_segments, \
-    merge_reports
+    StageReport, WindowedStage, _default_sizeof, delta_reports, \
+    iter_segments, merge_reports
 from .telemetry import TelemetryRegistry
 
 #: items replicated per ``put_many`` batch by the mirror-mode dispatcher
@@ -269,32 +288,58 @@ class UnifiedDataMover:
         plan: Optional[TransferPlan],
         capacity: Optional[int],
         workers: Optional[int],
-    ) -> list[tuple[int, int]]:
-        """(capacity, workers) per stage: plan-derived per hop, or uniform."""
+    ) -> list[tuple[int, int, Optional[HopPlan]]]:
+        """(capacity, workers, hop) per stage: plan-derived per hop, or
+        uniform with no hop (and so no transport window)."""
         n = max(1, len(transforms))
         if plan is not None:
             names = [name for name, _ in transforms] or ["stage"]
             hops = [plan.hop_for(i, name) for i, name in enumerate(names)]
-            return [(capacity or h.capacity, workers or h.workers)
+            return [(capacity or h.capacity, workers or h.workers, h)
                     for h in hops]
         cap = capacity or self.config.staging_capacity
         wrk = workers or self.config.staging_workers
-        return [(cap, wrk)] * n
+        return [(cap, wrk, None)] * n
+
+    def _make_stage(self, name: str, capacity: int, workers: int,
+                    transform: Optional[Callable[[Any], Any]],
+                    hop: Optional[HopPlan]) -> Stage:
+        """One staging hop — a :class:`~repro.core.staging.WindowedStage`
+        when the plan marks the segment RTT-governed (a CHANNEL hop whose
+        in-flight bytes are capped at the plan's ``window_bytes``), a
+        queue-clocked :class:`~repro.core.staging.Stage` otherwise.  This
+        is the single seam every execution path builds hops through, so
+        windowed transport rides bulk, streaming, and both parallel
+        paths alike."""
+        if hop is not None and hop.window_bytes > 0 and hop.rtt_s > 0:
+            return WindowedStage(name, capacity=capacity, workers=workers,
+                                 transform=transform, clock=self._clock,
+                                 window_bytes=hop.window_bytes,
+                                 rtt_s=hop.rtt_s)
+        return Stage(name, capacity=capacity, workers=workers,
+                     transform=transform, clock=self._clock)
+
+    @staticmethod
+    def _hop_window(hop: Optional[HopPlan]) -> Optional[float]:
+        """The resize argument carrying a hop's revised window (None when
+        the hop is queue-clocked — base stages ignore it)."""
+        if hop is not None and hop.window_bytes > 0:
+            return hop.window_bytes
+        return None
 
     def _build_pipeline(
         self,
         source: Iterable[Any],
         transforms: Sequence[tuple[str, Callable[[Any], Any]]],
-        params: Sequence[tuple[int, int]],
+        params: Sequence[tuple[int, int, Optional[HopPlan]]],
         plan: Optional[TransferPlan] = None,
     ) -> StagePipeline:
         default_name = plan.hops[0].name if plan is not None else "stage"
         stages = [
-            Stage(name, capacity=cap, workers=wrk, transform=fn,
-                  clock=self._clock)
-            for (name, fn), (cap, wrk) in zip(transforms, params)
-        ] or [Stage(default_name, capacity=params[0][0], workers=params[0][1],
-                    clock=self._clock)]
+            self._make_stage(name, cap, wrk, fn, hop)
+            for (name, fn), (cap, wrk, hop) in zip(transforms, params)
+        ] or [self._make_stage(default_name, params[0][0], params[0][1],
+                               None, params[0][2])]
         return StagePipeline(source, stages)
 
     def _record(self, report: TransferReport) -> TransferReport:
@@ -352,8 +397,10 @@ class UnifiedDataMover:
                     replans += 1
                     new_params = self._stage_params(all_transforms, active,
                                                     capacity, workers)
-                    for st, (cap, wrk) in zip(pipeline.stages, new_params):
-                        st.resize(capacity=cap, workers=wrk)
+                    for st, (cap, wrk, hop) in zip(pipeline.stages,
+                                                   new_params):
+                        st.resize(capacity=cap, workers=wrk,
+                                  window_bytes=self._hop_window(hop))
         pipeline.join()
         return items, nbytes, pipeline.reports(), replans, active
 
@@ -559,10 +606,9 @@ class UnifiedDataMover:
             stages = []
             for i, (name, fn) in enumerate(named):
                 hop = b.hop_for(i, name)
-                stages.append(Stage(
-                    name, capacity=capacity or hop.capacity,
-                    workers=workers or hop.workers, transform=fn,
-                    clock=self._clock))
+                stages.append(self._make_stage(
+                    name, capacity or hop.capacity,
+                    workers or hop.workers, fn, hop))
             if shared is not None:
                 q = shared
             else:
@@ -684,8 +730,8 @@ class UnifiedDataMover:
                 if bid != branch.branch_id:
                     continue
                 wrk = workers_by_report.get(r.name, 1)
-                busy += max(0.0, r.elapsed_s * wrk
-                            - r.stall_up_s - r.stall_down_s)
+                busy += max(0.0, r.elapsed_s * wrk - r.stall_up_s
+                            - r.stall_down_s - r.stall_window_s)
                 nbytes += r.bytes
             if nbytes > 0 and busy > 0:
                 busy_per_byte[branch.branch_id] = busy / nbytes
@@ -702,6 +748,53 @@ class UnifiedDataMover:
                     < BUSY_CULPRIT_RATIO * fastest):
                 out[bid] = 0.0
         return out
+
+    @staticmethod
+    def _steal_intake(plan: TransferPlan,
+                      window: Sequence[StageReport],
+                      workers_by_report: Mapping[str, int]
+                      ) -> dict[str, float]:
+        """Per-branch attribution signal under work-stealing dispatch.
+
+        A shared intake has no per-branch backpressure to measure (every
+        branch pulls the same queue), so ``replan`` used to run
+        evidence-free on the steal route.  What stealing *does* make
+        observable is each branch's **pull rate at the shared intake** —
+        bytes moved per busy worker-second this window (busy = elapsed x
+        workers minus every stall side, the same quantity
+        :meth:`_validated_intake` corroborates with, which the scheduling
+        phase cannot inflate).  A branch pulling clearly slower than the
+        fastest sibling is draining its own channel slower — exactly why
+        it steals less.  The rate deficit maps onto the intake-ratio
+        scale ``replan`` already consumes (0 = keeps pace with the
+        fastest, -> 1 = pulls almost nothing), so the existing culprit
+        rule (``_intake_culprits``: >= STALL_THRESHOLD and well above the
+        floor) applies unchanged.  A branch with no completed item this
+        window contributes nothing — it can be neither flagged nor
+        exonerated without byte evidence."""
+        rates: dict[str, float] = {}
+        for branch in plan.branches:
+            busy = 0.0
+            nbytes = 0
+            for r in window:
+                if "/" not in r.name:
+                    continue
+                bid = r.name.split("/", 1)[0]
+                if bid != branch.branch_id:
+                    continue
+                wrk = workers_by_report.get(r.name, 1)
+                busy += max(0.0, r.elapsed_s * wrk - r.stall_up_s
+                            - r.stall_down_s - r.stall_window_s)
+                nbytes += r.bytes
+            if busy > 0 and nbytes > 0:
+                rates[branch.branch_id] = nbytes / busy
+        if len(rates) < 2:
+            return {}
+        fastest = max(rates.values())
+        if fastest <= 0:
+            return {}
+        return {bid: max(0.0, 1.0 - rate / fastest)
+                for bid, rate in rates.items()}
 
     @staticmethod
     def _normalized_weights(branches: Sequence[BranchPlan]
@@ -778,13 +871,8 @@ class UnifiedDataMover:
                 for _bid, pipe in pbp.branches:
                     for st in pipe.stages:
                         st.reset_service_reservoirs()
-                if route == "steal":
-                    # pull-based routing self-balances within the window
-                    # and a shared intake has no per-branch backpressure
-                    # signal: replan sees intake data with no culprits
-                    intake: dict[str, float] = {}
-                else:
-                    intake = {}
+                intake: dict[str, float] = {}
+                if route != "steal":
                     for qbid, q in queues.items():
                         stall = q.stats.producer_stall_s
                         intake[qbid] = ((stall - prev_stall[qbid]) / t_win
@@ -792,11 +880,18 @@ class UnifiedDataMover:
                         prev_stall[qbid] = stall
                 if not window:
                     continue
-                if intake:
-                    stage_workers = {
-                        f"{bid2}/{st.name}": st.workers
-                        for bid2, pipe in pbp.branches
-                        for st in pipe.stages}
+                stage_workers = {
+                    f"{bid2}/{st.name}": st.workers
+                    for bid2, pipe in pbp.branches
+                    for st in pipe.stages}
+                if route == "steal":
+                    # pull-based routing self-balances within the window
+                    # and a shared intake has no per-branch backpressure;
+                    # the per-branch PULL RATES at that intake are the
+                    # attribution signal replan consumes instead
+                    intake = self._steal_intake(active, window,
+                                                stage_workers)
+                elif intake:
                     intake = self._validated_intake(active, window, intake,
                                                     stage_workers)
                 revised = _replan(active, window, damping=damping,
@@ -810,7 +905,8 @@ class UnifiedDataMover:
                         for i, st in enumerate(pipe.stages):
                             hop = b.hop_for(i, st.name)
                             st.resize(capacity=capacity or hop.capacity,
-                                      workers=workers or hop.workers)
+                                      workers=workers or hop.workers,
+                                      window_bytes=self._hop_window(hop))
                     if route == "steal":
                         agg = sum(b.hops[0].capacity
                                   for b in active.branches)
@@ -881,16 +977,23 @@ class UnifiedDataMover:
                 raise RuntimeError(
                     f"transfer source failed:\n{source_err[0]}")
             t_seg = self._clock() - t_seg0
+            last_reports = pbp.reports()
             # the split node's per-branch backpressure: the attribution
-            # signal replan uses to single out a slow branch (§2.2)
+            # signal replan uses to single out a slow branch (§2.2); the
+            # steal route derives it from per-branch pull rates instead
+            # (a shared intake backpressures nobody in particular)
             if route == "steal":
-                last_intake = {}
+                stage_workers = {
+                    f"{bid}/{st.name}": st.workers
+                    for bid, pipe in pbp.branches
+                    for st in pipe.stages}
+                last_intake = self._steal_intake(active, last_reports,
+                                                 stage_workers)
             else:
                 last_intake = {
                     bid: (q.stats.producer_stall_s / t_seg
                           if t_seg > 0 else 0.0)
                     for bid, q in queues.items()}
-            last_reports = pbp.reports()
             merged = merge_reports([merged, last_reports])
         return items, nbytes, merged, replans, active
 

@@ -113,6 +113,10 @@ from .staging import StageReport
 MAX_WORKERS = 8
 #: ceiling on per-hop buffer slots (bounds host memory for tiny items)
 MAX_CAPACITY = 64
+#: window sizing margin over the path BDP (§3.2): ACK compression and
+#: cross-traffic jitter make a window cut exactly at BDP oscillate below
+#: line rate, so the plan leaves this much slack
+WINDOW_HEADROOM = 1.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +129,17 @@ class HopPlan:
     up_tier: str                # tier the hop pulls from
     down_tier: str              # tier the hop delivers toward
     rate_bytes_per_s: float     # what this hop can sustain as planned
+    #: in-flight byte cap for an RTT-governed CHANNEL hop (0 = the hop is
+    #: queue-clocked).  Sized from the segment link's BDP with
+    #: :data:`WINDOW_HEADROOM`, clamped to the segment's burst capacity
+    #: and to an explicit ``max_window_bytes`` (the host's socket-buffer
+    #: limit, §3.2's silent throughput killer)
+    window_bytes: float = 0.0
+    #: round-trip time of the hop's windowed link (the ACK clock)
+    rtt_s: float = 0.0
+    #: ``"src->dst"`` of the link whose BDP governs the window (the name
+    #: a window-bound verdict points at); "" on queue-clocked hops
+    window_link: str = ""
 
 
 def _hop_lookup(hops: Sequence[HopPlan], index: int,
@@ -177,6 +192,9 @@ class TransferPlan:
     branches: list[BranchPlan] = dataclasses.field(default_factory=list)
     #: branching plans hash at the split node instead of riding one hop
     checksum_at_split: bool = False
+    #: host limit the windowed hops were clamped under (None = BDP-sized).
+    #: A window-bound verdict's remedy is raising this (see :func:`replan`)
+    max_window_bytes: Optional[float] = None
 
     @property
     def stages(self) -> list[str]:
@@ -202,18 +220,24 @@ class TransferPlan:
         hops = [h for b in self.branches for h in b.hops] or self.hops
         return sum(h.capacity for h in hops)
 
+    @staticmethod
+    def _fmt_hop(h: HopPlan) -> str:
+        win = (f" win={h.window_bytes / 1e6:.1f}MB"
+               f" rtt={h.rtt_s * 1e3:.0f}ms" if h.window_bytes > 0 else "")
+        return (f"{h.name}[cap={h.capacity} w={h.workers}{win} "
+                f"{h.up_tier}->{h.down_tier}]")
+
     def describe(self) -> str:
         """Operator surface: one line for a linear plan (unchanged from
-        the pre-DAG format), a per-branch topology summary otherwise."""
+        the pre-DAG format; windowed hops add their ``win``/``rtt``), a
+        per-branch topology summary otherwise."""
         if not self.is_multipath:
             diag = ""
             if self.diagnosis:
                 diag = "; diag[" + ", ".join(
                     f"{name}={verdict}"
                     for name, verdict in sorted(self.diagnosis.items())) + "]"
-            hops = ", ".join(
-                f"{h.name}[cap={h.capacity} w={h.workers} "
-                f"{h.up_tier}->{h.down_tier}]" for h in self.hops)
+            hops = ", ".join(self._fmt_hop(h) for h in self.hops)
             return (f"TransferPlan({hops}; planned="
                     f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
                     f"checksum@{self.checksum_index}{diag})")
@@ -222,9 +246,7 @@ class TransferPlan:
                  f"checksum@{'split' if self.checksum_at_split else 'None'}"]
         shown = set()
         for b in self.branches:
-            hops = ", ".join(
-                f"{h.name}[cap={h.capacity} w={h.workers} "
-                f"{h.up_tier}->{h.down_tier}]" for h in b.hops)
+            hops = ", ".join(self._fmt_hop(h) for h in b.hops)
             keys = [f"{b.branch_id}/{h.name}" for h in b.hops]
             verdicts = [f"{k.split('/', 1)[1]}={self.diagnosis[k]}"
                         for k in keys if k in self.diagnosis]
@@ -248,6 +270,7 @@ class HopRevision:
     name: str
     capacity: int
     workers: int
+    window_bytes: float = 0.0
 
 
 @dataclasses.dataclass
@@ -282,12 +305,17 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
     signature the drain-path revision counter used, so the two execution
     modes count replans identically."""
     delta = PlanDelta()
+
+    def changed_hop(h: HopPlan, prev: HopPlan | None) -> bool:
+        return prev is None or (
+            (h.capacity, h.workers, h.window_bytes)
+            != (prev.capacity, prev.workers, prev.window_bytes))
+
     old_hops = {h.name: h for h in old.hops}
     for h in new.hops:
-        prev = old_hops.get(h.name)
-        if prev is None or (h.capacity, h.workers) != (prev.capacity,
-                                                       prev.workers):
-            delta.hops[h.name] = HopRevision(h.name, h.capacity, h.workers)
+        if changed_hop(h, old_hops.get(h.name)):
+            delta.hops[h.name] = HopRevision(h.name, h.capacity, h.workers,
+                                             h.window_bytes)
     old_branches = {b.branch_id: b for b in old.branches}
     for b in new.branches:
         prev = old_branches.get(b.branch_id)
@@ -296,10 +324,9 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
         prev_hops = {h.name: h for h in prev.hops} if prev is not None else {}
         changed = {}
         for h in b.hops:
-            ph = prev_hops.get(h.name)
-            if ph is None or (h.capacity, h.workers) != (ph.capacity,
-                                                         ph.workers):
-                changed[h.name] = HopRevision(h.name, h.capacity, h.workers)
+            if changed_hop(h, prev_hops.get(h.name)):
+                changed[h.name] = HopRevision(h.name, h.capacity, h.workers,
+                                              h.window_bytes)
         if changed:
             delta.branch_hops[b.branch_id] = changed
     return delta
@@ -323,6 +350,21 @@ def _segment_rtt(basin: DrainageBasin, lo: int, hi: int) -> float:
     rtts = [l.rtt_s for l in basin.links
             if l.src in names and l.dst in names]
     return max(rtts, default=0.0)
+
+
+def _segment_window(basin: DrainageBasin, lo: int, hi: int
+                    ) -> tuple[float, float, str]:
+    """(rtt_s, bdp_bytes, "src->dst") of the highest-BDP windowed link
+    inside the tier span — the link whose ACK clock governs this hop.
+    (0, 0, "") when the segment crosses no latency-bearing link (a
+    queue-clocked hop)."""
+    names = {t.name for t in basin.tiers[lo:hi + 1]}
+    best = (0.0, 0.0, "")
+    for l in basin.links:
+        if l.src in names and l.dst in names and l.rtt_s > 0:
+            if l.bdp_bytes() > best[1]:
+                best = (l.rtt_s, l.bdp_bytes(), f"{l.src}->{l.dst}")
+    return best
 
 
 def _raw_line_rate(basin: DrainageBasin) -> float:
@@ -351,10 +393,12 @@ def _plan_path(
     max_workers: int,
     max_capacity: int,
     target: float | None = None,
+    max_window_bytes: float | None = None,
 ) -> tuple[list[HopPlan], list[float], float]:
     """Per-hop parameters for one *linear* path.  ``target`` overrides the
     rate the hops are sized against (a branch's allocated share); default
-    is the path's own raw line rate."""
+    is the path's own raw line rate.  ``max_window_bytes`` caps every
+    windowed hop's in-flight window (the host buffer limit)."""
     tiers = basin.tiers
     n = len(stages)
     if target is None:
@@ -383,11 +427,33 @@ def _plan_path(
             # a buffer shallower than the pool serializes the extra
             # workers; shrink the pool so the promised rate stays honest
             workers = min(workers, max(1, capacity - 1))
+        # RTT-governed hop: the in-flight window is sized from the link's
+        # BDP with jitter headroom (§3.1/§3.2), clamped to the segment's
+        # burst capacity and the host's window limit.  The two clamps
+        # mean different things: a *burst-capacity* clamp is a physical
+        # model fact (the hop cannot keep more in flight than the
+        # staging tier holds), so the hop's promise honestly drops to
+        # window/RTT; a *host* (``max_window_bytes``) clamp is a fixable
+        # misconfiguration, so the promise stays the line rate and the
+        # shortfall surfaces as a fidelity gap + window-bound verdict —
+        # whose remedy (lifting the clamp) then actually works.
+        rtt, bdp, win_link = _segment_window(basin, lo, hi)
+        win = 0.0
+        hop_cap = target
+        if rtt > 0 and bdp > 0:
+            win = bdp * WINDOW_HEADROOM
+            if math.isfinite(cap_bytes) and cap_bytes < win:
+                win = cap_bytes
+                hop_cap = min(hop_cap, win / rtt)
+            if max_window_bytes is not None:
+                win = min(win, float(max_window_bytes))
         headroom.append(workers * rate_1)
-        hop_rate = min(workers * rate_1, target)
+        hop_rate = min(workers * rate_1, hop_cap)
         hops.append(HopPlan(name=name, capacity=capacity, workers=workers,
                             up_tier=up.name, down_tier=down.name,
-                            rate_bytes_per_s=hop_rate))
+                            rate_bytes_per_s=hop_rate,
+                            window_bytes=win, rtt_s=rtt,
+                            window_link=win_link if win > 0 else ""))
 
     planned = min(min(h.rate_bytes_per_s for h in hops),
                   basin.achievable_throughput())
@@ -415,6 +481,7 @@ def plan_transfer(
     ordered: bool = False,
     max_workers: int = MAX_WORKERS,
     max_capacity: int = MAX_CAPACITY,
+    max_window_bytes: Optional[float] = None,
 ) -> TransferPlan:
     """Derive per-hop staging parameters from the basin model.
 
@@ -424,6 +491,14 @@ def plan_transfer(
     worker — required when item order must survive the transfer (training
     batches, decode token streams); buffer depth still comes from the
     model, so jitter absorption is preserved.
+
+    Hops whose segment crosses a latency-bearing link are **windowed**:
+    ``HopPlan.window_bytes`` is sized from the link's BDP (with
+    :data:`WINDOW_HEADROOM`) and executed by a
+    :class:`~repro.core.staging.WindowedStage`.  ``max_window_bytes``
+    models the host's socket/stream-buffer limit (§3.2): a clamp below
+    BDP pins delivery at ``window / RTT`` — the plan keeps promising the
+    line rate so the shortfall surfaces as a window-bound verdict.
 
     On a branching basin the returned plan carries one
     :class:`BranchPlan` per root->sink path, each sized against its
@@ -437,7 +512,8 @@ def plan_transfer(
 
     if basin.is_linear:
         hops, headroom, planned = _plan_path(
-            basin, item_bytes, stages, ordered, max_workers, max_capacity)
+            basin, item_bytes, stages, ordered, max_workers, max_capacity,
+            max_window_bytes=max_window_bytes)
         checksum_index = None
         if checksum:
             # integrity rides the hop with the most headroom over the plan
@@ -449,7 +525,8 @@ def plan_transfer(
         return TransferPlan(hops=hops, item_bytes=float(item_bytes),
                             planned_bytes_per_s=planned,
                             checksum_index=checksum_index, basin=basin,
-                            ordered=ordered, branches=[branch])
+                            ordered=ordered, branches=[branch],
+                            max_window_bytes=max_window_bytes)
 
     # -- branching basin: one plan per root->sink path -----------------------
     paths = basin.paths()
@@ -462,7 +539,7 @@ def plan_transfer(
         sub = basin.path_basin(path)
         hops, _, planned = _plan_path(
             sub, item_bytes, stages, ordered, max_workers, max_capacity,
-            target=rates[path])
+            target=rates[path], max_window_bytes=max_window_bytes)
         branches.append(BranchPlan(
             branch_id=bid, path=path, hops=hops,
             rate_bytes_per_s=planned, weight=0.0,
@@ -476,7 +553,8 @@ def plan_transfer(
                         planned_bytes_per_s=aggregate,
                         checksum_index=None, basin=basin,
                         ordered=ordered, branches=branches,
-                        checksum_at_split=bool(checksum))
+                        checksum_at_split=bool(checksum),
+                        max_window_bytes=max_window_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -497,6 +575,13 @@ MIN_DIAGNOSIS_SAMPLES = 8
 #: latency spreads the samples; a saturated pipe serves every item in
 #: ~item_bytes/true_bw with near-zero spread.
 LATENCY_DISPERSION = 0.75
+
+#: a window-stalled hop is **window-bound** only when its delivered rate
+#: actually sits at the window ceiling — within this factor of
+#: ``window / RTT`` (§3.2's signature: throughput pinned by credit, not
+#: by the pipe).  A hop that window-stalls yet delivers far above the
+#: ceiling is mid-transition noise, not a pinned link.
+WINDOW_PIN_SLACK = 1.5
 
 
 def _percentiles(sorted_samples: Sequence[float]
@@ -547,6 +632,9 @@ class _Evidence:
     #: (dispatcher-fed culprit branch) — regime diagnosis must widen its
     #: dispersion threshold by the pool size
     pipe_shared: bool = False
+    #: the hop was pinned at ~window/RTT with window-stall evidence — a
+    #: transport-credit limitation, not a tier-estimate error
+    window: bool = False
 
 
 def _collect_evidence(plan: TransferPlan,
@@ -584,6 +672,22 @@ def _collect_evidence(plan: TransferPlan,
             underdelivered = (active_rate
                               < hop.rate_bytes_per_s
                               * (1.0 - STALL_THRESHOLD))
+            # window-bound check first, in BOTH regimes: the ACK ledger is
+            # the stage's own first-hand accounting (never phase noise
+            # across competing branches), and a credit-pinned hop must not
+            # fall through to the busy-hop rule — per-worker time parked
+            # on the window is neither a stall side nor a slow service
+            worker_time = rep.elapsed_s * hop.workers
+            if (hop.window_bytes > 0 and hop.rtt_s > 0 and worker_time > 0
+                    and rep.stall_window_s / worker_time >= STALL_THRESHOLD
+                    and underdelivered
+                    and active_rate <= WINDOW_PIN_SLACK
+                    * hop.window_bytes / hop.rtt_s):
+                out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                     up_limited=True, busy=False,
+                                     candidate_tier=hop.up_tier,
+                                     window=True))
+                continue
             if has_intake and multipath:
                 if branch.branch_id not in culprits or not underdelivered:
                     continue
@@ -592,7 +696,6 @@ def _collect_evidence(plan: TransferPlan,
                                      candidate_tier=hop.up_tier,
                                      pipe_shared=True))
                 continue
-            worker_time = rep.elapsed_s * hop.workers
             r_up = rep.stall_up_s / worker_time
             r_down = rep.stall_down_s / worker_time
             busy = False
@@ -721,6 +824,15 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
       the tier's bandwidth estimate toward the hop's observed throughput
       and accept the reduced line rate.
 
+    A third verdict sits above the regime split: **window-bound**.  A
+    windowed hop whose delivered rate is pinned at ~``window/RTT`` with
+    dominant ``stall_window_s`` is limited by transport credit, not by
+    any tier — the estimates stand, and the remedy is raising the window
+    (the rebuilt plan drops the ``max_window_bytes`` clamp back to
+    BDP-with-headroom, and the buffers feeding the hop re-derive), never
+    adding workers: a worker pool sharing an exhausted window all parks
+    on the same ACK clock (§3.2).
+
     On a branching plan, reports tagged ``"<branch>/<stage>"`` attribute
     per branch (private-tier + corroboration rules, module docstring),
     and the rebuilt plan re-allocates branch rates from the revised
@@ -751,6 +863,22 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     evidence = _collect_evidence(plan, reports, culprits,
                                  intake_ratio is not None)
     multipath = plan.is_multipath
+    # -- window-bound pre-pass: transport-credit evidence never touches the
+    # tier estimates — the pipe and its model are fine, the in-flight cap
+    # is the lie.  The remedy is raising the window (and the buffers that
+    # feed it, which the rebuilt plan re-derives), NOT adding workers:
+    # N workers sharing an exhausted window all park on the same ACK clock.
+    raise_window = False
+    for ev in list(evidence):
+        if not ev.window:
+            continue
+        evidence.remove(ev)
+        raise_window = True
+        key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
+               else ev.hop.name)
+        link = (ev.hop.window_link
+                or f"{ev.hop.up_tier}->{ev.hop.down_tier}")
+        diagnosis[key] = f"window-bound({link})"
     resolved = []
     for ev in evidence:
         tier_name = _attributed_tier(ev, evidence, plan, culprits,
@@ -831,6 +959,10 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     revised = plan_transfer(
         new_basin, plan.item_bytes, stages=plan.stages,
         checksum=plan.checksum_index is not None or plan.checksum_at_split,
-        ordered=plan.ordered)
+        ordered=plan.ordered,
+        # a window-bound verdict lifts the host clamp: the rebuilt plan's
+        # windows go back to BDP-with-headroom (and the live-swap path
+        # grows the running windows without a drain)
+        max_window_bytes=None if raise_window else plan.max_window_bytes)
     revised.diagnosis = diagnosis
     return revised

@@ -37,11 +37,22 @@ apply a revised plan to a *running* pipeline (zero-drain replanning)
 instead of draining and rebuilding it at every segment boundary;
 :func:`delta_report` carves the continuously-running stage's cumulative
 counters into per-revision-window evidence for ``replan``.
+
+Windowed (RTT-governed) hops run as a :class:`WindowedStage`: a CHANNEL
+hop on a long link is clocked by acknowledgements, not by queue space —
+throughput is ``window / RTT`` however much bandwidth is provisioned
+(paper §3.1/§3.2, the congestion-window fallacy).  The windowed stage
+caps *unacknowledged in-flight bytes* at a plan-assigned ``window_bytes``
+and accounts the time workers spend waiting for credit as
+``StageReport.stall_window_s`` — a third stall side, distinct from
+upstream starvation and downstream backpressure, because its remedy
+(raise the window) is distinct from both.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import random
 import threading
@@ -91,6 +102,11 @@ class StageReport:
     stall_up_s: float      # waiting on upstream (source starvation)
     stall_down_s: float    # waiting on our buffer (downstream backpressure)
     errors: int
+    #: waiting for transport credit — in-flight bytes pinned at the hop's
+    #: ``window_bytes`` until ACKs return (WindowedStage only; 0.0 on
+    #: queue-clocked stages).  Kept apart from the queue stalls because
+    #: its remedy is raising the window, not adding workers or buffers.
+    stall_window_s: float = 0.0
     #: start -> last completed item: the stage's *active* window.  In a
     #: parallel-branch segment a fast branch finishes early and idles
     #: until the slowest branch drains; rates judged over ``elapsed_s``
@@ -160,6 +176,7 @@ def merge_reports(chunks: Sequence[Sequence[StageReport]]) -> list[StageReport]:
             m.active_s += r.active_s
             m.stall_up_s += r.stall_up_s
             m.stall_down_s += r.stall_down_s
+            m.stall_window_s += r.stall_window_s
             m.errors += r.errors
             m.service_up_s = (m.service_up_s
                               + list(r.service_up_s))[-SERVICE_RESERVOIR:]
@@ -190,6 +207,7 @@ def delta_report(cur: StageReport,
         active_s=max(0.0, cur.active_s - prev.active_s),
         stall_up_s=cur.stall_up_s - prev.stall_up_s,
         stall_down_s=cur.stall_down_s - prev.stall_down_s,
+        stall_window_s=cur.stall_window_s - prev.stall_window_s,
         errors=cur.errors - prev.errors)
 
 
@@ -231,6 +249,7 @@ class Stage(Generic[T, U]):
         self._items = 0
         self._bytes = 0
         self._stall_up_s = 0.0
+        self._stall_window_s = 0.0      # WindowedStage accrues; base never
         self._errors = 0
         self._error_tb: Optional[str] = None
         self._upstream: Optional[Callable[[], Optional[T]]] = None
@@ -283,6 +302,16 @@ class Stage(Generic[T, U]):
         for t in threads:
             t.start()
 
+    # -- transport-credit seam (no-ops here; see WindowedStage) --------------
+
+    def _admit(self, nbytes: int) -> None:
+        """Block until the hop may put ``nbytes`` more in flight.  The
+        base stage is queue-clocked — admission is free."""
+
+    def _on_sent(self, nbytes: int, t_sent: float) -> None:
+        """Record that ``nbytes`` finished transmitting at ``t_sent`` (the
+        instant the credit clock starts counting toward their ACK)."""
+
     def _run_worker(self) -> None:
         upstream = self._upstream
         try:
@@ -300,15 +329,31 @@ class Stage(Generic[T, U]):
                     self._stall_up_s += dt_up
                 if item is None:
                     break
-                out = self.transform(item) if self.transform else item
+                # transport credit is acquired on the PRE-transform size
+                # (the bytes handed to the wire) and released on the same
+                # figure — admission waits are window stall, kept out of
+                # the service samples so the regime diagnosis still reads
+                # pure pull+transform cost
+                nbytes_wire = self.sizeof(item)
+                self._admit(nbytes_wire)
+                t_tx0 = self._clock()
+                try:
+                    out = self.transform(item) if self.transform else item
+                except BaseException:
+                    # a failed transmit must still return its credit (via
+                    # the ACK path, one RTT out) or siblings blocked on
+                    # the window would wait on an ACK that never comes
+                    self._on_sent(nbytes_wire, self._clock())
+                    raise
                 t1 = self._clock()
+                self._on_sent(nbytes_wire, t1)
                 with self._lock:
                     # upstream service sample = pull + transform: the
                     # full cost of acquiring one staged item.  A slow
                     # transform (e.g. a storage fetch riding the hop)
                     # keeps the worker busy rather than stalled, and
                     # only this sample reveals it to the replanner.
-                    self._service_up.add(t1 - t0)
+                    self._service_up.add(dt_up + (t1 - t_tx0))
                 try:
                     self.buffer.put(out)
                 except BufferClosed:
@@ -336,7 +381,8 @@ class Stage(Generic[T, U]):
                     self.buffer.close()
 
     def resize(self, *, capacity: Optional[int] = None,
-               workers: Optional[int] = None) -> None:
+               workers: Optional[int] = None,
+               window_bytes: Optional[float] = None) -> None:
         """Apply revised staging parameters to the *running* stage.
 
         ``capacity`` re-sizes the stage's burst buffer in place
@@ -346,7 +392,9 @@ class Stage(Generic[T, U]):
         by lazily retiring surplus workers (each exits at its next loop
         head — no thread-pool teardown, no staged item dropped).  Both are
         no-ops when the value is unchanged; the worker target is clamped
-        to >= 1 so the stream can always finish."""
+        to >= 1 so the stream can always finish.  ``window_bytes`` is
+        accepted for call-site uniformity but only a
+        :class:`WindowedStage` has a window to revise."""
         if capacity is not None and capacity != self.buffer.capacity:
             self.buffer.resize(capacity)
         if workers is None:
@@ -407,10 +455,150 @@ class Stage(Generic[T, U]):
                           if self._t_last is not None else 0.0),
                 stall_up_s=self._stall_up_s,
                 stall_down_s=self.buffer.stats.producer_stall_s,
+                stall_window_s=self._stall_window_s,
                 errors=self._errors,
                 service_up_s=list(self._service_up.samples),
                 service_down_s=list(self._service_down.samples),
             )
+
+
+class WindowedStage(Stage):
+    """A credit/ACK-clocked staging hop — the executable form of the
+    paper's §3.1/§3.2 window-governed CHANNEL.
+
+    A long link does not admit bytes because queue space exists; it
+    admits them while the *congestion/flow-control window* has credit,
+    and credit only returns one round trip after the bytes went out.
+    The stage keeps an ACK ledger: transmitting an item occupies
+    ``sizeof(item)`` bytes of the window from admission until ``rtt_s``
+    after its transmission completes.  A worker that would overfill the
+    window waits for the oldest outstanding ACK, and that wait is
+    accounted as ``stall_window_s`` — separate from the queue stalls,
+    because it caps throughput at ``window_bytes / rtt_s`` no matter how
+    much bandwidth is provisioned or how many workers are staffed (the
+    evidence behind the planner's **window-bound** verdict).
+
+    The ACK clock is the injectable stage clock: under a real clock the
+    waiter sleeps out the remaining round trip; under the simulated
+    basin's virtual clock (per-thread timelines present) the waiter's own
+    timeline jumps to the ACK instant — the same per-thread latency model
+    ``SimulatedTier.serve`` uses — so windowed scenarios stay a pure
+    function of the script and never wall-block.
+
+    ``resize(window_bytes=...)`` revises the window on the *running*
+    stage: growth wakes credit-blocked workers immediately (the
+    zero-drain remedy for a window-bound verdict); shrinkage applies as
+    outstanding ACKs return.  An item larger than the whole window is
+    admitted alone (the stream must always make progress).
+    """
+
+    def __init__(self, name: str, *, window_bytes: float, rtt_s: float,
+                 **kwargs: Any):
+        super().__init__(name, **kwargs)
+        if window_bytes <= 0:
+            raise ValueError(f"stage {name!r}: window_bytes must be > 0")
+        if rtt_s < 0:
+            raise ValueError(f"stage {name!r}: rtt_s must be >= 0")
+        self.window_bytes = float(window_bytes)
+        self.rtt_s = float(rtt_s)
+        self._win_cond = threading.Condition(threading.Lock())
+        self._inflight = 0.0                      # admitted, not yet ACKed
+        self._acks: list[tuple[float, int]] = []  # heap of (ack_time, bytes)
+
+    @property
+    def inflight_bytes(self) -> float:
+        with self._win_cond:
+            self._reap(self._clock())
+            return self._inflight
+
+    def _reap(self, now: float) -> None:
+        """Release credit for every ACK that has matured (win lock held)."""
+        while self._acks and self._acks[0][0] <= now + 1e-12:
+            _, nb = heapq.heappop(self._acks)
+            self._inflight -= nb
+
+    def _admit(self, nbytes: int) -> None:
+        thread_now = getattr(self._clock, "thread_now", None)
+        if thread_now is not None:
+            self._admit_virtual(nbytes, thread_now)
+        else:
+            self._admit_wall(nbytes)
+
+    def _admit_virtual(self, nbytes: int,
+                       thread_now: Callable[[], float]) -> None:
+        """Virtual-clock admission: the waiter's own timeline jumps to the
+        oldest outstanding ACK (exactly how :meth:`SimulatedTier.serve`
+        models latency), so window pacing stays a per-thread, scripted
+        quantity — it neither wall-blocks nor drags the global frontier
+        forward under other stages' stall measurements."""
+        entry = thread_now()
+        t = entry
+        with self._win_cond:
+            while True:
+                self._reap(t)
+                if (self._inflight <= 0
+                        or self._inflight + nbytes
+                        <= self.window_bytes + 1e-9):
+                    self._inflight += nbytes
+                    break
+                if self._acks:
+                    # the oldest ACK's arrival is when credit next frees
+                    t = max(t, self._acks[0][0])
+                else:
+                    # every in-flight byte belongs to a sibling worker
+                    # still mid-transmit; its _on_sent will notify
+                    self._win_cond.wait(timeout=0.05)
+                    t = max(t, thread_now())
+        if t > entry:
+            self._clock.set_thread(t)
+            with self._lock:
+                self._stall_window_s += t - entry
+
+    def _admit_wall(self, nbytes: int) -> None:
+        """Real-clock admission: sleep out the remaining round trip of
+        the oldest outstanding ACK, re-checking as ACKs mature."""
+        t0 = self._clock()
+        waited = False
+        with self._win_cond:
+            while True:
+                self._reap(self._clock())
+                if (self._inflight <= 0
+                        or self._inflight + nbytes
+                        <= self.window_bytes + 1e-9):
+                    self._inflight += nbytes
+                    break
+                waited = True
+                if self._acks:
+                    wait_s = max(1e-4, self._acks[0][0] - self._clock())
+                    self._win_cond.wait(timeout=wait_s)
+                else:
+                    self._win_cond.wait(timeout=0.05)
+        if waited:
+            dt = self._clock() - t0
+            with self._lock:
+                self._stall_window_s += dt
+
+    def _on_sent(self, nbytes: int, t_sent: float) -> None:
+        thread_now = getattr(self._clock, "thread_now", None)
+        if thread_now is not None:
+            # virtual time: the send completed at this worker's timeline
+            # position (its serve's completion), not the global frontier
+            t_sent = thread_now()
+        with self._win_cond:
+            heapq.heappush(self._acks, (t_sent + self.rtt_s, nbytes))
+            self._win_cond.notify_all()
+
+    def resize(self, *, capacity: Optional[int] = None,
+               workers: Optional[int] = None,
+               window_bytes: Optional[float] = None) -> None:
+        if window_bytes is not None and window_bytes > 0 \
+                and window_bytes != self.window_bytes:
+            with self._win_cond:
+                self.window_bytes = float(window_bytes)
+                # growth admits credit-blocked workers immediately — the
+                # live, zero-drain remedy for a window-bound verdict
+                self._win_cond.notify_all()
+        super().resize(capacity=capacity, workers=workers)
 
 
 class StagePipeline:

@@ -214,10 +214,13 @@ class InputPipeline:
                     "given; pass a basin with one root->sink path per "
                     "shard (e.g. sharded_input_basin(n_shards))")
             # the shared tail (merge tier onward) runs as one linear
-            # decode/place pipeline fed by the merged shard branches
-            tail_path = self.basin.paths()[0]
-            tail = self.basin.path_basin(tail_path)
-            tail_basin = DrainageBasin(tail.tiers[1:])
+            # decode/place pipeline fed by the merged shard branches.
+            # The tail starts at the MERGE tier — the first tier common
+            # to all root->sink paths — not at branch 0's second tier: a
+            # custom fan-in basin may give each shard a private chain
+            # deeper than one tier, and slicing ``tiers[1:]`` would plan
+            # the shared tail over another branch's private tiers
+            tail_basin = self._fanin_tail_basin()
             self.plan = plan or plan_transfer(
                 tail_basin, self.item_bytes, stages=("decode", "stage"),
                 ordered=ordered)
@@ -241,6 +244,29 @@ class InputPipeline:
         # _apply_plan_live() then applies to the running stages
         self._active_plan = self.plan
         self._delivered = 0
+
+    def _fanin_tail_basin(self) -> DrainageBasin:
+        """The linear sub-basin the merged decode/place tail runs over:
+        from the merge tier (the first tier every root->sink path
+        shares) to the sink.  Built via ``path_basin`` so explicit tail
+        links survive — a provisioned bandwidth or an ``rtt_s`` on a
+        merge->sink link must reach the tail plan (it is what makes a
+        tail hop windowed).  A merge tier that IS the sink leaves no
+        chain to plan; the tail then keeps one upstream tier of path 0
+        so the basin still models a pull->deliver hop."""
+        paths = self.basin.paths()
+        common = set(paths[0])
+        for p in paths[1:]:
+            common &= set(p)
+        if not common:
+            raise ValueError(
+                "fan-in basin has no tier shared by every shard path; "
+                "shard branches must merge before the sink")
+        first = paths[0]
+        merge_idx = next(i for i, name in enumerate(first)
+                         if name in common)
+        lo = min(merge_idx, len(first) - 2)     # a basin needs >= 2 tiers
+        return self.basin.path_basin(first[lo:])
 
     def _build_stages(self) -> list[Stage]:
         decode_hop = self.plan.hop_for(0, "decode")

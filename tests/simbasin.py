@@ -20,6 +20,10 @@ with **simulated tiers**:
   story, made deterministic.
 * :class:`SimulatedSource` / :class:`SimulatedSink` — iterator/callable
   adapters that serve each item through a tier before handing it on.
+* :class:`SimulatedLink` — the scripted long-link model (transmission
+  serialization at the link rate; RTT carried by the windowed stage's
+  ACK clock; deterministic loss and per-segment regime shifts), so the
+  paper's §3.1/§3.2 windowed-transfer scenarios run in virtual time.
 
 Threads still run (the real ``StagePipeline`` spawns them) but never
 sleep: blocking happens on buffer conditions exactly as in production,
@@ -174,6 +178,12 @@ class SimulatedTier:
         self._served = 0
         self._shifts: dict[int, dict[str, float]] = {}
 
+    def _locked_extra_delay(self) -> float:
+        """Per-item extra service delay, computed with the tier lock held
+        (the ``self._served``-th item is the one being served).  Base
+        tiers add none; :class:`SimulatedLink` charges loss here."""
+        return 0.0
+
     # -- scripting -----------------------------------------------------------
 
     def shift_at(self, item_index: int, **params: float) -> "SimulatedTier":
@@ -221,7 +231,11 @@ class SimulatedTier:
             # modeling pipe idle gaps, which none of the scripted
             # scenarios exercise.)
             tx_done = max(arrival + tx, self._first_arrival + self._cum_tx)
-        completion = tx_done + latency + jitter
+            # per-item extra delay decided under the SAME lock acquisition
+            # as the serve counter, so which item pays it is a function of
+            # the script, not of thread interleaving (SimulatedLink loss)
+            extra = self._locked_extra_delay()
+        completion = tx_done + latency + jitter + extra
         self._clock.set_thread(completion)
         self._clock.advance_to(completion)
         pace = self.wall_pacing_s + self.wall_scale * max(
@@ -229,6 +243,67 @@ class SimulatedTier:
         if pace:
             time.sleep(min(pace, 0.05))
         return completion
+
+
+class SimulatedLink(SimulatedTier):
+    """Scripted virtual-time model of a long link — the §3.1/§3.2 channel.
+
+    Serving an item models its **transmission**: serialization at the
+    link rate, shared work-conservingly across concurrent callers exactly
+    as :class:`SimulatedTier` does.  Propagation delay is deliberately
+    *not* part of ``serve``: on a windowed hop the round trip lives in
+    the :class:`~repro.core.staging.WindowedStage`'s ACK clock (credit
+    returns ``rtt_s`` after transmission completes), which is what makes
+    an under-windowed transfer deliver ``window / RTT`` — adding it here
+    too would double-count the latency.  ``rtt_s`` is carried for the
+    scenario script (and must match the plan's ``HopPlan.rtt_s`` for the
+    simulation to mirror the model).
+
+    Two scripted impairments, both deterministic:
+
+    * ``loss_every=k`` — every k-th served item is "lost" and pays one
+      full extra RTT (the retransmission timeout of a stop-and-wait
+      recovery; coarse, but it injects exactly the RTT-proportional
+      penalty §3.2 attributes to loss on long links),
+    * ``shift_at(i, rtt_s=..., bandwidth_bytes_per_s=..., loss_every=...)``
+      — a per-segment regime shift from the i-th served item on (a route
+      change mid-transfer lengthening the RTT, a congested peering hop
+      cutting the rate).
+    """
+
+    _LINK_PARAMS = {"rtt_s", "loss_every"}
+
+    def __init__(self, clock: VirtualClock, *, bandwidth_bytes_per_s: float,
+                 rtt_s: float = 0.0, loss_every: int = 0,
+                 name: str = "sim-link", **kwargs):
+        self.rtt_s = float(rtt_s)
+        self.loss_every = int(loss_every)
+        super().__init__(clock, bandwidth_bytes_per_s=bandwidth_bytes_per_s,
+                         name=name, **kwargs)
+
+    def shift_at(self, item_index: int, **params: float) -> "SimulatedLink":
+        link_part = {k: v for k, v in params.items()
+                     if k in self._LINK_PARAMS}
+        tier_part = {k: v for k, v in params.items()
+                     if k not in self._LINK_PARAMS}
+        if tier_part:
+            super().shift_at(item_index, **tier_part)
+        if link_part:
+            # ride the same shift table so link params flip at the same
+            # served-item index as tier params (serve() setattrs them)
+            with self._lock:
+                self._shifts.setdefault(int(item_index), {}).update(link_part)
+        return self
+
+    def _locked_extra_delay(self) -> float:
+        # decided under the serve lock (self._served is 1-based and
+        # already counts the item being served), so exactly the scripted
+        # items are lost whatever the thread interleaving
+        k = self._served
+        if self.loss_every > 0 and k % self.loss_every == 0 \
+                and self.rtt_s > 0:
+            return self.rtt_s       # retransmit: one extra round trip
+        return 0.0
 
 
 class SimulatedSource:
@@ -274,6 +349,12 @@ class SimHarness:
 
     def tier(self, **kwargs) -> SimulatedTier:
         return SimulatedTier(self.clock, **kwargs)
+
+    def link(self, **kwargs) -> SimulatedLink:
+        """A scripted long link (RTT / loss / regime shifts) whose
+        transmission serializes at the link rate; pair it with a
+        windowed hop whose ACK clock carries the round trip."""
+        return SimulatedLink(self.clock, **kwargs)
 
     def branch_tier(self, name: str, **kwargs) -> SimulatedTier:
         """A tier for one branch of a branching topology: independently

@@ -419,6 +419,67 @@ def test_steal_route_beats_static_deal_on_asymmetric_branches():
     assert steal.elapsed_s < deal.elapsed_s
 
 
+def _steal_replan_scenario(drain_per_segment):
+    """100x-asymmetric branches under work-stealing dispatch WITH online
+    replanning: the per-branch pull rates at the shared intake are the
+    attribution signal."""
+    h = SimHarness()
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    tier_a = h.branch_tier("path-a", bandwidth_bytes_per_s=0.1 * GBPS)
+    tier_b = h.branch_tier("path-b", bandwidth_bytes_per_s=10 * GBPS)
+    src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                          wall_pacing_s=0.0), 48, ITEM)
+    mover = h.mover(plan=plan)
+    rep = mover.parallel_transfer(
+        iter(src), lambda _: None,
+        transforms={"path-a": [("deliver", h.service(tier_a))],
+                    "path-b": [("deliver", h.service(tier_b))]},
+        mode="split", route="steal", replan_every_items=12,
+        drain_per_segment=drain_per_segment)
+    return rep, plan, mover.last_plan
+
+
+@pytest.mark.parametrize("drain_per_segment", [False, True])
+def test_steal_route_replan_attributes_slow_branch(drain_per_segment):
+    """Replan is no longer evidence-free under stealing (ROADMAP
+    follow-up): the slow branch's pull-rate deficit at the shared intake
+    flags it as the culprit — the revision lands on ITS private tier
+    (bandwidth estimate pulled toward what it actually drains), never on
+    the healthy sibling, and traffic share shifts away from it."""
+    rep, plan, last = _steal_replan_scenario(drain_per_segment)
+    assert rep.items == 48
+    assert rep.replans >= 1
+    # the culprit's private-tier estimate collapsed toward its observed
+    # drain rate (one damped application halves the 100x-overestimated
+    # rate; later windows pull it further) ...
+    assert (last.basin.tier("path-a").bandwidth_bytes_per_s
+            < 0.6 * plan.basin.tier("path-a").bandwidth_bytes_per_s)
+    # ... the healthy sibling's estimate is untouched ...
+    assert last.basin.tier("path-b").bandwidth_bytes_per_s == \
+        pytest.approx(plan.basin.tier("path-b").bandwidth_bytes_per_s)
+    # ... and the rebalance follows the evidence
+    assert last.branch("path-b").weight > last.branch("path-a").weight
+
+
+def test_steal_intake_signal_quiet_on_balanced_branches(simbasin):
+    """Symmetric branches produce no culprit: near-equal pull rates map
+    to near-zero deficit ratios, below the flag threshold."""
+    plan = plan_transfer(_fanout_basin(), ITEM, stages=("deliver",))
+    h = SimHarness()
+    tier_a = h.branch_tier("path-a", bandwidth_bytes_per_s=10 * GBPS)
+    tier_b = h.branch_tier("path-b", bandwidth_bytes_per_s=10 * GBPS)
+    src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                          wall_pacing_s=0.0), 48, ITEM)
+    mover = h.mover(plan=plan)
+    rep = mover.parallel_transfer(
+        iter(src), lambda _: None,
+        transforms={"path-a": [("deliver", h.service(tier_a))],
+                    "path-b": [("deliver", h.service(tier_b))]},
+        mode="split", route="steal", replan_every_items=12)
+    assert rep.items == 48
+    assert not mover.last_plan.diagnosis
+
+
 @pytest.mark.parametrize("chunk", [0, 4])
 def test_parallel_transfer_surfaces_source_error(simbasin, chunk):
     """A raising source must fail the transfer (parity with the staged

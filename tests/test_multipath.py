@@ -473,6 +473,53 @@ def test_input_pipeline_fanin_honours_online_replan_cadence():
     assert merged["shard-0/pull"].items + merged["shard-1/pull"].items == 10
 
 
+def test_input_pipeline_fanin_tail_starts_at_merge_tier():
+    """Regression (ROADMAP bug): a custom fan-in basin whose shards have
+    a private chain DEEPER than one tier used to derive the shared tail
+    as ``tiers[1:]`` of branch 0 — planning the merged decode/place path
+    over another branch's private cache tier.  The tail must start at
+    the merge tier: the first tier common to every root->sink path."""
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import (InputPipeline, PipelineConfig,
+                                     SyntheticTokenSource)
+    n_shards = 2
+    shard_tiers = []
+    links = []
+    for i in range(n_shards):
+        shard_tiers += [
+            Tier(f"shard-{i}", TierKind.SOURCE, 4.0 * GBPS, latency_s=5e-3),
+            Tier(f"cache-{i}", TierKind.BURST_BUFFER, 20.0 * GBPS,
+                 latency_s=1e-4),
+        ]
+        links += [Link(f"shard-{i}", f"cache-{i}"),
+                  Link(f"cache-{i}", "host-burst-buffer")]
+    tail = [
+        Tier("host-burst-buffer", TierKind.BURST_BUFFER, 200.0 * GBPS,
+             latency_s=1e-5),
+        Tier("pcie", TierKind.CHANNEL, 128.0 * GBPS, latency_s=2e-5),
+        Tier("hbm", TierKind.SINK, 819.0 * 8.0 * GBPS, latency_s=1e-6),
+    ]
+    links += [Link("host-burst-buffer", "pcie"), Link("pcie", "hbm")]
+    basin = DrainageBasin(shard_tiers + tail, links)
+
+    cfg = get_smoke_config("repro-100m")
+    pc = PipelineConfig(global_batch=4, seq_len=16)
+    shards = [SyntheticTokenSource(cfg, pc, n_batches=3)
+              for _ in range(n_shards)]
+    pipe = InputPipeline(shards, basin=basin, pc=pc, to_device=False)
+    # the tail plan's basin begins at the merge tier — no branch-private
+    # cache tier leaks into the shared decode/place path
+    tail_names = [t.name for t in pipe.plan.basin.tiers]
+    assert tail_names == ["host-burst-buffer", "pcie", "hbm"]
+    # each shard branch still plans its own 2-deep private chain
+    assert len(pipe.shard_plan.branches) == n_shards
+    for b in pipe.shard_plan.branches:
+        assert set(b.private_tiers) == {b.branch_id,
+                                        b.branch_id.replace("shard", "cache")}
+    batches = list(pipe)
+    assert len(batches) == 3 * n_shards
+
+
 def test_fanin_promise_bounded_by_shard_aggregate():
     """The input-layer promise must fold in the shard branches' conserved
     aggregate — the fast merge-to-device tail alone would inflate it and

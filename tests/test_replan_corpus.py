@@ -49,18 +49,23 @@ def build_basin(spec: dict) -> DrainageBasin:
 
 
 def replay(spec: dict):
-    """The corpus replay protocol, shared with the fixture generator."""
+    """The corpus replay protocol, shared with the fixture generator.
+
+    ``max_window_bytes`` records the host window clamp the plan ran
+    under (the §3.2 misconfiguration a window-bound fixture captures);
+    reports may carry ``stall_window_s``."""
     basin = build_basin(spec)
     plan = plan_transfer(basin, spec["item_bytes"],
                          stages=tuple(spec["stages"]),
-                         ordered=spec.get("ordered", False))
+                         ordered=spec.get("ordered", False),
+                         max_window_bytes=spec.get("max_window_bytes"))
     reports = [StageReport(**r) for r in spec["reports"]]
     return replan(plan, reports, damping=spec.get("damping", 1.0),
                   intake_ratio=spec.get("intake_ratio"))
 
 
 def test_corpus_is_present():
-    assert len(FIXTURES) >= 5, (
+    assert len(FIXTURES) >= 8, (
         f"expected the recorded-report corpus under {DATA_DIR}")
 
 
@@ -81,4 +86,19 @@ def test_replayed_verdict_is_stable(path):
         if planned == "lower":
             assert ratio < 1.0 - 1e-9
         elif planned == "unchanged":
+            assert ratio == pytest.approx(1.0)
+    window = spec.get("expected_window_relative")
+    if window is not None:
+        clamped = plan_transfer(build_basin(spec), spec["item_bytes"],
+                                stages=tuple(spec["stages"]),
+                                ordered=spec.get("ordered", False),
+                                max_window_bytes=spec.get(
+                                    "max_window_bytes"))
+        ratio = revised.hops[0].window_bytes / clamped.hops[0].window_bytes
+        if window == "raised":
+            # the window-bound remedy: the revised window escapes the
+            # recorded host clamp (and the workers must NOT rise)
+            assert ratio > 1.0 + 1e-9
+            assert revised.hops[0].workers == clamped.hops[0].workers
+        elif window == "unchanged":
             assert ratio == pytest.approx(1.0)

@@ -1,0 +1,471 @@
+"""Windowed link transport (PR 5): RTT/BDP-governed CHANNEL hops executed
+end to end.
+
+The paper's first two paradigms (§3.1 network latency, §3.2 TCP congestion
+control) say a long link's throughput is ``window / RTT``, not its
+provisioned bandwidth.  These tests pin the executable form of that claim
+at every layer:
+
+* ``WindowedStage`` — credit/ACK clocking caps in-flight bytes, reports
+  window-limited stall time apart from queue stalls, and grows a running
+  window live (zero-drain);
+* ``plan_transfer`` — ``HopPlan.window_bytes`` sized from the segment
+  link's BDP with headroom, clamped to burst capacity and the host
+  ``max_window_bytes`` limit;
+* ``replan`` — the **window-bound** verdict (delivered rate pinned at
+  ~``window/RTT`` with window-stall evidence) whose remedy raises the
+  window, never the worker pool;
+* the acceptance scenario: ``paper_basin(link_gbps=100, rtt_ms=74)`` in
+  simbasin virtual time reproduces the paper's latency collapse under a
+  default-sized window and recovers with one replan — offline
+  (re-derive + re-run) and online (live window resize, no drain).
+"""
+
+import threading
+import time
+
+import pytest
+
+from simbasin import SimHarness
+
+from repro.core.basin import (DrainageBasin, GBPS, Link, MIB, Tier,
+                              TierKind, paper_basin)
+from repro.core.burst_buffer import BufferClosed, BurstBuffer
+from repro.core.planner import (WINDOW_HEADROOM, plan_delta, plan_transfer,
+                                replan)
+from repro.core.staging import StageReport, WindowedStage
+
+ITEM = 8 * MIB
+RTT = 0.074
+
+
+def _wan_basin(*, rtt_ms=74.0, link_gbps=100.0, storage_gbps=40.0,
+               bb_capacity_bytes=float("inf")):
+    """A linear WAN path with one latency-bearing link, so exactly one
+    planned hop is windowed."""
+    return DrainageBasin(
+        tiers=[
+            Tier("src", TierKind.SOURCE, storage_gbps * GBPS, latency_s=1e-4),
+            Tier("bb", TierKind.BURST_BUFFER, 2 * link_gbps * GBPS,
+                 latency_s=1e-5, capacity_bytes=bb_capacity_bytes),
+            Tier("dst", TierKind.SINK, storage_gbps * GBPS, latency_s=1e-4),
+        ],
+        links=[
+            Link("src", "bb", storage_gbps * GBPS),
+            Link("bb", "dst", link_gbps * GBPS, rtt_s=rtt_ms / 1e3),
+        ],
+    )
+
+
+# -- WindowedStage unit behaviour --------------------------------------------
+
+
+def _feed_stage(st, items, close=True):
+    up = BurstBuffer(capacity=max(len(items), 1))
+    for it in items:
+        up.put(it)
+    if close:
+        up.close()
+
+    def pull():
+        try:
+            return up.get()
+        except BufferClosed:
+            return None
+
+    st.start(pull)
+    return up
+
+
+def test_windowed_stage_caps_inflight_bytes():
+    """With a window of 2 items and a long RTT, no more than 2 items'
+    bytes are ever unACKed in flight."""
+    st = WindowedStage("wan", capacity=16, workers=4,
+                       window_bytes=2048, rtt_s=0.2)
+    seen_over = []
+
+    orig = st._on_sent
+
+    def spy(nbytes, t_sent):
+        orig(nbytes, t_sent)
+        with st._win_cond:
+            if st._inflight > st.window_bytes + 1e-9:
+                seen_over.append(st._inflight)
+
+    st._on_sent = spy
+    _feed_stage(st, [bytes(1024)] * 6)
+    st.join(timeout=10.0)
+    assert st.report().items == 6
+    assert not seen_over
+
+
+def test_windowed_stage_reports_window_stall_distinctly():
+    """The credit wait lands in stall_window_s, not in the queue stalls:
+    the three stall sides demand three different remedies."""
+    st = WindowedStage("wan", capacity=16, workers=1,
+                       window_bytes=1024, rtt_s=0.05)
+    _feed_stage(st, [bytes(1024)] * 4)
+    st.join(timeout=10.0)
+    rep = st.report()
+    assert rep.items == 4
+    # 3 waits of ~rtt each (the first item admits against an empty ledger)
+    assert rep.stall_window_s >= 0.10
+    assert rep.stall_up_s < rep.stall_window_s
+    assert rep.stall_down_s < rep.stall_window_s
+
+
+def test_windowed_stage_oversized_item_still_progresses():
+    """An item larger than the whole window is admitted alone — the
+    stream must always finish."""
+    st = WindowedStage("wan", capacity=8, workers=2,
+                       window_bytes=512, rtt_s=0.02)
+    _feed_stage(st, [bytes(2048)] * 3)
+    st.join(timeout=10.0)
+    assert st.report().items == 3
+
+
+def test_windowed_stage_live_window_grow_unblocks_credit():
+    """The zero-drain remedy: a worker parked on the ACK clock is
+    admitted the moment resize() grows the window — no drain, no
+    teardown."""
+    st = WindowedStage("wan", capacity=16, workers=1,
+                       window_bytes=1024, rtt_s=30.0)   # ACK far away
+    _feed_stage(st, [bytes(1024)] * 3, close=False)
+    deadline = time.monotonic() + 5.0
+    while st.report().items < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert st.report().items == 1          # second item has no credit
+    time.sleep(0.1)
+    assert st.report().items == 1
+    st.resize(window_bytes=16 * 1024)      # live growth admits it now
+    deadline = time.monotonic() + 5.0
+    while st.report().items < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert st.report().items == 3
+    rep = st.report()
+    assert rep.stall_window_s > 0.05       # the park was accounted
+
+
+def test_windowed_stage_releases_credit_when_transform_raises():
+    """A failed transmit returns its credit via the ACK path: siblings
+    parked on the window are not stranded behind bytes that will never
+    be acknowledged."""
+    calls = []
+
+    def flaky(item):
+        calls.append(item)
+        if len(calls) == 1:
+            raise IOError("transmit failed")
+        return item
+
+    st = WindowedStage("wan", capacity=8, workers=2,
+                       window_bytes=1024, rtt_s=0.02, transform=flaky)
+    _feed_stage(st, [bytes(1024)] * 4)
+    with pytest.raises(RuntimeError, match="transmit failed"):
+        st.join(timeout=10.0)      # join surfaces the worker error
+    rep = st.report()
+    assert rep.errors == 1
+    assert rep.items == 3          # the surviving worker finished the rest
+
+
+def test_windowed_stage_virtual_time_rate_is_window_over_rtt(simbasin):
+    """In virtual time the stage's delivered rate pins at ~window/RTT —
+    deterministically, as a pure function of the script."""
+    n = 24
+    link = simbasin.link(bandwidth_bytes_per_s=100 * GBPS, rtt_s=RTT)
+    st = WindowedStage("wan", capacity=64, workers=4,
+                       window_bytes=2 * ITEM, rtt_s=RTT,
+                       transform=simbasin.service(link),
+                       clock=simbasin.clock)
+    _feed_stage(st, [bytes(ITEM)] * n)
+    st.join(timeout=30.0)
+    rep = st.report()
+    assert rep.items == n
+    ceiling = 2 * ITEM / RTT
+    rate = rep.bytes / rep.elapsed_s
+    assert rate <= ceiling * 1.15
+    assert rate >= ceiling * 0.5           # but in the window regime, not 0
+    assert rep.stall_window_s / (rep.elapsed_s * 4) >= 0.5
+
+
+# -- planner: window sizing ---------------------------------------------------
+
+
+def test_plan_sizes_window_from_bdp_with_headroom():
+    basin = _wan_basin()
+    plan = plan_transfer(basin, ITEM, stages=("move",))
+    hop = plan.hops[0]
+    bdp = 100 * GBPS * RTT
+    assert hop.rtt_s == pytest.approx(RTT)
+    assert hop.window_bytes == pytest.approx(bdp * WINDOW_HEADROOM)
+
+
+def test_plan_window_zero_without_rtt_links():
+    basin = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 10 * GBPS, latency_s=1e-4),
+        Tier("dst", TierKind.SINK, 10 * GBPS, latency_s=1e-4),
+    ])
+    plan = plan_transfer(basin, ITEM, stages=("move",))
+    assert plan.hops[0].window_bytes == 0.0
+    assert plan.hops[0].rtt_s == 0.0
+
+
+def test_plan_window_clamped_to_host_limit_and_burst_capacity():
+    basin = _wan_basin()
+    clamped = plan_transfer(basin, ITEM, stages=("move",),
+                            max_window_bytes=16 * MIB)
+    assert clamped.hops[0].window_bytes == pytest.approx(16 * MIB)
+    assert clamped.max_window_bytes == pytest.approx(16 * MIB)
+    # the promise stays the line rate: the misconfigured window must
+    # surface as a fidelity gap, not be re-promised away
+    free = plan_transfer(basin, ITEM, stages=("move",))
+    assert clamped.planned_bytes_per_s == pytest.approx(
+        free.planned_bytes_per_s)
+    # burst capacity bounds the window too (can't keep more in flight
+    # than the staging tier can hold)
+    tight = plan_transfer(_wan_basin(bb_capacity_bytes=64 * MIB), ITEM,
+                          stages=("move",))
+    assert tight.hops[0].window_bytes == pytest.approx(64 * MIB)
+
+
+def test_plan_delta_carries_window_revisions():
+    basin = _wan_basin()
+    small = plan_transfer(basin, ITEM, stages=("move",),
+                          max_window_bytes=16 * MIB)
+    big = plan_transfer(basin, ITEM, stages=("move",))
+    delta = plan_delta(small, big)
+    assert delta
+    assert delta.hops["move"].window_bytes == pytest.approx(
+        big.hops[0].window_bytes)
+    assert not plan_delta(small, small)
+
+
+def test_describe_prints_window_and_rtt():
+    plan = plan_transfer(_wan_basin(), ITEM, stages=("move",))
+    text = plan.describe()
+    assert "win=" in text and "rtt=74ms" in text
+    # a queue-clocked plan keeps the historical format
+    basin = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 10 * GBPS),
+        Tier("dst", TierKind.SINK, 10 * GBPS),
+    ])
+    assert "win=" not in plan_transfer(basin, ITEM,
+                                       stages=("move",)).describe()
+
+
+# -- replan: the window-bound verdict ----------------------------------------
+
+
+def _window_report(plan, *, rate_fraction=1.0, window_stall_frac=0.5):
+    """A report pinned at ``rate_fraction`` x the hop's window ceiling
+    with the given window-stall ratio."""
+    hop = plan.hops[0]
+    elapsed = 4.0
+    rate = hop.window_bytes / hop.rtt_s * rate_fraction
+    nbytes = int(rate * elapsed)
+    return StageReport(
+        name=hop.name, items=max(1, nbytes // int(plan.item_bytes)),
+        bytes=nbytes, elapsed_s=elapsed, stall_up_s=0.0, stall_down_s=0.0,
+        stall_window_s=window_stall_frac * elapsed * hop.workers,
+        errors=0)
+
+
+def test_replan_issues_window_bound_verdict_and_raises_window():
+    plan = plan_transfer(_wan_basin(), ITEM, stages=("move",),
+                         max_window_bytes=16 * MIB)
+    revised = replan(plan, [_window_report(plan)], damping=1.0)
+    assert revised.diagnosis == {"move": "window-bound(bb->dst)"}
+    # remedy: the window clamp lifts back to BDP-with-headroom ...
+    bdp = 100 * GBPS * RTT
+    assert revised.hops[0].window_bytes == pytest.approx(
+        bdp * WINDOW_HEADROOM)
+    assert revised.max_window_bytes is None
+    # ... workers do NOT rise (they would all park on the same ACK clock)
+    assert revised.hops[0].workers == plan.hops[0].workers
+    # ... and the tier estimates stand: the pipe was never the problem
+    assert revised.planned_bytes_per_s == pytest.approx(
+        plan.planned_bytes_per_s)
+
+
+def test_replan_no_window_verdict_when_rate_not_pinned():
+    """Window stall with delivery far above window/RTT is transition
+    noise, not a pinned link — no verdict, no clamp lift."""
+    plan = plan_transfer(_wan_basin(), ITEM, stages=("move",),
+                         max_window_bytes=16 * MIB)
+    rep = _window_report(plan, rate_fraction=4.0)
+    revised = replan(plan, [rep], damping=1.0)
+    assert "window-bound(bb->dst)" not in revised.diagnosis.values()
+    assert revised.max_window_bytes == pytest.approx(16 * MIB)
+
+
+def test_replan_quiet_windowed_hop_keeps_clamp():
+    plan = plan_transfer(_wan_basin(), ITEM, stages=("move",),
+                         max_window_bytes=16 * MIB)
+    hop = plan.hops[0]
+    quiet = StageReport(name=hop.name, items=64, bytes=64 * int(ITEM),
+                        elapsed_s=64 * ITEM / hop.rate_bytes_per_s,
+                        stall_up_s=0.0, stall_down_s=0.0, errors=0)
+    revised = replan(plan, [quiet], damping=1.0)
+    assert revised.diagnosis == {}
+    assert revised.max_window_bytes == pytest.approx(16 * MIB)
+
+
+# -- the acceptance scenario (ISSUE 5) ---------------------------------------
+
+
+N_ITEMS = 96
+UNDER_WINDOW = 16 * MIB
+
+
+def _paper_plan(max_window_bytes):
+    basin = paper_basin(link_gbps=100.0, rtt_ms=74.0, storage_jitter_ms=0.0)
+    return plan_transfer(basin, ITEM, stages=("wan", "store"),
+                         max_window_bytes=max_window_bytes)
+
+
+def _paper_run(plan, replan_every_items=0, n_items=N_ITEMS):
+    """Execute the paper path in virtual time: a fast feeder, the scripted
+    100 Gbps x 74 ms link, the destination storage tier."""
+    h = SimHarness()
+    link = h.link(bandwidth_bytes_per_s=100 * GBPS, rtt_s=RTT)
+    dst = h.tier(bandwidth_bytes_per_s=40 * GBPS, latency_s=2e-3, seed=7)
+    src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                          wall_pacing_s=0.0), n_items, ITEM)
+    mover = h.mover(plan=plan)
+    rep = mover.bulk_transfer(
+        iter(src), lambda _: None,
+        transforms=[("wan", h.service(link)), ("store", h.service(dst))],
+        replan_every_items=replan_every_items)
+    return rep, mover.last_plan
+
+
+def test_acceptance_under_windowed_transfer_collapses_to_window_over_rtt():
+    """paper_basin at 100 Gbps x 74 ms with a default-sized (16 MiB)
+    window: delivery collapses to <= ~window/RTT, a >5x latency collapse
+    against the planned rate — the paper's Fig. 2 mechanism."""
+    plan = _paper_plan(UNDER_WINDOW)
+    rep, _ = _paper_run(plan)
+    assert rep.items == N_ITEMS
+    ceiling = UNDER_WINDOW / RTT
+    assert rep.throughput_bytes_per_s <= ceiling * 1.15
+    assert rep.throughput_bytes_per_s < plan.planned_bytes_per_s / 5.0
+    # the evidence is window stall, not queue stall
+    by = {r.name: r for r in rep.stage_reports}
+    assert by["wan"].stall_window_s > 10 * by["wan"].stall_up_s
+    assert by["wan"].stall_window_s > 10 * by["wan"].stall_down_s
+
+
+def test_acceptance_one_replan_recovers_to_planned_rate():
+    """One replan turns the collapse into a window-bound verdict, raises
+    the window to BDP-with-headroom, and the re-run delivers >= 90% of
+    the planned rate — while the worker pool stays put."""
+    plan = _paper_plan(UNDER_WINDOW)
+    rep, _ = _paper_run(plan)
+    revised = replan(plan, rep.stage_reports, damping=1.0)
+    assert revised.diagnosis["wan"].startswith("window-bound(")
+    assert all(v.startswith("window-bound(")
+               for v in revised.diagnosis.values())
+    assert [h.workers for h in revised.hops] == \
+        [h.workers for h in plan.hops]
+    bdp = 100 * GBPS * RTT
+    assert revised.hops[0].window_bytes == pytest.approx(
+        bdp * WINDOW_HEADROOM)
+    rep2, _ = _paper_run(revised)
+    assert rep2.items == N_ITEMS
+    assert (rep2.throughput_bytes_per_s
+            >= 0.9 * revised.planned_bytes_per_s)
+
+
+def test_acceptance_live_window_resize_recovers_zero_drain():
+    """The online path: the same transfer with ``replan_every_items``
+    diagnoses window-bound at the first boundary and grows the RUNNING
+    stages' windows in place — no drain, and the stream finishes well
+    ahead of the statically under-windowed run.
+
+    How *much* of the stream rides the grown window is host-scheduling-
+    dependent: before the boundary code observes the resize, workers may
+    already have committed window waits for every item staged in the
+    pipeline's buffers (the virtual-clock admit never wall-blocks).
+    The stream is therefore sized so that committable prefix — bounded
+    by the two hop buffers plus in-flight items — is a minority of the
+    stream, and the margin asserts only what survives the worst case."""
+    n = 240
+    static, _ = _paper_run(_paper_plan(UNDER_WINDOW), n_items=n)
+    live, last = _paper_run(_paper_plan(UNDER_WINDOW),
+                            replan_every_items=16, n_items=n)
+    assert live.items == static.items == n
+    assert live.replans >= 1
+    # the remedy observably applied: every windowed hop's LIVE window
+    # grew to BDP-with-headroom mid-transfer, which only the
+    # window-bound verdict triggers.  (The verdict *string* is pinned by
+    # the offline acceptance test above; here a later revision window —
+    # one straddling the recovery transition — may overwrite the per-hop
+    # diagnosis entry, so the string is not scheduling-safe to assert.)
+    bdp = 100 * GBPS * RTT
+    assert last.hops[0].window_bytes == pytest.approx(bdp * WINDOW_HEADROOM)
+    assert last.max_window_bytes is None
+    # the live resize pays off within the same transfer: even if the
+    # whole buffered prefix (~2 x 64-slot buffers + in-flight) stays
+    # committed at the old window pace, the remaining majority rides
+    # the BDP window at >20x the pinned rate
+    assert live.throughput_bytes_per_s >= 1.3 * static.throughput_bytes_per_s
+
+
+def test_windowed_hop_rides_parallel_transfer_paths(simbasin):
+    """The windowed stage is built on the parallel execution paths too: a
+    fan-out plan whose branches cross an RTT link paces each branch at
+    its window ceiling."""
+    basin = DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 40.0 * GBPS, latency_s=1e-5),
+         Tier("staging", TierKind.BURST_BUFFER, 40.0 * GBPS, latency_s=1e-5),
+         Tier("site-a", TierKind.SINK, 10.0 * GBPS),
+         Tier("site-b", TierKind.SINK, 10.0 * GBPS)],
+        [Link("src", "staging"),
+         Link("staging", "site-a", 10.0 * GBPS, rtt_s=0.04),
+         Link("staging", "site-b", 10.0 * GBPS, rtt_s=0.04)])
+    plan = plan_transfer(basin, MIB, stages=("deliver",),
+                         max_window_bytes=2 * MIB)
+    for b in plan.branches:
+        assert b.hops[0].window_bytes == pytest.approx(2 * MIB)
+    link_a = simbasin.link(bandwidth_bytes_per_s=10 * GBPS, rtt_s=0.04,
+                           name="site-a")
+    link_b = simbasin.link(bandwidth_bytes_per_s=10 * GBPS, rtt_s=0.04,
+                           name="site-b")
+    src = simbasin.source(simbasin.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                                        wall_pacing_s=0.0), 40, MIB)
+    mover = simbasin.mover(plan=plan)
+    rep = mover.parallel_transfer(
+        iter(src), lambda _: None,
+        transforms={"site-a": [("deliver", simbasin.service(link_a))],
+                    "site-b": [("deliver", simbasin.service(link_b))]},
+        mode="split")
+    assert rep.items == 40
+    # each branch's ceiling is window/RTT; the aggregate can't beat 2x it
+    ceiling = 2 * (2 * MIB / 0.04)
+    assert rep.throughput_bytes_per_s <= ceiling * 1.15
+    win_stall = sum(r.stall_window_s for r in rep.stage_reports)
+    assert win_stall > 0
+
+
+# -- simbasin link model ------------------------------------------------------
+
+
+def test_simulated_link_loss_pays_one_rtt(simbasin):
+    link = simbasin.link(bandwidth_bytes_per_s=1000 * GBPS, rtt_s=0.1,
+                         loss_every=3, wall_pacing_s=0.0)
+    times = [link.serve(1024) for _ in range(6)]
+    # items 3 and 6 (1-based) are lost: each pays one extra RTT
+    assert times[2] - times[1] >= 0.1
+    assert times[5] - times[4] >= 0.1
+    assert times[1] - times[0] < 0.01
+
+
+def test_simulated_link_shift_changes_rtt_mid_stream(simbasin):
+    link = simbasin.link(bandwidth_bytes_per_s=1000 * GBPS, rtt_s=0.02,
+                         loss_every=1, wall_pacing_s=0.0)
+    link.shift_at(2, rtt_s=0.2)
+    t0 = link.serve(1024)          # lost at rtt=0.02
+    t1 = link.serve(1024) - t0     # lost at rtt=0.02
+    t2 = link.serve(1024)          # shifted: lost at rtt=0.2
+    assert t1 < 0.05
+    assert t2 - (t0 + t1) >= 0.2
