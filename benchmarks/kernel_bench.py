@@ -43,3 +43,39 @@ def run() -> None:
     emit("kernel/ssd_scan_interp", t * 1e6,
          f"maxerr={err:.1e} state_vmem={(P*N*4)/1024:.0f}KiB "
          f"chunk_flops={2*64*64*(N+P)}")
+
+    # lattice digest: the accelerator-placed integrity kernel must be
+    # BIT-EXACT against the jnp oracle (uint32 wraparound arithmetic is
+    # deterministic on both paths — any mismatch is a kernel bug, not
+    # float noise), since the oracle IS the CPU production digest path
+    from repro.core.integrity import DIGEST_BLOCK, DIGEST_TILE
+    from repro.kernels.digest import block_digest, digest_ref
+    nb = 64 * DIGEST_TILE
+    panels = jnp.asarray(
+        np.random.default_rng(0).integers(0, 1 << 32, (nb, DIGEST_BLOCK),
+                                          dtype=np.uint32))
+    t, d = time_it(lambda: jax.block_until_ready(
+        block_digest(panels, tile=DIGEST_TILE, interpret=True)))
+    d_ref = np.asarray(digest_ref(panels))
+    exact = bool((np.asarray(d) == d_ref).all())
+    emit("kernel/digest_interp", t * 1e6,
+         f"exact_parity={exact} blocks={nb} "
+         f"bytes={nb * DIGEST_BLOCK * 4 // 1024}KiB")
+    if not exact:
+        raise SystemExit("kernel/digest_interp: pallas digest diverged "
+                         "from the jnp oracle (must be bit-exact)")
+
+    # wire compression roundtrip: the blockwise-int8 stage transform
+    # must reconstruct within int8 quantization error
+    from repro.core.integrity import compress_transform, decompress_transform
+    xs = jax.random.normal(jax.random.fold_in(k, 6), (64, 256)) * 3.0
+    comp, decomp = compress_transform(), decompress_transform()
+    t, back = time_it(lambda: jax.block_until_ready(decomp(comp(xs))))
+    scale = float(jnp.abs(xs).max())
+    rerr = float(jnp.abs(back - xs).max()) / max(scale, 1e-9)
+    emit("kernel/compress_roundtrip_interp", t * 1e6,
+         f"rel_err={rerr:.1e} ratio=4x block=256")
+    if rerr > 2.0 / 127.0:
+        raise SystemExit(
+            f"kernel/compress_roundtrip_interp: reconstruction error "
+            f"{rerr:.2e} exceeds int8 quantization bound")

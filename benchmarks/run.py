@@ -26,7 +26,7 @@ from . import (common, fig2_latency_sweep, fig4_cca_sweep,
                fig8_bulk_streaming, fig10_storage_bound,
                fig11_staged_vs_direct, global_tuning, kernel_bench,
                live_swap, multipath, online_replan, planned_vs_fixed,
-               roofline, table5_basin_volumes)
+               roofline, staging_throughput, table5_basin_volumes)
 
 SUITES = {
     "table5": table5_basin_volumes,
@@ -42,11 +42,14 @@ SUITES = {
     "online_replan": online_replan,
     "planned_vs_fixed": planned_vs_fixed,
     "roofline": roofline,
+    "staging_throughput": staging_throughput,
 }
 
 #: deterministic-in-virtual-time / analytic suites, fast enough for the
-#: per-push CI loop (no wall-clock sleeps, no model compiles)
-QUICK = ["table5", "fig2", "live_swap", "multipath"]
+#: per-push CI loop (no wall-clock sleeps, no model compiles) — plus the
+#: staging_throughput wall-clock gate, the zero-copy plane's acceptance
+#: claim (a few seconds of pure host work, no compiles, no sleeps)
+QUICK = ["table5", "fig2", "live_swap", "multipath", "staging_throughput"]
 
 
 def _write_json(json_dir: str, name: str, rows: list, error: str) -> None:

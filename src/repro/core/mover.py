@@ -87,7 +87,6 @@ and credit-blocked workers wake into the new credit immediately.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import threading
 import time
 import traceback
@@ -96,12 +95,18 @@ from typing import Any, Callable, Iterable, Iterator, Mapping, Optional, \
 
 from .basin import DrainageBasin
 from .burst_buffer import BufferClosed, BurstBuffer
+# the integrity seam moved to core.integrity (host vs accelerator digest
+# placement); re-exported under the historical names for importers
+from .integrity import StreamDigest as _StreamDigest, as_bytes as _as_bytes
 from .planner import BranchPlan, HopPlan, STALL_THRESHOLD, TransferPlan, \
     plan_delta, replan as _replan
 from .staging import ParallelBranchPipeline, Stage, StagePipeline, \
     StageReport, WindowedStage, _default_sizeof, delta_reports, \
     iter_segments, merge_reports
 from .telemetry import TelemetryRegistry
+
+__all__ = ["MIRROR_BATCH", "MoverConfig", "TransferReport",
+           "UnifiedDataMover", "_StreamDigest", "_as_bytes"]
 
 #: items replicated per ``put_many`` batch by the mirror-mode dispatcher
 #: (one lock round-trip per branch queue per batch instead of per item)
@@ -145,40 +150,20 @@ class TransferReport:
                    key=lambda r: r.throughput_bytes_per_s or float("inf"))
 
 
-class _StreamDigest:
-    """Order-independent integrity over an item stream: XOR of per-item
-    SHA-256 digests (commutative + associative), shared by the staged,
-    parallel-branch, and direct paths so their checksums stay comparable.
-    Thread-safe; a ``None``-mode instance is a no-op."""
-
-    def __init__(self, enabled: bool):
-        self._acc = bytearray(32) if enabled else None
-        self._lock = threading.Lock()
-
-    def add(self, item: Any) -> Any:
-        if self._acc is not None:
-            d = hashlib.sha256(_as_bytes(item)).digest()
-            with self._lock:
-                for i in range(32):
-                    self._acc[i] ^= d[i]
-        return item
-
-    def hexdigest(self) -> Optional[str]:
-        return bytes(self._acc).hex() if self._acc is not None else None
-
-
-def _drain_batched(buf: BurstBuffer) -> Iterator[Any]:
+def _drain_batched(buf: BurstBuffer,
+                   batch: int = MIRROR_BATCH) -> Iterator[Any]:
     """Drain a buffer via ``get_many``: one lock round-trip per batch of
     *already-staged* items.  Unlike put-side batching this adds no
     latency — ``get_many`` returns immediately with at least one item —
     it only stops the hot merge-drain loop paying one lock acquisition
     per item."""
+    batch = max(1, batch)
     while True:
         try:
-            batch = buf.get_many(MIRROR_BATCH)
+            out = buf.get_many(batch)
         except BufferClosed:
             return
-        yield from batch
+        yield from out
 
 
 class _DrainerPool:
@@ -303,21 +288,25 @@ class UnifiedDataMover:
 
     def _make_stage(self, name: str, capacity: int, workers: int,
                     transform: Optional[Callable[[Any], Any]],
-                    hop: Optional[HopPlan]) -> Stage:
+                    hop: Optional[HopPlan],
+                    batch_items: Optional[int] = None) -> Stage:
         """One staging hop — a :class:`~repro.core.staging.WindowedStage`
         when the plan marks the segment RTT-governed (a CHANNEL hop whose
         in-flight bytes are capped at the plan's ``window_bytes``), a
         queue-clocked :class:`~repro.core.staging.Stage` otherwise.  This
         is the single seam every execution path builds hops through, so
-        windowed transport rides bulk, streaming, and both parallel
-        paths alike."""
+        windowed transport — and the zero-copy slab size
+        (``batch_items``, a per-call override or the plan hop's) — rides
+        bulk, streaming, and both parallel paths alike."""
+        batch = self._hop_batch(hop, batch_items)
         if hop is not None and hop.window_bytes > 0 and hop.rtt_s > 0:
             return WindowedStage(name, capacity=capacity, workers=workers,
                                  transform=transform, clock=self._clock,
                                  window_bytes=hop.window_bytes,
-                                 rtt_s=hop.rtt_s)
+                                 rtt_s=hop.rtt_s, batch_items=batch)
         return Stage(name, capacity=capacity, workers=workers,
-                     transform=transform, clock=self._clock)
+                     transform=transform, clock=self._clock,
+                     batch_items=batch)
 
     @staticmethod
     def _hop_window(hop: Optional[HopPlan]) -> Optional[float]:
@@ -327,19 +316,42 @@ class UnifiedDataMover:
             return hop.window_bytes
         return None
 
+    @staticmethod
+    def _hop_batch(hop: Optional[HopPlan],
+                   batch_items: Optional[int] = None) -> int:
+        """Effective slab size for a hop: the per-call override wins
+        (the benchmark's per-item baseline forces 1 against a batched
+        plan), else the plan hop's ``batch_items``, else per-item."""
+        if batch_items is not None:
+            return max(1, int(batch_items))
+        return hop.batch_items if hop is not None else 1
+
+    def _deal_batch(self, plan: TransferPlan,
+                    batch_items: Optional[int] = None) -> int:
+        """Split-node slab size: the smallest first-hop batch across
+        branches (every branch intake must absorb a dealt slab without
+        overrunning its queue).  Ordered plans stay per-item — holding
+        tokens to fill a slab would trade delivery latency for lock
+        traffic, the same rule mirror batching follows."""
+        if plan.ordered or not plan.branches:
+            return 1
+        return max(1, min(self._hop_batch(b.hops[0], batch_items)
+                          for b in plan.branches))
+
     def _build_pipeline(
         self,
         source: Iterable[Any],
         transforms: Sequence[tuple[str, Callable[[Any], Any]]],
         params: Sequence[tuple[int, int, Optional[HopPlan]]],
         plan: Optional[TransferPlan] = None,
+        batch_items: Optional[int] = None,
     ) -> StagePipeline:
         default_name = plan.hops[0].name if plan is not None else "stage"
         stages = [
-            self._make_stage(name, cap, wrk, fn, hop)
+            self._make_stage(name, cap, wrk, fn, hop, batch_items)
             for (name, fn), (cap, wrk, hop) in zip(transforms, params)
         ] or [self._make_stage(default_name, params[0][0], params[0][1],
-                               None, params[0][2])]
+                               None, params[0][2], batch_items)]
         return StagePipeline(source, stages)
 
     def _record(self, report: TransferReport) -> TransferReport:
@@ -357,6 +369,7 @@ class UnifiedDataMover:
         plan: Optional[TransferPlan],
         chunk: int,
         damping: float,
+        batch_items: Optional[int] = None,
     ) -> tuple[int, int, list[StageReport], int, Optional[TransferPlan]]:
         """The zero-drain hot path: ONE persistent pipeline for the whole
         transfer.  Revision boundaries are accounting-only checkpoints —
@@ -369,14 +382,20 @@ class UnifiedDataMover:
         params = self._stage_params(all_transforms, active, capacity,
                                     workers)
         pipeline = self._build_pipeline(iter(source), all_transforms,
-                                        params, active)
+                                        params, active, batch_items)
         pipeline.start()
         items = 0
         nbytes = 0
         replans = 0
         prev_cum: list[StageReport] = []
         boundary = chunk
-        for item in pipeline.output.drain():
+        # a batched last hop stages whole slabs: drain them the same way
+        # (one get_many lock round-trip per slab) instead of re-serializing
+        # the sink loop to one lock acquisition per item
+        out_batch = self._hop_batch(params[-1][2], batch_items)
+        out_iter = (pipeline.output.drain() if out_batch <= 1
+                    else _drain_batched(pipeline.output, out_batch))
+        for item in out_iter:
             sink(item)
             items += 1
             nbytes += _default_sizeof(item)
@@ -400,7 +419,9 @@ class UnifiedDataMover:
                     for st, (cap, wrk, hop) in zip(pipeline.stages,
                                                    new_params):
                         st.resize(capacity=cap, workers=wrk,
-                                  window_bytes=self._hop_window(hop))
+                                  window_bytes=self._hop_window(hop),
+                                  batch_items=self._hop_batch(hop,
+                                                              batch_items))
         pipeline.join()
         return items, nbytes, pipeline.reports(), replans, active
 
@@ -414,6 +435,7 @@ class UnifiedDataMover:
         plan: Optional[TransferPlan],
         chunk: int,
         damping: float,
+        batch_items: Optional[int] = None,
     ) -> tuple[int, int, list[StageReport], int, Optional[TransferPlan]]:
         """The historical drain-per-segment path: tear the pipeline down
         at every boundary and rebuild it on the revised plan.  Kept as an
@@ -441,9 +463,12 @@ class UnifiedDataMover:
             params = self._stage_params(all_transforms, active, capacity,
                                         workers)
             pipeline = self._build_pipeline(segment, all_transforms, params,
-                                            active)
+                                            active, batch_items)
             pipeline.start()
-            for item in pipeline.output.drain():
+            out_batch = self._hop_batch(params[-1][2], batch_items)
+            out_iter = (pipeline.output.drain() if out_batch <= 1
+                        else _drain_batched(pipeline.output, out_batch))
+            for item in out_iter:
                 sink(item)
                 items += 1
                 nbytes += _default_sizeof(item)
@@ -465,25 +490,31 @@ class UnifiedDataMover:
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
+        batch_items: Optional[int] = None,
     ) -> TransferReport:
         own_plan = plan is None
         plan = plan if plan is not None else self.plan
         do_sum = self.config.checksum if checksum is None else checksum
 
         # order-independent integrity: concurrent staging workers may
-        # deliver items out of order (see _StreamDigest)
-        digest = _StreamDigest(do_sum)
+        # deliver items out of order (see _StreamDigest).  The plan
+        # decides where the digest computes (host SHA-256 vs the
+        # accelerator lattice kernel) — the §3.4 compute-budget placement.
+        placement = plan.checksum_placement if plan is not None else "host"
+        digest = _StreamDigest(do_sum, placement=placement)
 
         all_transforms = list(transforms)
         if do_sum:
             # checksum rides inside the staged path — overlapped, not
             # serial.  With a plan it rides the hop with the most
             # bandwidth headroom (planner.checksum_index); otherwise it
-            # trails the path.
+            # trails the path.  The digest object itself is the transform
+            # (callable per item, `.many` per slab) so a batched hop
+            # folds a whole slab under one lock acquisition.
             at = len(all_transforms)
             if plan is not None and plan.checksum_index is not None:
                 at = min(plan.checksum_index, at)
-            all_transforms.insert(at, ("checksum", digest.add))
+            all_transforms.insert(at, ("checksum", digest))
 
         # online replanning needs a plan to revise; without one the
         # transfer runs as a single segment
@@ -492,11 +523,11 @@ class UnifiedDataMover:
         if drain_per_segment and chunk:
             items, nbytes, merged, replans, active = self._run_segmented(
                 source, sink, all_transforms, capacity, workers, plan,
-                chunk, replan_damping)
+                chunk, replan_damping, batch_items)
         else:
             items, nbytes, merged, replans, active = self._run_live(
                 source, sink, all_transforms, capacity, workers, plan,
-                chunk, replan_damping)
+                chunk, replan_damping, batch_items)
         elapsed = self._clock() - t0
         self.last_plan = active
         if own_plan and self.plan is not None:
@@ -534,6 +565,7 @@ class UnifiedDataMover:
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
+        batch_items: Optional[int] = None,
     ) -> TransferReport:
         """Move a dataset at rest (paper section 2.2, *Bulk Transfer*).
 
@@ -545,10 +577,14 @@ class UnifiedDataMover:
         mid-transfer regime shift is answered mid-transfer with no
         teardown bubble.  ``drain_per_segment=True`` selects the
         historical segment-drain-and-rebuild path instead (the
-        equivalence/benchmark baseline)."""
+        equivalence/benchmark baseline).
+
+        ``batch_items`` overrides the slab size on every hop (1 forces
+        the per-item path against a batched plan — the benchmark
+        baseline; None defers to the plan's per-hop ``batch_items``)."""
         return self._run("bulk", source, sink, transforms, capacity, workers,
                          checksum, plan, replan_every_items, replan_damping,
-                         drain_per_segment)
+                         drain_per_segment, batch_items)
 
     def streaming_transfer(
         self,
@@ -563,6 +599,7 @@ class UnifiedDataMover:
         replan_every_items: int = 0,
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
+        batch_items: Optional[int] = None,
     ) -> TransferReport:
         """Move a still-growing stream (paper section 2.2, *Streaming
         Transfer*): the source iterator may block while data is produced;
@@ -570,10 +607,11 @@ class UnifiedDataMover:
         buffer path provides.  Identical machinery, different source
         contract — the unified-mover property.  ``replan_every_items``
         revises the plan online, applied zero-drain to the persistent
-        pipeline as in :meth:`bulk_transfer`."""
+        pipeline as in :meth:`bulk_transfer`; ``batch_items`` overrides
+        the per-hop slab size as in :meth:`bulk_transfer`."""
         return self._run("streaming", source, sink, transforms, capacity,
                          workers, checksum, plan, replan_every_items,
-                         replan_damping, drain_per_segment)
+                         replan_damping, drain_per_segment, batch_items)
 
     # -- parallel-branch path (DAG plans) --------------------------------------
 
@@ -585,13 +623,17 @@ class UnifiedDataMover:
         capacity: Optional[int],
         workers: Optional[int],
         route: str = "deal",
+        batch_items: Optional[int] = None,
     ) -> tuple[dict[str, BurstBuffer], ParallelBranchPipeline]:
         """Per-branch input queue + stage chain from a multipath plan.
 
         ``route="steal"`` wires every branch to ONE shared intake queue
         (sized to the branches' aggregate first-hop capacity): branches
         pull items as they free up instead of being dealt a share, so a
-        transiently slow branch self-throttles within the segment."""
+        transiently slow branch self-throttles within the segment.  Each
+        intake queue is handed to its :class:`StagePipeline` as a
+        BurstBuffer (not a drain iterator), so a batched first hop pulls
+        true slabs — one ``get_many`` lock round-trip per slab."""
         queues: dict[str, BurstBuffer] = {}
         branches: list[tuple[str, StagePipeline]] = []
         shared: Optional[BurstBuffer] = None
@@ -608,14 +650,14 @@ class UnifiedDataMover:
                 hop = b.hop_for(i, name)
                 stages.append(self._make_stage(
                     name, capacity or hop.capacity,
-                    workers or hop.workers, fn, hop))
+                    workers or hop.workers, fn, hop, batch_items))
             if shared is not None:
                 q = shared
             else:
                 q = BurstBuffer(b.hops[0].capacity,
                                 name=f"{b.branch_id}.inq", clock=self._clock)
             queues[b.branch_id] = q
-            branches.append((b.branch_id, StagePipeline(q.drain(), stages)))
+            branches.append((b.branch_id, StagePipeline(q, stages)))
         pbp = ParallelBranchPipeline(
             branches, clock=self._clock,
             upstreams=None if shared is not None else queues,
@@ -628,7 +670,8 @@ class UnifiedDataMover:
                   mode: str, on_item: Callable[[Any], Any],
                   route: str = "deal",
                   mirror_batch: int = MIRROR_BATCH,
-                  err_out: Optional[list[str]] = None
+                  err_out: Optional[list[str]] = None,
+                  deal_batch: int = 1
                   ) -> Callable[[], None]:
         """The split/merge node, executable: pulls the source and routes.
 
@@ -645,29 +688,63 @@ class UnifiedDataMover:
         The caller passes ``mirror_batch=1`` for ordered (latency-
         sensitive) streams, where holding tokens to fill a batch would
         trade delivery latency for lock traffic.
+
+        ``deal_batch > 1`` routes split-mode traffic in whole slabs: the
+        digest folds the slab in one lock acquisition (``on_item.many``
+        when present), a dealt slab goes to ONE branch with its deficit
+        debited by the slab size (long-run shares unchanged), and the
+        steal intake takes one ``put_many`` per slab — the split node's
+        share of the zero-copy batch admission.  ``deal_batch=1`` is the
+        historical per-item dispatch, byte for byte.
         """
         deficits = {bid: 0.0 for bid in order}
+        on_many = getattr(on_item, "many", None)
+
+        def fold(batch: list[Any]) -> None:
+            if on_many is not None:
+                on_many(batch)
+            else:
+                for it in batch:
+                    on_item(it)
 
         def run() -> None:
             try:
                 if mode == "mirror":
                     batch: list[Any] = []
                     for item in segment:
-                        on_item(item)
                         batch.append(item)
                         if len(batch) >= mirror_batch:
+                            fold(batch)     # each source item hashed once
                             for bid in order:
                                 queues[bid].put_many(batch)
                             batch = []
                     if batch:
+                        fold(batch)
                         for bid in order:
                             queues[bid].put_many(batch)
                     return
                 if route == "steal":
                     shared = queues[order[0]]
-                    for item in segment:
-                        on_item(item)
-                        shared.put(item)
+                    if deal_batch > 1:
+                        for wave in iter_segments(segment, deal_batch):
+                            batch = list(wave)
+                            fold(batch)
+                            shared.put_many(batch)
+                    else:
+                        for item in segment:
+                            on_item(item)
+                            shared.put(item)
+                    return
+                if deal_batch > 1:
+                    for wave in iter_segments(segment, deal_batch):
+                        batch = list(wave)
+                        fold(batch)
+                        n = len(batch)
+                        for bid in order:
+                            deficits[bid] += weights[bid] * n
+                        pick = max(order, key=lambda bid: deficits[bid])
+                        deficits[pick] -= float(n)
+                        queues[pick].put_many(batch)
                     return
                 for item in segment:
                     on_item(item)
@@ -819,6 +896,7 @@ class UnifiedDataMover:
         chunk: int,
         damping: float,
         digest: _StreamDigest,
+        batch_items: Optional[int] = None,
     ) -> tuple[int, int, list[StageReport], int, TransferPlan]:
         """Zero-drain parallel path: queues, branch stages, and the
         dispatcher live for the whole transfer.  Revision checkpoints
@@ -828,17 +906,18 @@ class UnifiedDataMover:
         queues resize in place."""
         active = plan
         queues, pbp = self._branch_pipelines(active, transforms, capacity,
-                                             workers, route)
+                                             workers, route, batch_items)
         weights = self._normalized_weights(active.branches)
         order = [b.branch_id for b in active.branches]
         # ordered plans are the latency-sensitive streams (decode token
         # fan-out): deliver per item instead of holding a batch
         mirror_batch = 1 if plan.ordered else MIRROR_BATCH
+        deal_batch = self._deal_batch(active, batch_items)
         source_err: list[str] = []
         dispatch = threading.Thread(
             target=self._dispatch(iter(source), queues, weights, order,
-                                  mode, digest.add, route, mirror_batch,
-                                  source_err),
+                                  mode, digest, route, mirror_batch,
+                                  source_err, deal_batch),
             name="branch-dispatch", daemon=True)
         pbp.start()
         dispatch.start()
@@ -906,7 +985,9 @@ class UnifiedDataMover:
                             hop = b.hop_for(i, st.name)
                             st.resize(capacity=capacity or hop.capacity,
                                       workers=workers or hop.workers,
-                                      window_bytes=self._hop_window(hop))
+                                      window_bytes=self._hop_window(hop),
+                                      batch_items=self._hop_batch(
+                                          hop, batch_items))
                     if route == "steal":
                         agg = sum(b.hops[0].capacity
                                   for b in active.branches)
@@ -934,6 +1015,7 @@ class UnifiedDataMover:
         chunk: int,
         damping: float,
         digest: _StreamDigest,
+        batch_items: Optional[int] = None,
     ) -> tuple[int, int, list[StageReport], int, TransferPlan]:
         """Historical drain-per-segment parallel path (explicit
         ``drain_per_segment=True``): full teardown + rebuild at every
@@ -954,15 +1036,17 @@ class UnifiedDataMover:
                     replans += 1
                 active = revised
             queues, pbp = self._branch_pipelines(active, transforms,
-                                                 capacity, workers, route)
+                                                 capacity, workers, route,
+                                                 batch_items)
             weights = self._normalized_weights(active.branches)
             order = [b.branch_id for b in active.branches]
             source_err: list[str] = []
             dispatch = threading.Thread(
                 target=self._dispatch(segment, queues, weights, order,
-                                      mode, digest.add, route,
+                                      mode, digest, route,
                                       1 if plan.ordered else MIRROR_BATCH,
-                                      source_err),
+                                      source_err,
+                                      self._deal_batch(active, batch_items)),
                 name="branch-dispatch", daemon=True)
             t_seg0 = self._clock()
             pbp.start()
@@ -1014,6 +1098,7 @@ class UnifiedDataMover:
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
         drainer_pool: bool = False,
+        batch_items: Optional[int] = None,
     ) -> TransferReport:
         """Move a stream down every branch of a multipath plan at once.
 
@@ -1054,7 +1139,10 @@ class UnifiedDataMover:
         one blocking client write no longer serializes its siblings at
         the merge buffer; a single shared ``sink`` callable must then be
         thread-safe.  Items/bytes in the returned report count
-        *deliveries* (mirror mode moves each item once per branch)."""
+        *deliveries* (mirror mode moves each item once per branch).
+
+        ``batch_items`` overrides the per-hop slab size on every branch
+        (1 forces the per-item path; None defers to the plan)."""
         if mode not in ("split", "mirror"):
             raise ValueError(f"unknown parallel mode {mode!r}")
         if route not in ("deal", "steal"):
@@ -1066,7 +1154,7 @@ class UnifiedDataMover:
         if plan is None or not plan.branches:
             raise ValueError("parallel_transfer needs a branch-aware plan")
         do_sum = self.config.checksum if checksum is None else checksum
-        digest = _StreamDigest(do_sum)
+        digest = _StreamDigest(do_sum, placement=plan.checksum_placement)
 
         def sink_for(bid: str) -> Callable[[Any], None]:
             if isinstance(sink, Mapping):
@@ -1094,12 +1182,14 @@ class UnifiedDataMover:
                 items, nbytes, merged, replans, active = \
                     self._parallel_segmented(
                         source, deliver, plan, mode, route, transforms,
-                        capacity, workers, chunk, replan_damping, digest)
+                        capacity, workers, chunk, replan_damping, digest,
+                        batch_items)
             else:
                 items, nbytes, merged, replans, active = \
                     self._parallel_live(
                         source, deliver, plan, mode, route, transforms,
-                        capacity, workers, chunk, replan_damping, digest)
+                        capacity, workers, chunk, replan_damping, digest,
+                        batch_items)
         except BaseException:
             # the primary failure wins: drain the pool for cleanup but do
             # not let a retired client's error replace the real traceback
@@ -1167,19 +1257,3 @@ class UnifiedDataMover:
             checksum=digest.hexdigest(),
             planned_bytes_per_s=planned,
         ))
-
-
-def _as_bytes(item: Any) -> bytes:
-    """Stable byte view of an item for integrity hashing."""
-    if isinstance(item, (bytes, bytearray)):
-        return bytes(item)
-    if isinstance(item, memoryview):
-        return item.tobytes()
-    tobytes = getattr(item, "tobytes", None)
-    if tobytes is not None:
-        return tobytes()
-    if isinstance(item, (tuple, list)):
-        return b"".join(_as_bytes(e) for e in item)
-    if isinstance(item, dict):
-        return b"".join(_as_bytes(item[k]) for k in sorted(item))
-    return repr(item).encode()

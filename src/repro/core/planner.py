@@ -117,6 +117,23 @@ MAX_CAPACITY = 64
 #: cross-traffic jitter make a window cut exactly at BDP oscillate below
 #: line rate, so the plan leaves this much slack
 WINDOW_HEADROOM = 1.25
+#: slab sizing target for ``batch_items="auto"``: enough items per slab
+#: that the per-slab lock/admission round-trip amortizes to noise, small
+#: enough that a slab never monopolizes a hop's burst buffer
+SLAB_TARGET_BYTES = 1 << 20
+#: default modeled host digest throughput (SHA-256 on one core, bytes/s)
+#: — the §3.4 integrity budget when the checksum runs on the host CPU.
+#: Callers with a measured rate pass ``host_digest_bytes_per_s``.
+HOST_DIGEST_BYTES_PER_S = 1.6e9
+#: default modeled accelerator digest throughput: a batched Pallas digest
+#: kernel streams at HBM-class bandwidth, far above any host path — the
+#: placement that takes integrity off the critical path entirely
+ACCEL_DIGEST_BYTES_PER_S = 64e9
+#: a busy checksum hop is **host-compute-bound** only when its delivered
+#: rate sits at the digest ceiling — within this factor of the modeled
+#: ``digest_bytes_per_s`` (the §3.4 signature: throughput pinned by the
+#: integrity budget, not by any tier or by transport credit)
+DIGEST_PIN_SLACK = 1.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +157,15 @@ class HopPlan:
     #: ``"src->dst"`` of the link whose BDP governs the window (the name
     #: a window-bound verdict points at); "" on queue-clocked hops
     window_link: str = ""
+    #: slab size: items the hop's workers pull/admit/stage per loop
+    #: (``Stage.batch_items``).  1 = the per-item path.
+    batch_items: int = 1
+    #: modeled digest service rate charged to this hop (bytes/s); > 0
+    #: only on the hop carrying the stream checksum.  Host placement
+    #: charges the host SHA rate (and can pin the hop — the
+    #: host-compute-bound verdict); accelerator placement charges the
+    #: Pallas kernel's rate, far above line rate.
+    digest_bytes_per_s: float = 0.0
 
 
 def _hop_lookup(hops: Sequence[HopPlan], index: int,
@@ -195,6 +221,16 @@ class TransferPlan:
     #: host limit the windowed hops were clamped under (None = BDP-sized).
     #: A window-bound verdict's remedy is raising this (see :func:`replan`)
     max_window_bytes: Optional[float] = None
+    #: where the stream digest runs: ``"host"`` (SHA on the staging CPU,
+    #: charged at ``host_digest_bytes_per_s``) or ``"accel"`` (batched
+    #: Pallas digest, charged at ``accel_digest_bytes_per_s``).  A
+    #: host-compute-bound verdict's remedy is flipping this to "accel".
+    checksum_placement: str = "host"
+    #: the ``batch_items`` policy the plan was derived under (None, int,
+    #: or "auto") — carried so :func:`replan` re-derives with it
+    batch_policy: Optional[object] = None
+    host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S
+    accel_digest_bytes_per_s: float = ACCEL_DIGEST_BYTES_PER_S
 
     @property
     def stages(self) -> list[str]:
@@ -224,12 +260,17 @@ class TransferPlan:
     def _fmt_hop(h: HopPlan) -> str:
         win = (f" win={h.window_bytes / 1e6:.1f}MB"
                f" rtt={h.rtt_s * 1e3:.0f}ms" if h.window_bytes > 0 else "")
-        return (f"{h.name}[cap={h.capacity} w={h.workers}{win} "
+        # slab size surfaces only when the hop is actually batched, so a
+        # per-item plan's describe() stays byte-identical to the old form
+        batch = f" b={h.batch_items}" if h.batch_items > 1 else ""
+        return (f"{h.name}[cap={h.capacity} w={h.workers}{batch}{win} "
                 f"{h.up_tier}->{h.down_tier}]")
 
     def describe(self) -> str:
         """Operator surface: one line for a linear plan (unchanged from
-        the pre-DAG format; windowed hops add their ``win``/``rtt``), a
+        the pre-DAG format; windowed hops add their ``win``/``rtt``,
+        batched hops their slab size ``b=``, and a carried checksum its
+        placement — ``checksum@1:host`` vs ``checksum@1:accel``), a
         per-branch topology summary otherwise."""
         if not self.is_multipath:
             diag = ""
@@ -238,12 +279,16 @@ class TransferPlan:
                     f"{name}={verdict}"
                     for name, verdict in sorted(self.diagnosis.items())) + "]"
             hops = ", ".join(self._fmt_hop(h) for h in self.hops)
+            place = (f":{self.checksum_placement}"
+                     if self.checksum_index is not None else "")
             return (f"TransferPlan({hops}; planned="
                     f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
-                    f"checksum@{self.checksum_index}{diag})")
+                    f"checksum@{self.checksum_index}{place}{diag})")
+        split = (f"split:{self.checksum_placement}"
+                 if self.checksum_at_split else "None")
         lines = [f"TransferPlan({len(self.branches)} branches, planned="
                  f"{self.planned_bytes_per_s / 1e6:.1f} MB/s aggregate, "
-                 f"checksum@{'split' if self.checksum_at_split else 'None'}"]
+                 f"checksum@{split}"]
         shown = set()
         for b in self.branches:
             hops = ", ".join(self._fmt_hop(h) for h in b.hops)
@@ -271,6 +316,7 @@ class HopRevision:
     capacity: int
     workers: int
     window_bytes: float = 0.0
+    batch_items: int = 1
 
 
 @dataclasses.dataclass
@@ -308,14 +354,15 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
 
     def changed_hop(h: HopPlan, prev: HopPlan | None) -> bool:
         return prev is None or (
-            (h.capacity, h.workers, h.window_bytes)
-            != (prev.capacity, prev.workers, prev.window_bytes))
+            (h.capacity, h.workers, h.window_bytes, h.batch_items)
+            != (prev.capacity, prev.workers, prev.window_bytes,
+                prev.batch_items))
 
     old_hops = {h.name: h for h in old.hops}
     for h in new.hops:
         if changed_hop(h, old_hops.get(h.name)):
             delta.hops[h.name] = HopRevision(h.name, h.capacity, h.workers,
-                                             h.window_bytes)
+                                             h.window_bytes, h.batch_items)
     old_branches = {b.branch_id: b for b in old.branches}
     for b in new.branches:
         prev = old_branches.get(b.branch_id)
@@ -326,7 +373,7 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
         for h in b.hops:
             if changed_hop(h, prev_hops.get(h.name)):
                 changed[h.name] = HopRevision(h.name, h.capacity, h.workers,
-                                              h.window_bytes)
+                                              h.window_bytes, h.batch_items)
         if changed:
             delta.branch_hops[b.branch_id] = changed
     return delta
@@ -376,13 +423,39 @@ def _raw_line_rate(basin: DrainageBasin) -> float:
     return min(rates)
 
 
-def _worker_rate(up: Tier, down: Tier, item_bytes: float) -> float:
+def _worker_rate(up: Tier, down: Tier, item_bytes: float,
+                 batch_items: int = 1) -> float:
     """Sustained rate of ONE staging worker doing pull -> transform ->
     push: upstream service time (with latency + jitter) plus downstream
-    delivery, serialized within the worker."""
-    t = (item_bytes / up.bandwidth_bytes_per_s + up.latency_s + up.jitter_s
-         + item_bytes / down.bandwidth_bytes_per_s + down.latency_s)
+    delivery, serialized within the worker.
+
+    A batched worker pays the per-operation latency/jitter once per
+    *slab* of ``batch_items`` — the analytic form of the zero-copy data
+    plane's amortization (one lock round-trip, one admission check per
+    slab); the per-byte transmit cost is unchanged.  ``batch_items=1``
+    is the historical per-item figure exactly."""
+    b = max(1, int(batch_items))
+    t = (item_bytes / up.bandwidth_bytes_per_s
+         + (up.latency_s + up.jitter_s) / b
+         + item_bytes / down.bandwidth_bytes_per_s + down.latency_s / b)
     return item_bytes / t
+
+
+def _resolve_batch(batch_items: Optional[object],
+                   item_bytes: float) -> int:
+    """The slab-size policy -> a concrete per-hop starting point.
+
+    ``None``/1 keeps the per-item path; ``"auto"`` targets
+    :data:`SLAB_TARGET_BYTES` per slab (further clamped per hop by window
+    and capacity); an explicit int is taken as given (same clamps)."""
+    if batch_items is None:
+        return 1
+    if batch_items == "auto":
+        return max(1, int(SLAB_TARGET_BYTES // item_bytes))
+    b = int(batch_items)
+    if b < 1:
+        raise ValueError(f"batch_items must be >= 1, got {batch_items!r}")
+    return b
 
 
 def _plan_path(
@@ -394,11 +467,15 @@ def _plan_path(
     max_capacity: int,
     target: float | None = None,
     max_window_bytes: float | None = None,
+    batch_items: int = 1,
 ) -> tuple[list[HopPlan], list[float], float]:
     """Per-hop parameters for one *linear* path.  ``target`` overrides the
     rate the hops are sized against (a branch's allocated share); default
     is the path's own raw line rate.  ``max_window_bytes`` caps every
-    windowed hop's in-flight window (the host buffer limit)."""
+    windowed hop's in-flight window (the host buffer limit).
+    ``batch_items`` is the resolved slab-size starting point (see
+    :func:`_resolve_batch`); each hop clamps it to its own window and
+    burst capacity."""
     tiers = basin.tiers
     n = len(stages)
     if target is None:
@@ -409,24 +486,9 @@ def _plan_path(
     for j, name in enumerate(stages):
         lo, hi = _segment(tiers, n, j)
         up, down = tiers[lo], tiers[hi]
-        rate_1 = _worker_rate(up, down, item_bytes)
-        if ordered:
-            workers = 1
-        else:
-            workers = max(1, min(max_workers, math.ceil(target / rate_1)))
-        # Little's law over the stochastic window, double-buffered
-        window_s = up.jitter_s + down.jitter_s + _segment_rtt(basin, lo, hi)
-        need_items = math.ceil(target * window_s / item_bytes)
-        capacity = max(2, workers + 1, 2 * need_items)
-        capacity = min(capacity, max_capacity)
         # the segment's burst capacity is a hard ceiling: never plan more
         # staged items than the smallest tier on the hop can actually hold
         cap_bytes = min(t.capacity_bytes for t in tiers[lo:hi + 1])
-        if math.isfinite(cap_bytes):
-            capacity = min(capacity, max(1, int(cap_bytes // item_bytes)))
-            # a buffer shallower than the pool serializes the extra
-            # workers; shrink the pool so the promised rate stays honest
-            workers = min(workers, max(1, capacity - 1))
         # RTT-governed hop: the in-flight window is sized from the link's
         # BDP with jitter headroom (§3.1/§3.2), clamped to the segment's
         # burst capacity and the host's window limit.  The two clamps
@@ -447,13 +509,43 @@ def _plan_path(
                 hop_cap = min(hop_cap, win / rtt)
             if max_window_bytes is not None:
                 win = min(win, float(max_window_bytes))
+        # slab size: ordered transfers pin to per-item (a slab reorders
+        # nothing, but per-item keeps the stream's pacing exact); a
+        # windowed hop never slabs more than one window's worth, or a
+        # single admission could park the whole pool on the ACK clock
+        b = 1 if ordered else batch_items
+        if b > 1 and win > 0:
+            b = max(1, min(b, int(win // item_bytes)))
+        rate_1 = _worker_rate(up, down, item_bytes, batch_items=b)
+        if ordered:
+            workers = 1
+        else:
+            workers = max(1, min(max_workers, math.ceil(target / rate_1)))
+        # Little's law over the stochastic window, double-buffered
+        window_s = up.jitter_s + down.jitter_s + _segment_rtt(basin, lo, hi)
+        need_items = math.ceil(target * window_s / item_bytes)
+        capacity = max(2, workers + 1, 2 * need_items)
+        if b > 1:
+            # double-buffered slabs: one slab staged while the next fills
+            capacity = max(capacity, 2 * b)
+        capacity = min(capacity, max_capacity)
+        if math.isfinite(cap_bytes):
+            capacity = min(capacity, max(1, int(cap_bytes // item_bytes)))
+            # a buffer shallower than the pool serializes the extra
+            # workers; shrink the pool so the promised rate stays honest
+            workers = min(workers, max(1, capacity - 1))
+        if b > 1:
+            # whatever clamped capacity also clamps the slab (a slab must
+            # fit the buffer twice over, or put_many serializes in waves)
+            b = max(1, min(b, capacity // 2))
         headroom.append(workers * rate_1)
         hop_rate = min(workers * rate_1, hop_cap)
         hops.append(HopPlan(name=name, capacity=capacity, workers=workers,
                             up_tier=up.name, down_tier=down.name,
                             rate_bytes_per_s=hop_rate,
                             window_bytes=win, rtt_s=rtt,
-                            window_link=win_link if win > 0 else ""))
+                            window_link=win_link if win > 0 else "",
+                            batch_items=b))
 
     planned = min(min(h.rate_bytes_per_s for h in hops),
                   basin.achievable_throughput())
@@ -482,6 +574,10 @@ def plan_transfer(
     max_workers: int = MAX_WORKERS,
     max_capacity: int = MAX_CAPACITY,
     max_window_bytes: Optional[float] = None,
+    batch_items: Optional[object] = None,
+    checksum_placement: str = "host",
+    host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S,
+    accel_digest_bytes_per_s: float = ACCEL_DIGEST_BYTES_PER_S,
 ) -> TransferPlan:
     """Derive per-hop staging parameters from the basin model.
 
@@ -504,20 +600,44 @@ def plan_transfer(
     :class:`BranchPlan` per root->sink path, each sized against its
     conservation-allocated rate share; ``planned_bytes_per_s`` is the
     aggregate and ``weight`` the traffic share per branch.
+
+    ``batch_items`` selects the zero-copy slab path: ``None`` (default)
+    keeps every hop per-item, ``"auto"`` sizes slabs toward
+    :data:`SLAB_TARGET_BYTES`, an int pins the slab.  Ordered transfers
+    stay per-item regardless.  ``checksum_placement`` charges the stream
+    digest (§3.4's integrity budget) to the right compute resource:
+    ``"host"`` models the staging CPU's hash rate
+    (``host_digest_bytes_per_s``) on the checksum hop — which can pin it,
+    the **host-compute-bound** misconfiguration of "Demystifying the
+    Performance of Data Transfers" — while ``"accel"`` charges the
+    batched Pallas digest kernel's rate (``accel_digest_bytes_per_s``),
+    taking integrity off the host's critical path.
     """
     if item_bytes <= 0:
         raise ValueError("item_bytes must be > 0")
     if not stages:
         raise ValueError("need at least one stage name")
+    if checksum_placement not in ("host", "accel"):
+        raise ValueError(
+            f"checksum_placement must be 'host' or 'accel', "
+            f"got {checksum_placement!r}")
+    batch = _resolve_batch(batch_items, item_bytes)
+    digest_rate = (host_digest_bytes_per_s if checksum_placement == "host"
+                   else accel_digest_bytes_per_s)
 
     if basin.is_linear:
         hops, headroom, planned = _plan_path(
             basin, item_bytes, stages, ordered, max_workers, max_capacity,
-            max_window_bytes=max_window_bytes)
+            max_window_bytes=max_window_bytes, batch_items=batch)
         checksum_index = None
         if checksum:
             # integrity rides the hop with the most headroom over the plan
             checksum_index = max(range(len(hops)), key=lambda i: headroom[i])
+            # ... and that hop is charged the digest service rate of the
+            # placement, so replan can tell "the hash pinned the hop"
+            # (host-compute-bound) apart from a slow tier
+            hops[checksum_index] = dataclasses.replace(
+                hops[checksum_index], digest_bytes_per_s=digest_rate)
         path = tuple(t.name for t in basin.tiers)
         branch = BranchPlan(branch_id=path[-1], path=path, hops=hops,
                             rate_bytes_per_s=planned, weight=1.0,
@@ -526,7 +646,11 @@ def plan_transfer(
                             planned_bytes_per_s=planned,
                             checksum_index=checksum_index, basin=basin,
                             ordered=ordered, branches=[branch],
-                            max_window_bytes=max_window_bytes)
+                            max_window_bytes=max_window_bytes,
+                            checksum_placement=checksum_placement,
+                            batch_policy=batch_items,
+                            host_digest_bytes_per_s=host_digest_bytes_per_s,
+                            accel_digest_bytes_per_s=accel_digest_bytes_per_s)
 
     # -- branching basin: one plan per root->sink path -----------------------
     paths = basin.paths()
@@ -539,7 +663,8 @@ def plan_transfer(
         sub = basin.path_basin(path)
         hops, _, planned = _plan_path(
             sub, item_bytes, stages, ordered, max_workers, max_capacity,
-            target=rates[path], max_window_bytes=max_window_bytes)
+            target=rates[path], max_window_bytes=max_window_bytes,
+            batch_items=batch)
         branches.append(BranchPlan(
             branch_id=bid, path=path, hops=hops,
             rate_bytes_per_s=planned, weight=0.0,
@@ -554,7 +679,11 @@ def plan_transfer(
                         checksum_index=None, basin=basin,
                         ordered=ordered, branches=branches,
                         checksum_at_split=bool(checksum),
-                        max_window_bytes=max_window_bytes)
+                        max_window_bytes=max_window_bytes,
+                        checksum_placement=checksum_placement,
+                        batch_policy=batch_items,
+                        host_digest_bytes_per_s=host_digest_bytes_per_s,
+                        accel_digest_bytes_per_s=accel_digest_bytes_per_s)
 
 
 # ---------------------------------------------------------------------------
@@ -568,6 +697,13 @@ STALL_THRESHOLD = 0.1
 #: minimum service-time samples before a regime diagnosis is attempted
 #: (fewer and the dispersion statistic is noise)
 MIN_DIAGNOSIS_SAMPLES = 8
+
+#: intake-ratio severity required for the sample-free ``culprit-slow``
+#: verdict: the flagged branch must be moving at no more than half the
+#: fastest sibling's pace (or backpressuring the split node at least
+#: half the window).  Milder flags still shift weight and estimates, but
+#: persistent diagnosis text demands more than scheduling-phase noise.
+CULPRIT_SEVERITY = 0.5
 
 #: service-sample dispersion — (p90 - p10) / median — above which a
 #: stalled side reads as latency/jitter-bound; at or below it the side is
@@ -635,6 +771,11 @@ class _Evidence:
     #: the hop was pinned at ~window/RTT with window-stall evidence — a
     #: transport-credit limitation, not a tier-estimate error
     window: bool = False
+    #: the checksum hop was pinned at ~its modeled digest rate with no
+    #: stall on any side — the integrity budget (§3.4) is the limiter,
+    #: not any tier; the remedy is offloading the digest, not touching
+    #: estimates or workers
+    compute: bool = False
 
 
 def _collect_evidence(plan: TransferPlan,
@@ -688,6 +829,29 @@ def _collect_evidence(plan: TransferPlan,
                                      candidate_tier=hop.up_tier,
                                      window=True))
                 continue
+            # host-compute-bound check, second (also first-hand, also in
+            # both regimes): the checksum hop, stalled on NO side yet
+            # delivering at its modeled digest ceiling, is pinned by the
+            # integrity budget — but only when the model itself puts that
+            # ceiling below the hop's promise (a host-placed digest on a
+            # fast path; an accelerator-placed digest's ceiling sits far
+            # above line rate and can never bind)
+            r_up = rep.stall_up_s / worker_time if worker_time > 0 else 0.0
+            r_down = (rep.stall_down_s / worker_time
+                      if worker_time > 0 else 0.0)
+            r_win = (rep.stall_window_s / worker_time
+                     if worker_time > 0 else 0.0)
+            if (hop.digest_bytes_per_s > 0 and underdelivered
+                    and hop.digest_bytes_per_s
+                    < hop.rate_bytes_per_s * (1.0 - STALL_THRESHOLD)
+                    and max(r_up, r_down, r_win) < STALL_THRESHOLD
+                    and active_rate
+                    <= DIGEST_PIN_SLACK * hop.digest_bytes_per_s):
+                out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                     up_limited=True, busy=True,
+                                     candidate_tier=hop.up_tier,
+                                     compute=True))
+                continue
             if has_intake and multipath:
                 if branch.branch_id not in culprits or not underdelivered:
                     continue
@@ -696,8 +860,6 @@ def _collect_evidence(plan: TransferPlan,
                                      candidate_tier=hop.up_tier,
                                      pipe_shared=True))
                 continue
-            r_up = rep.stall_up_s / worker_time
-            r_down = rep.stall_down_s / worker_time
             busy = False
             if max(r_up, r_down) >= STALL_THRESHOLD:
                 # the side we mostly waited on is the side that limited us
@@ -833,6 +995,14 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     adding workers: a worker pool sharing an exhausted window all parks
     on the same ACK clock (§3.2).
 
+    A fourth verdict, **host-compute-bound**, covers the §3.4 integrity
+    budget: a checksum hop stalled on no side yet pinned at its modeled
+    host digest rate is limited by the hash, not by any tier.  Estimates
+    and workers stand; the rebuilt plan flips ``checksum_placement`` to
+    ``"accel"`` so the digest rides the Pallas kernel instead of the
+    staging CPU (applies from the next transfer / rebuilt pipeline — a
+    stream's digest backend never switches mid-stream).
+
     On a branching plan, reports tagged ``"<branch>/<stage>"`` attribute
     per branch (private-tier + corroboration rules, module docstring),
     and the rebuilt plan re-allocates branch rates from the revised
@@ -869,16 +1039,29 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     # feed it, which the rebuilt plan re-derives), NOT adding workers:
     # N workers sharing an exhausted window all park on the same ACK clock.
     raise_window = False
+    # -- host-compute pre-pass, the same shape: a checksum hop pinned at
+    # its modeled digest rate indicts the integrity budget's *placement*,
+    # not any tier estimate.  The remedy is offloading the digest to the
+    # accelerator (the rebuilt plan flips checksum_placement, lifting the
+    # hop's digest ceiling to the Pallas kernel's rate); estimates stand
+    # and workers do not rise — N workers sharing one host hash pipeline
+    # all queue on the same core.
+    offload_digest = False
     for ev in list(evidence):
-        if not ev.window:
-            continue
-        evidence.remove(ev)
-        raise_window = True
-        key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
-               else ev.hop.name)
-        link = (ev.hop.window_link
-                or f"{ev.hop.up_tier}->{ev.hop.down_tier}")
-        diagnosis[key] = f"window-bound({link})"
+        if ev.window:
+            evidence.remove(ev)
+            raise_window = True
+            key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
+                   else ev.hop.name)
+            link = (ev.hop.window_link
+                    or f"{ev.hop.up_tier}->{ev.hop.down_tier}")
+            diagnosis[key] = f"window-bound({link})"
+        elif ev.compute:
+            evidence.remove(ev)
+            offload_digest = True
+            key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
+                   else ev.hop.name)
+            diagnosis[key] = f"host-compute-bound({ev.hop.up_tier}:digest)"
     resolved = []
     for ev in evidence:
         tier_name = _attributed_tier(ev, evidence, plan, culprits,
@@ -948,6 +1131,22 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
             if regime == "bandwidth":
                 for k in diag_keys:
                     diagnosis[k] = f"bandwidth-bound({tier_name})"
+            elif any(
+                e.pipe_shared
+                and (intake_ratio or {}).get(e.branch.branch_id, 0.0)
+                >= CULPRIT_SEVERITY
+                for e in evs
+            ):
+                # sample-free culprit verdict: a steal/deal-route culprit
+                # that moved fewer than MIN_DIAGNOSIS_SAMPLES items in the
+                # revision window still had its estimate pulled down and
+                # its weight shifted — describe() must show WHY the branch
+                # lost traffic, even before the reservoir fills.  Gated on
+                # a SEVERE intake signal: verdicts persist across replans,
+                # so a mild phase-noise flag on a healthy fan-out must not
+                # permanently taint the plan's diagnosis surface.
+                for k in diag_keys:
+                    diagnosis[k] = f"culprit-slow({tier_name})"
 
     new_tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=est[t.name],
                                      latency_s=lat_est[t.name],
@@ -963,6 +1162,14 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
         # a window-bound verdict lifts the host clamp: the rebuilt plan's
         # windows go back to BDP-with-headroom (and the live-swap path
         # grows the running windows without a drain)
-        max_window_bytes=None if raise_window else plan.max_window_bytes)
+        max_window_bytes=None if raise_window else plan.max_window_bytes,
+        batch_items=plan.batch_policy,
+        # a host-compute-bound verdict's remedy: the rebuilt plan carries
+        # the digest on the accelerator, so the checksum hop's ceiling
+        # lifts from the host hash rate to the Pallas kernel's
+        checksum_placement="accel" if offload_digest
+        else plan.checksum_placement,
+        host_digest_bytes_per_s=plan.host_digest_bytes_per_s,
+        accel_digest_bytes_per_s=plan.accel_digest_bytes_per_s)
     revised.diagnosis = diagnosis
     return revised

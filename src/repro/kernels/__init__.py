@@ -9,4 +9,5 @@ Kernels:
 * decode_attention — flash-decode vs long (possibly ring) KV caches
 * ssd_scan — full chunked Mamba2/SSD with in-VMEM recurrent state
 * quantize — blockwise int8 for the compressed gradient collective
+* digest — blockwise lattice digest for accelerator-placed integrity
 """

@@ -1,0 +1,73 @@
+"""Blockwise streaming digest — Pallas kernel.
+
+The compute half of accelerator-placed integrity
+(:mod:`repro.core.integrity`): the paper budgets checksum/encryption
+*inside* the staged data path (§3.4), and "Demystifying the Performance
+of Data Transfers" shows the hash pinned to the wrong resource (the host
+CPU) dominating end-to-end rates.  This kernel moves the digest onto the
+accelerator: each grid step reduces a (tile, block) panel of uint32
+words to one 32-bit lattice digest per block row, streaming at memory
+bandwidth instead of host hash rate.
+
+The digest is a weighted word sum with position-dependent odd weights
+(multiplicative lattice hash): ``d = sum_j x_j * (2j+1) * GOLDEN mod
+2^32``.  Odd weights are invertible mod 2^32, so swapping or zeroing a
+word changes the digest; the mod-2^32 wraparound is the natural uint32
+arithmetic on both the VPU and the jnp oracle, making the kernel's
+output bit-identical to :func:`digest_ref` (asserted in
+``benchmarks/kernel_bench.py``, interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: 2**32 / golden ratio, the classic multiplicative-hash constant; odd,
+#: so every derived weight (2j+1)*GOLDEN is odd and invertible mod 2^32
+GOLDEN = 0x9E3779B1
+
+
+def _weights(shape: tuple[int, ...]) -> jax.Array:
+    j = jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+    return (jnp.uint32(2) * j + jnp.uint32(1)) * jnp.uint32(GOLDEN)
+
+
+def _digest_kernel(x_ref, d_ref):
+    x = x_ref[...]                                   # (tile, block) uint32
+    d_ref[...] = jnp.sum(x * _weights(x.shape), axis=1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def block_digest(panels: jax.Array, *, tile: int = 8,
+                 interpret: bool = False) -> jax.Array:
+    """uint32 panels (nb, block) -> one uint32 lattice digest per block.
+
+    ``nb`` must be a multiple of ``tile`` (callers zero-pad; a zero block
+    digests to 0, which the item-level fold discards by slicing to the
+    real block count)."""
+    nb, block = panels.shape
+    return pl.pallas_call(
+        _digest_kernel,
+        grid=(nb // tile,),
+        in_specs=[pl.BlockSpec((tile, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.uint32),
+        interpret=interpret,
+    )(panels)
+
+
+@jax.jit
+def digest_ref(panels: jax.Array) -> jax.Array:
+    """jnp oracle for :func:`block_digest` — same lattice hash, pure XLA.
+
+    On CPU this compiled form IS the production accelerator-digest path
+    (:class:`repro.core.integrity.StreamDigest` with
+    ``placement="accel"``): it stands in for the compiled Pallas kernel
+    at real speed, while the interpret-mode kernel is gated on
+    bit-exact parity against it."""
+    return jnp.sum(panels * _weights(panels.shape), axis=1,
+                   dtype=jnp.uint32)

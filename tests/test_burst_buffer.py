@@ -113,3 +113,47 @@ def test_property_occupancy_bounded(capacity):
         assert len(buf) <= capacity
     t.join()
     assert buf.stats.max_occupancy <= capacity
+
+
+def test_get_many_stats_parity_under_concurrent_batched_producers():
+    """S2 regression: batched consumers against batched producers must
+    keep the per-item stats ledger exact.  Several producers push slabs
+    larger than the buffer (every ``put_many`` blocks mid-batch, waves
+    of admissions interleaving across producers) while a consumer drains
+    via ``get_many``; afterwards puts == gets == items moved, occupancy
+    never exceeded capacity, and no item was dropped or duplicated."""
+    CAP, PRODUCERS, SLABS, SLAB = 3, 4, 8, 7   # SLAB > CAP: mid-batch waves
+    buf = BurstBuffer(capacity=CAP)
+    total = PRODUCERS * SLABS * SLAB
+
+    def produce(pid):
+        for s in range(SLABS):
+            buf.put_many([(pid, s * SLAB + i) for i in range(SLAB)])
+
+    threads = [threading.Thread(target=produce, args=(pid,))
+               for pid in range(PRODUCERS)]
+    for t in threads:
+        t.start()
+
+    got = []
+    closer = threading.Thread(
+        target=lambda: ([t.join() for t in threads], buf.close()))
+    closer.start()
+    while True:
+        try:
+            got.extend(buf.get_many(5))
+        except BufferClosed:
+            break
+    closer.join()
+
+    assert len(got) == total
+    assert buf.stats.puts == buf.stats.gets == total
+    assert buf.stats.max_occupancy <= CAP
+    # producers blocked mid-batch (slabs exceed capacity), and that
+    # blocking landed in the producer ledger, not the consumer's
+    assert buf.stats.producer_stall_s > 0.0
+    # per-producer FIFO survives interleaved wave admission
+    for pid in range(PRODUCERS):
+        seq = [i for p, i in got if p == pid]
+        assert seq == sorted(seq)
+        assert len(seq) == SLABS * SLAB

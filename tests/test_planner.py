@@ -211,8 +211,8 @@ def test_mover_stages_take_per_hop_params():
 
     orig = mover._build_pipeline
 
-    def spy(source, transforms, params, plan=None):
-        pipe = orig(source, transforms, params, plan)
+    def spy(source, transforms, params, plan=None, batch_items=None):
+        pipe = orig(source, transforms, params, plan, batch_items)
         for st in pipe.stages:
             pipeline_stages[st.name] = (st.buffer.capacity, st.workers)
         return pipe

@@ -53,19 +53,31 @@ def replay(spec: dict):
 
     ``max_window_bytes`` records the host window clamp the plan ran
     under (the §3.2 misconfiguration a window-bound fixture captures);
-    reports may carry ``stall_window_s``."""
+    reports may carry ``stall_window_s``.  ``checksum`` /
+    ``checksum_placement`` / ``host_digest_gbps`` record the integrity
+    budget the plan carried (a host-compute-bound fixture captures a
+    digest placed on a too-slow host)."""
     basin = build_basin(spec)
+    kwargs = {}
+    if spec.get("checksum"):
+        kwargs["checksum"] = True
+        kwargs["checksum_placement"] = spec.get("checksum_placement",
+                                                "host")
+        if "host_digest_gbps" in spec:
+            kwargs["host_digest_bytes_per_s"] = (
+                spec["host_digest_gbps"] * GBPS)
     plan = plan_transfer(basin, spec["item_bytes"],
                          stages=tuple(spec["stages"]),
                          ordered=spec.get("ordered", False),
-                         max_window_bytes=spec.get("max_window_bytes"))
+                         max_window_bytes=spec.get("max_window_bytes"),
+                         **kwargs)
     reports = [StageReport(**r) for r in spec["reports"]]
     return replan(plan, reports, damping=spec.get("damping", 1.0),
                   intake_ratio=spec.get("intake_ratio"))
 
 
 def test_corpus_is_present():
-    assert len(FIXTURES) >= 8, (
+    assert len(FIXTURES) >= 9, (
         f"expected the recorded-report corpus under {DATA_DIR}")
 
 
@@ -87,6 +99,11 @@ def test_replayed_verdict_is_stable(path):
             assert ratio < 1.0 - 1e-9
         elif planned == "unchanged":
             assert ratio == pytest.approx(1.0)
+    placement = spec.get("expected_checksum_placement")
+    if placement is not None:
+        # the host-compute-bound remedy: the revised plan moves the
+        # digest (and nothing else — estimates and workers stand)
+        assert revised.checksum_placement == placement
     window = spec.get("expected_window_relative")
     if window is not None:
         clamped = plan_transfer(build_basin(spec), spec["item_bytes"],
