@@ -49,7 +49,8 @@ SUITES = {
 #: per-push CI loop (no wall-clock sleeps, no model compiles) — plus the
 #: staging_throughput wall-clock gate, the zero-copy plane's acceptance
 #: claim (a few seconds of pure host work, no compiles, no sleeps)
-QUICK = ["table5", "fig2", "live_swap", "multipath", "staging_throughput"]
+QUICK = ["table5", "fig2", "fig4", "live_swap", "multipath",
+         "staging_throughput"]
 
 
 def _write_json(json_dir: str, name: str, rows: list, error: str) -> None:

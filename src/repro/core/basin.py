@@ -129,6 +129,12 @@ class Link:
     dst: str
     bandwidth_bytes_per_s: float | None = None
     rtt_s: float = 0.0
+    #: expected retransmit fraction (retransmits / items) on this hop —
+    #: §3.2's deterministic loss.  A lossy link needs a window deepened
+    #: by (1 + loss_rate) to keep the pipe full while retransmit RTTs
+    #: are being paid, and its honest promise drops accordingly when a
+    #: clamp keeps the window shallow.
+    loss_rate: float = 0.0
 
     def bdp_bytes(self) -> float:
         """Bandwidth-delay product (section 3.1) - the in-flight window
@@ -300,16 +306,28 @@ class DrainageBasin:
             links.append(l)
         return DrainageBasin(tiers, links)
 
-    def replace_tiers(self, new_tiers: Sequence[Tier]) -> "DrainageBasin":
+    def replace_tiers(self, new_tiers: Sequence[Tier],
+                      link_overrides: "dict[str, dict] | None" = None
+                      ) -> "DrainageBasin":
         """Rebuild with revised tier estimates, same topology.  Derived
         links re-derive from the new tiers (an upward bandwidth revision
         must not stay clamped at a stale link rate); explicit links are
-        physical and survive unchanged."""
-        if not self.explicit_links:
+        physical and survive unchanged.
+
+        ``link_overrides`` maps ``"src->dst"`` to link-field revisions
+        (``rtt_s``, ``loss_rate``) learned from observed telemetry — a
+        route change revises the *path* the physical link takes, so the
+        override applies even to explicit links."""
+        if not self.explicit_links and not link_overrides:
             return DrainageBasin(new_tiers)
         links = [dataclasses.replace(l, bandwidth_bytes_per_s=None)
                  if (l.src, l.dst) in self._derived_links else l
                  for l in self.links]
+        if link_overrides:
+            links = [dataclasses.replace(
+                         l, **link_overrides[f"{l.src}->{l.dst}"])
+                     if f"{l.src}->{l.dst}" in link_overrides else l
+                     for l in links]
         return DrainageBasin(new_tiers, links)
 
     # -- analysis ----------------------------------------------------------

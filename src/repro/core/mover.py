@@ -100,9 +100,9 @@ from .burst_buffer import BufferClosed, BurstBuffer
 from .integrity import StreamDigest as _StreamDigest, as_bytes as _as_bytes
 from .planner import BranchPlan, HopPlan, STALL_THRESHOLD, TransferPlan, \
     plan_delta, replan as _replan
-from .staging import ParallelBranchPipeline, Stage, StagePipeline, \
-    StageReport, WindowedStage, _default_sizeof, delta_reports, \
-    iter_segments, merge_reports
+from .staging import ParallelBranchPipeline, SERVICE_RESERVOIR, Stage, \
+    StagePipeline, StageReport, WindowedStage, _default_sizeof, \
+    delta_reports, iter_segments, merge_reports
 from .telemetry import TelemetryRegistry
 
 __all__ = ["MIRROR_BATCH", "MoverConfig", "TransferReport",
@@ -317,6 +317,17 @@ class UnifiedDataMover:
         return None
 
     @staticmethod
+    def _hop_rtt(hop: Optional[HopPlan]) -> Optional[float]:
+        """The resize argument carrying a hop's revised round trip (None
+        when the hop is queue-clocked — base stages ignore it).  An
+        rtt-revised verdict's remedy rides the same zero-drain swap as a
+        window raise: the running WindowedStage re-clocks its ACK ledger
+        to the revised RTT without dropping a staged item."""
+        if hop is not None and hop.window_bytes > 0 and hop.rtt_s > 0:
+            return hop.rtt_s
+        return None
+
+    @staticmethod
     def _hop_batch(hop: Optional[HopPlan],
                    batch_items: Optional[int] = None) -> int:
         """Effective slab size for a hop: the per-call override wins
@@ -353,6 +364,60 @@ class UnifiedDataMover:
         ] or [self._make_stage(default_name, params[0][0], params[0][1],
                                None, params[0][2], batch_items)]
         return StagePipeline(source, stages)
+
+    @staticmethod
+    def _fold_checksum_report(plan: Optional[TransferPlan],
+                              reports: Sequence[StageReport]
+                              ) -> list[StageReport]:
+        """Fold the executed checksum stage's report into its charged
+        hop's report before ``replan`` sees the window.
+
+        The digest runs as its own pipeline stage while the *plan*
+        charges its budget to the hop at ``checksum_index``
+        (``digest_bytes_per_s``) — so the live "checksum" report matched
+        no hop name and the host-compute-bound verdict could only ever
+        fire on recorded/replayed reports, never on a run.  Merging the
+        pair makes the live path speak the plan's accounting language:
+        items/bytes are the hop's, the time base is the slower of the
+        two (they overlap in the pipeline), the stalls on the buffer
+        *between* the pair are dropped (internal coupling of the merged
+        stages, not channel evidence) while both outer stall sides
+        survive, and the transport ledger (window stalls, retransmits,
+        ACK spacing) sums."""
+        out = list(reports)
+        if plan is None or plan.checksum_index is None or not plan.hops:
+            return out
+        hop = plan.hops[min(plan.checksum_index, len(plan.hops) - 1)]
+        if hop.name == "checksum":
+            return out
+        i_sum = next((i for i, r in enumerate(out)
+                      if r.name == "checksum"), None)
+        i_hop = next((i for i, r in enumerate(out)
+                      if r.name == hop.name), None)
+        if i_sum is None or i_hop is None:
+            return out
+        sum_rep, hop_rep = out[i_sum], out[i_hop]
+        first, second = ((sum_rep, hop_rep) if i_sum < i_hop
+                         else (hop_rep, sum_rep))
+        out[i_hop] = dataclasses.replace(
+            hop_rep,
+            elapsed_s=max(hop_rep.elapsed_s, sum_rep.elapsed_s),
+            active_s=max(hop_rep.active_s, sum_rep.active_s),
+            stall_up_s=first.stall_up_s,
+            stall_down_s=second.stall_down_s,
+            stall_window_s=hop_rep.stall_window_s + sum_rep.stall_window_s,
+            errors=hop_rep.errors + sum_rep.errors,
+            retransmits=hop_rep.retransmits + sum_rep.retransmits,
+            rtt_sum_s=hop_rep.rtt_sum_s + sum_rep.rtt_sum_s,
+            acks=hop_rep.acks + sum_rep.acks,
+            service_up_s=(list(first.service_up_s)
+                          + list(second.service_up_s))[-SERVICE_RESERVOIR:],
+            service_down_s=(list(first.service_down_s)
+                            + list(second.service_down_s)
+                            )[-SERVICE_RESERVOIR:],
+        )
+        del out[i_sum]
+        return out
 
     def _record(self, report: TransferReport) -> TransferReport:
         if self.telemetry is not None:
@@ -409,7 +474,9 @@ class UnifiedDataMover:
                     st.reset_service_reservoirs()
                 if not window:
                     continue
-                revised = _replan(active, window, damping=damping)
+                revised = _replan(
+                    active, self._fold_checksum_report(active, window),
+                    damping=damping)
                 delta = plan_delta(active, revised)
                 active = revised
                 if delta:
@@ -420,6 +487,7 @@ class UnifiedDataMover:
                                                    new_params):
                         st.resize(capacity=cap, workers=wrk,
                                   window_bytes=self._hop_window(hop),
+                                  rtt_s=self._hop_rtt(hop),
                                   batch_items=self._hop_batch(hop,
                                                               batch_items))
         pipeline.join()
@@ -453,8 +521,9 @@ class UnifiedDataMover:
                 # buffer boundary: the previous segment fully drained, so
                 # the plan can swap without dropping staged items
                 # (hypothesis -> change -> measure, mid-transfer)
-                revised = _replan(active, last_reports,
-                                  damping=damping)
+                revised = _replan(
+                    active, self._fold_checksum_report(active, last_reports),
+                    damping=damping)
                 # same revision signature as the live path (plan_delta),
                 # so the two execution modes count replans identically
                 if plan_delta(active, revised):
@@ -986,6 +1055,7 @@ class UnifiedDataMover:
                             st.resize(capacity=capacity or hop.capacity,
                                       workers=workers or hop.workers,
                                       window_bytes=self._hop_window(hop),
+                                      rtt_s=self._hop_rtt(hop),
                                       batch_items=self._hop_batch(
                                           hop, batch_items))
                     if route == "steal":

@@ -101,9 +101,10 @@ buffer boundary, so a mid-transfer regime shift is answered mid-transfer
 
 from __future__ import annotations
 
+import collections.abc
 import dataclasses
 import math
-from typing import Mapping, Optional, Sequence
+from typing import Mapping, Optional, Sequence, Union
 
 from .basin import DrainageBasin, Tier
 from .staging import StageReport
@@ -134,6 +135,18 @@ ACCEL_DIGEST_BYTES_PER_S = 64e9
 #: ``digest_bytes_per_s`` (the §3.4 signature: throughput pinned by the
 #: integrity budget, not by any tier or by transport credit)
 DIGEST_PIN_SLACK = 1.5
+#: minimum observed-ACK samples before the live RTT estimate is trusted
+#: to revise ``HopPlan.rtt_s`` (fewer and one stray ACK skews the mean)
+MIN_RTT_SAMPLES = 8
+#: relative deviation of the observed RTT estimate from the planned
+#: ``rtt_s`` beyond which the plan's RTT is revised (an **rtt-revised**
+#: verdict).  Below it the estimate is jitter, not a route change.
+RTT_REVISION_TOLERANCE = 0.2
+#: observed retransmit fraction (retransmits / items) at or above which a
+#: window-stalled hop reads as **loss-bound** — §3.2's deterministic-loss
+#: regime, whose remedy deepens the window by (1 + loss) and lowers the
+#: promise honestly wherever a clamp keeps the window shallow
+LOSS_RATE_THRESHOLD = 0.05
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +170,15 @@ class HopPlan:
     #: ``"src->dst"`` of the link whose BDP governs the window (the name
     #: a window-bound verdict points at); "" on queue-clocked hops
     window_link: str = ""
+    #: modeled retransmit fraction of the windowed link (§3.2): the
+    #: window is deepened by (1 + loss_rate) so retransmit round trips
+    #: do not drain the pipe, and a clamped window's promise drops by
+    #: the same factor.  Revised by a **loss-bound** verdict.
+    loss_rate: float = 0.0
+    #: live RTT estimate from observed ACK spacing (0 = none yet); set by
+    #: :func:`replan` when an **rtt-revised** verdict re-times the hop,
+    #: and surfaced by ``describe()`` as ``rtt-est=`` next to ``rtt=``
+    rtt_estimate_s: float = 0.0
     #: slab size: items the hop's workers pull/admit/stage per loop
     #: (``Stage.batch_items``).  1 = the per-item path.
     batch_items: int = 1
@@ -218,9 +240,10 @@ class TransferPlan:
     branches: list[BranchPlan] = dataclasses.field(default_factory=list)
     #: branching plans hash at the split node instead of riding one hop
     checksum_at_split: bool = False
-    #: host limit the windowed hops were clamped under (None = BDP-sized).
-    #: A window-bound verdict's remedy is raising this (see :func:`replan`)
-    max_window_bytes: Optional[float] = None
+    #: host limit the windowed hops were clamped under (None = BDP-sized;
+    #: a mapping clamps per branch id).  A window-bound verdict's remedy
+    #: is raising this — for the diagnosed branch only (see :func:`replan`)
+    max_window_bytes: WindowClamp = None
     #: where the stream digest runs: ``"host"`` (SHA on the staging CPU,
     #: charged at ``host_digest_bytes_per_s``) or ``"accel"`` (batched
     #: Pallas digest, charged at ``accel_digest_bytes_per_s``).  A
@@ -258,8 +281,13 @@ class TransferPlan:
 
     @staticmethod
     def _fmt_hop(h: HopPlan) -> str:
-        win = (f" win={h.window_bytes / 1e6:.1f}MB"
-               f" rtt={h.rtt_s * 1e3:.0f}ms" if h.window_bytes > 0 else "")
+        win = ""
+        if h.window_bytes > 0:
+            loss = f" loss={h.loss_rate:.0%}" if h.loss_rate > 0 else ""
+            est = (f" rtt-est={h.rtt_estimate_s * 1e3:.0f}ms"
+                   if h.rtt_estimate_s > 0 else "")
+            win = (f" win={h.window_bytes / 1e6:.1f}MB"
+                   f" rtt={h.rtt_s * 1e3:.0f}ms{est}{loss}")
         # slab size surfaces only when the hop is actually batched, so a
         # per-item plan's describe() stays byte-identical to the old form
         batch = f" b={h.batch_items}" if h.batch_items > 1 else ""
@@ -317,6 +345,12 @@ class HopRevision:
     workers: int
     window_bytes: float = 0.0
     batch_items: int = 1
+    #: revised ACK-clock round trip (0 = the hop is queue-clocked).  An
+    #: rtt-revised plan must re-time the RUNNING WindowedStage even when
+    #: every other parameter (including a clamped window) is unchanged —
+    #: a stale ACK clock mis-paces admission and mis-reads the next
+    #: revision window's evidence.
+    rtt_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -353,16 +387,21 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
     delta = PlanDelta()
 
     def changed_hop(h: HopPlan, prev: HopPlan | None) -> bool:
+        # rtt_s is part of the live-applicable surface: an rtt-revised
+        # plan whose (clamped) window came out numerically identical must
+        # still produce a truthy delta, or the running WindowedStage
+        # keeps a stale ACK clock through the revision
         return prev is None or (
-            (h.capacity, h.workers, h.window_bytes, h.batch_items)
+            (h.capacity, h.workers, h.window_bytes, h.batch_items, h.rtt_s)
             != (prev.capacity, prev.workers, prev.window_bytes,
-                prev.batch_items))
+                prev.batch_items, prev.rtt_s))
 
     old_hops = {h.name: h for h in old.hops}
     for h in new.hops:
         if changed_hop(h, old_hops.get(h.name)):
             delta.hops[h.name] = HopRevision(h.name, h.capacity, h.workers,
-                                             h.window_bytes, h.batch_items)
+                                             h.window_bytes, h.batch_items,
+                                             h.rtt_s)
     old_branches = {b.branch_id: b for b in old.branches}
     for b in new.branches:
         prev = old_branches.get(b.branch_id)
@@ -373,7 +412,8 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
         for h in b.hops:
             if changed_hop(h, prev_hops.get(h.name)):
                 changed[h.name] = HopRevision(h.name, h.capacity, h.workers,
-                                              h.window_bytes, h.batch_items)
+                                              h.window_bytes, h.batch_items,
+                                              h.rtt_s)
         if changed:
             delta.branch_hops[b.branch_id] = changed
     return delta
@@ -400,17 +440,18 @@ def _segment_rtt(basin: DrainageBasin, lo: int, hi: int) -> float:
 
 
 def _segment_window(basin: DrainageBasin, lo: int, hi: int
-                    ) -> tuple[float, float, str]:
-    """(rtt_s, bdp_bytes, "src->dst") of the highest-BDP windowed link
-    inside the tier span — the link whose ACK clock governs this hop.
-    (0, 0, "") when the segment crosses no latency-bearing link (a
-    queue-clocked hop)."""
+                    ) -> tuple[float, float, str, float]:
+    """(rtt_s, bdp_bytes, "src->dst", loss_rate) of the highest-BDP
+    windowed link inside the tier span — the link whose ACK clock governs
+    this hop.  (0, 0, "", 0) when the segment crosses no latency-bearing
+    link (a queue-clocked hop)."""
     names = {t.name for t in basin.tiers[lo:hi + 1]}
-    best = (0.0, 0.0, "")
+    best = (0.0, 0.0, "", 0.0)
     for l in basin.links:
         if l.src in names and l.dst in names and l.rtt_s > 0:
             if l.bdp_bytes() > best[1]:
-                best = (l.rtt_s, l.bdp_bytes(), f"{l.src}->{l.dst}")
+                best = (l.rtt_s, l.bdp_bytes(), f"{l.src}->{l.dst}",
+                        l.loss_rate)
     return best
 
 
@@ -424,7 +465,8 @@ def _raw_line_rate(basin: DrainageBasin) -> float:
 
 
 def _worker_rate(up: Tier, down: Tier, item_bytes: float,
-                 batch_items: int = 1) -> float:
+                 batch_items: int = 1,
+                 extra_latency_s: float = 0.0) -> float:
     """Sustained rate of ONE staging worker doing pull -> transform ->
     push: upstream service time (with latency + jitter) plus downstream
     delivery, serialized within the worker.
@@ -433,11 +475,18 @@ def _worker_rate(up: Tier, down: Tier, item_bytes: float,
     *slab* of ``batch_items`` — the analytic form of the zero-copy data
     plane's amortization (one lock round-trip, one admission check per
     slab); the per-byte transmit cost is unchanged.  ``batch_items=1``
-    is the historical per-item figure exactly."""
+    is the historical per-item figure exactly.
+
+    ``extra_latency_s`` is charged per *item*, never amortized by the
+    slab: it models the expected retransmit round trips on a lossy
+    windowed hop (``loss_rate * rtt_s``), which each item pays
+    independently — concurrency across workers, not batching within
+    one, is what rides those round trips out."""
     b = max(1, int(batch_items))
     t = (item_bytes / up.bandwidth_bytes_per_s
          + (up.latency_s + up.jitter_s) / b
-         + item_bytes / down.bandwidth_bytes_per_s + down.latency_s / b)
+         + item_bytes / down.bandwidth_bytes_per_s + down.latency_s / b
+         + extra_latency_s)
     return item_bytes / t
 
 
@@ -499,14 +548,30 @@ def _plan_path(
         # misconfiguration, so the promise stays the line rate and the
         # shortfall surfaces as a fidelity gap + window-bound verdict —
         # whose remedy (lifting the clamp) then actually works.
-        rtt, bdp, win_link = _segment_window(basin, lo, hi)
+        rtt, bdp, win_link, loss = _segment_window(basin, lo, hi)
         win = 0.0
         hop_cap = target
         if rtt > 0 and bdp > 0:
-            win = bdp * WINDOW_HEADROOM
+            # a lossy link pays one extra RTT per retransmitted item
+            # (§3.2): riding those round trips out without draining the
+            # pipe needs (1 + loss) windows of bytes in flight — and a
+            # window clamped below that only ever delivers
+            # ``win / (rtt * (1 + loss))``, so the burst-capacity clamp
+            # drops the hop's promise by the same factor (honesty), while
+            # a host clamp keeps the promise and surfaces as window-bound
+            bdp_eff = bdp * (1.0 + loss)
+            win = bdp_eff * WINDOW_HEADROOM
+            # coarse admission units (§3.4): the window admits whole
+            # items, so once one item is a sizable fraction of the BDP a
+            # BDP-sized window degenerates toward stop-and-wait — it
+            # cannot hold the item in transmission AND its unACKed
+            # predecessors.  Size for both, and throughput stays flat
+            # from KiB items to GiB items (the fig4 claim).
+            if item_bytes * 4 > bdp_eff:
+                win = (bdp_eff + item_bytes) * WINDOW_HEADROOM
             if math.isfinite(cap_bytes) and cap_bytes < win:
                 win = cap_bytes
-                hop_cap = min(hop_cap, win / rtt)
+                hop_cap = min(hop_cap, win / (rtt * (1.0 + loss)))
             if max_window_bytes is not None:
                 win = min(win, float(max_window_bytes))
         # slab size: ordered transfers pin to per-item (a slab reorders
@@ -516,7 +581,12 @@ def _plan_path(
         b = 1 if ordered else batch_items
         if b > 1 and win > 0:
             b = max(1, min(b, int(win // item_bytes)))
-        rate_1 = _worker_rate(up, down, item_bytes, batch_items=b)
+        # a lossy hop's workers each carry the expected retransmit
+        # round trip per item; the pool is staffed for it, and when even
+        # ``max_workers`` cannot reach the line, the hop's promise drops
+        # with the staffed pool — honestly, not as a fidelity gap
+        rate_1 = _worker_rate(up, down, item_bytes, batch_items=b,
+                              extra_latency_s=loss * rtt)
         if ordered:
             workers = 1
         else:
@@ -545,11 +615,29 @@ def _plan_path(
                             rate_bytes_per_s=hop_rate,
                             window_bytes=win, rtt_s=rtt,
                             window_link=win_link if win > 0 else "",
+                            loss_rate=loss if win > 0 else 0.0,
                             batch_items=b))
 
     planned = min(min(h.rate_bytes_per_s for h in hops),
                   basin.achievable_throughput())
     return hops, headroom, planned
+
+
+#: a window clamp is either one host limit for the whole plan (float) or
+#: a per-branch mapping ``branch_id -> bytes`` (two WAN branches behind
+#: different host configs); ``None``/missing branch = BDP-sized
+WindowClamp = Optional[Union[float, Mapping[str, float]]]
+
+
+def _branch_window_clamp(max_window_bytes: WindowClamp,
+                         branch_id: str) -> Optional[float]:
+    """Resolve the window clamp that applies to one branch."""
+    if max_window_bytes is None:
+        return None
+    if isinstance(max_window_bytes, collections.abc.Mapping):
+        v = max_window_bytes.get(branch_id)
+        return float(v) if v is not None else None
+    return float(max_window_bytes)
 
 
 def _branch_ids(paths: Sequence[tuple[str, ...]]) -> list[str]:
@@ -573,7 +661,7 @@ def plan_transfer(
     ordered: bool = False,
     max_workers: int = MAX_WORKERS,
     max_capacity: int = MAX_CAPACITY,
-    max_window_bytes: Optional[float] = None,
+    max_window_bytes: WindowClamp = None,
     batch_items: Optional[object] = None,
     checksum_placement: str = "host",
     host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S,
@@ -594,7 +682,14 @@ def plan_transfer(
     :class:`~repro.core.staging.WindowedStage`.  ``max_window_bytes``
     models the host's socket/stream-buffer limit (§3.2): a clamp below
     BDP pins delivery at ``window / RTT`` — the plan keeps promising the
-    line rate so the shortfall surfaces as a window-bound verdict.
+    line rate so the shortfall surfaces as a window-bound verdict.  A
+    mapping ``branch_id -> bytes`` clamps per branch (two WAN branches
+    behind differently configured hosts plan — and get diagnosed —
+    independently); on a linear basin the branch id is the sink tier's
+    name.  A lossy link (``Link.loss_rate > 0``) plans a window deepened
+    by ``(1 + loss_rate)`` so retransmit round trips don't drain the
+    pipe, and any burst-capacity clamp drops the hop's promise by the
+    same factor.
 
     On a branching basin the returned plan carries one
     :class:`BranchPlan` per root->sink path, each sized against its
@@ -628,7 +723,9 @@ def plan_transfer(
     if basin.is_linear:
         hops, headroom, planned = _plan_path(
             basin, item_bytes, stages, ordered, max_workers, max_capacity,
-            max_window_bytes=max_window_bytes, batch_items=batch)
+            max_window_bytes=_branch_window_clamp(
+                max_window_bytes, basin.tiers[-1].name),
+            batch_items=batch)
         checksum_index = None
         if checksum:
             # integrity rides the hop with the most headroom over the plan
@@ -663,7 +760,8 @@ def plan_transfer(
         sub = basin.path_basin(path)
         hops, _, planned = _plan_path(
             sub, item_bytes, stages, ordered, max_workers, max_capacity,
-            target=rates[path], max_window_bytes=max_window_bytes,
+            target=rates[path],
+            max_window_bytes=_branch_window_clamp(max_window_bytes, bid),
             batch_items=batch)
         branches.append(BranchPlan(
             branch_id=bid, path=path, hops=hops,
@@ -771,6 +869,15 @@ class _Evidence:
     #: the hop was pinned at ~window/RTT with window-stall evidence — a
     #: transport-credit limitation, not a tier-estimate error
     window: bool = False
+    #: observed ACK round trip deviating from the planned ``rtt_s`` (0 =
+    #: no deviation): a route change, not a window misconfiguration — the
+    #: remedy is revising the link's RTT (and re-sizing the window to the
+    #: new BDP), never raising a clamp that was correct
+    rtt_revised: float = 0.0
+    #: observed retransmit fraction when it deviates from the modeled
+    #: ``HopPlan.loss_rate`` (None = consistent with the model); drives
+    #: the loss-bound verdict and silent loss decay
+    loss: Optional[float] = None
     #: the checksum hop was pinned at ~its modeled digest rate with no
     #: stall on any side — the integrity budget (§3.4) is the limiter,
     #: not any tier; the remedy is offloading the digest, not touching
@@ -813,12 +920,64 @@ def _collect_evidence(plan: TransferPlan,
             underdelivered = (active_rate
                               < hop.rate_bytes_per_s
                               * (1.0 - STALL_THRESHOLD))
-            # window-bound check first, in BOTH regimes: the ACK ledger is
+            # RTT-revision check FIRST — before window-bound can fire.
+            # The observed ACK spacing is the hop's own first-hand
+            # telemetry: when it deviates from the planned rtt_s, the
+            # ROUTE changed, and every downstream symptom (window stall,
+            # pinned delivery) is a consequence of sizing the window for
+            # the wrong round trip.  Diagnosing window-bound here would
+            # prescribe the wrong remedy (lift a clamp that was never
+            # wrong) — §3.2's misdiagnosis family, done right.
+            if (hop.window_bytes > 0 and hop.rtt_s > 0
+                    and rep.acks >= MIN_RTT_SAMPLES):
+                rtt_obs = rep.rtt_estimate_s
+                if (rtt_obs > 0 and abs(rtt_obs - hop.rtt_s)
+                        > RTT_REVISION_TOLERANCE * hop.rtt_s):
+                    out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                         up_limited=True, busy=False,
+                                         candidate_tier=hop.up_tier,
+                                         rtt_revised=rtt_obs))
+                    continue
+            # loss check, second: a hop paying retransmit round trips
+            # beyond what the plan modeled is loss-bound.  The
+            # retransmit counter is the channel's own first-hand
+            # telemetry, so no stall-ledger corroboration is required:
+            # depending on pool depth the unmodeled round trips surface
+            # either as window stalls (deep pipes) or as serialized
+            # service time inside each worker (shallow pools), and
+            # demanding one signature would let the other collapse into
+            # a bandwidth-bound misdiagnosis — the §3.2 family again.
+            # Either way the remedy is the same: size the window AND the
+            # pool for the observed loss regime, not for any host clamp.
+            loss_obs = (rep.retransmits / rep.items
+                        if rep.items > 0 else 0.0)
+            worker_time = rep.elapsed_s * hop.workers
+            if (hop.window_bytes > 0 and hop.rtt_s > 0
+                    and rep.items >= MIN_DIAGNOSIS_SAMPLES
+                    and loss_obs >= LOSS_RATE_THRESHOLD
+                    and loss_obs > hop.loss_rate * 1.2
+                    and underdelivered):
+                out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                     up_limited=True, busy=False,
+                                     candidate_tier=hop.up_tier,
+                                     loss=loss_obs))
+                continue
+            # silent loss decay: a hop modeled lossy that stopped losing
+            # revises the estimate back down (shallower window next
+            # derivation) — quietly, no verdict string
+            if (hop.window_bytes > 0 and hop.loss_rate > 0
+                    and rep.items >= MIN_DIAGNOSIS_SAMPLES
+                    and loss_obs < hop.loss_rate * 0.5):
+                out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                     up_limited=True, busy=False,
+                                     candidate_tier=hop.up_tier,
+                                     loss=loss_obs))
+                continue
+            # window-bound check next, in BOTH regimes: the ACK ledger is
             # the stage's own first-hand accounting (never phase noise
             # across competing branches), and a credit-pinned hop must not
             # fall through to the busy-hop rule — per-worker time parked
             # on the window is neither a stall side nor a slow service
-            worker_time = rep.elapsed_s * hop.workers
             if (hop.window_bytes > 0 and hop.rtt_s > 0 and worker_time > 0
                     and rep.stall_window_s / worker_time >= STALL_THRESHOLD
                     and underdelivered
@@ -1003,6 +1162,20 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     staging CPU (applies from the next transfer / rebuilt pipeline — a
     stream's digest backend never switches mid-stream).
 
+    Two channel verdicts sit above window-bound (§3.2's misdiagnosis
+    family): **rtt-revised** — the hop's observed ACK spacing deviates
+    from the planned ``rtt_s`` (a route change), so the link's RTT is
+    revised and the rebuilt plan re-sizes the window to the new BDP; any
+    window stall was a symptom of the wrong clock, and no clamp is
+    lifted.  **loss-bound** — the hop paid retransmit round trips beyond
+    the modeled ``loss_rate``, so the link's loss estimate is revised and
+    the rebuilt plan deepens the window by ``(1 + loss)`` (and lowers any
+    capacity-clamped promise honestly).  A hop modeled lossy that stopped
+    losing decays the estimate back down, quietly.  Window-bound remains
+    the verdict only when the ACK clock agrees with the plan and loss is
+    at its modeled level — then the clamp really is the lie, and on a
+    per-branch clamp only the diagnosed branch's clamp is lifted.
+
     On a branching plan, reports tagged ``"<branch>/<stage>"`` attribute
     per branch (private-tier + corroboration rules, module docstring),
     and the rebuilt plan re-allocates branch rates from the revised
@@ -1039,6 +1212,7 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     # feed it, which the rebuilt plan re-derives), NOT adding workers:
     # N workers sharing an exhausted window all park on the same ACK clock.
     raise_window = False
+    raise_branches: set[str] = set()
     # -- host-compute pre-pass, the same shape: a checksum hop pinned at
     # its modeled digest rate indicts the integrity budget's *placement*,
     # not any tier estimate.  The remedy is offloading the digest to the
@@ -1047,20 +1221,43 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     # and workers do not rise — N workers sharing one host hash pipeline
     # all queue on the same core.
     offload_digest = False
+    # -- channel pre-pass: RTT and loss evidence revise the LINK model
+    # ("src->dst" -> field overrides applied by replace_tiers), never the
+    # tier estimates — the pipe's bandwidth is fine; its round trip or
+    # its loss regime changed.  The rebuilt plan re-sizes windows from
+    # the revised BDP/(1+loss); for loss it ALSO staffs the pool for the
+    # retransmit round trip each item now carries, and when even the
+    # full pool cannot reach the line, the hop's promise drops with it —
+    # honestly, instead of surviving as a perpetual fidelity gap.
+    link_rtt_rev: dict[str, float] = {}
+    link_loss_rev: dict[str, float] = {}
+    obs_rtt: dict[str, float] = {}
     for ev in list(evidence):
-        if ev.window:
+        key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
+               else ev.hop.name)
+        link = (ev.hop.window_link
+                or f"{ev.hop.up_tier}->{ev.hop.down_tier}")
+        if ev.rtt_revised > 0:
+            evidence.remove(ev)
+            link_rtt_rev[link] = ((1.0 - damping) * ev.hop.rtt_s
+                                  + damping * ev.rtt_revised)
+            obs_rtt[link] = ev.rtt_revised
+            diagnosis[key] = f"rtt-revised({link})"
+        elif ev.loss is not None:
+            evidence.remove(ev)
+            link_loss_rev[link] = ((1.0 - damping) * ev.hop.loss_rate
+                                   + damping * ev.loss)
+            if ev.loss >= LOSS_RATE_THRESHOLD:
+                diagnosis[key] = f"loss-bound({link})"
+            # else: silent decay — the estimate shrinks, no verdict
+        elif ev.window:
             evidence.remove(ev)
             raise_window = True
-            key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
-                   else ev.hop.name)
-            link = (ev.hop.window_link
-                    or f"{ev.hop.up_tier}->{ev.hop.down_tier}")
+            raise_branches.add(ev.branch.branch_id)
             diagnosis[key] = f"window-bound({link})"
         elif ev.compute:
             evidence.remove(ev)
             offload_digest = True
-            key = (f"{ev.branch.branch_id}/{ev.hop.name}" if multipath
-                   else ev.hop.name)
             diagnosis[key] = f"host-compute-bound({ev.hop.up_tier}:digest)"
     resolved = []
     for ev in evidence:
@@ -1153,16 +1350,34 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
                                      jitter_s=jit_est[t.name])
                  for t in plan.basin.tiers]
     # derived links re-derive from the revised tiers, explicit (physical)
-    # links survive — replace_tiers encodes that distinction
-    new_basin = plan.basin.replace_tiers(new_tiers)
+    # links survive — replace_tiers encodes that distinction.  Channel
+    # verdicts ride along as link-field overrides: a route change revises
+    # the PATH an explicit link takes, so rtt/loss revisions apply even
+    # to physically provisioned links.
+    overrides: dict[str, dict] = {}
+    for link_name, v in link_rtt_rev.items():
+        overrides.setdefault(link_name, {})["rtt_s"] = v
+    for link_name, v in link_loss_rev.items():
+        overrides.setdefault(link_name, {})["loss_rate"] = max(0.0, v)
+    new_basin = plan.basin.replace_tiers(new_tiers,
+                                         link_overrides=overrides or None)
+    # a window-bound verdict lifts the host clamp — for the diagnosed
+    # branch only, when the clamp is per-branch: the rebuilt plan's
+    # windows go back to BDP-with-headroom (and the live-swap path grows
+    # the running windows without a drain).  rtt-revised / loss-bound do
+    # NOT lift clamps: their windows re-size from the revised link model.
+    clamp = plan.max_window_bytes
+    if raise_window and clamp is not None:
+        if isinstance(clamp, collections.abc.Mapping):
+            clamp = {k: v for k, v in clamp.items()
+                     if k not in raise_branches} or None
+        else:
+            clamp = None
     revised = plan_transfer(
         new_basin, plan.item_bytes, stages=plan.stages,
         checksum=plan.checksum_index is not None or plan.checksum_at_split,
         ordered=plan.ordered,
-        # a window-bound verdict lifts the host clamp: the rebuilt plan's
-        # windows go back to BDP-with-headroom (and the live-swap path
-        # grows the running windows without a drain)
-        max_window_bytes=None if raise_window else plan.max_window_bytes,
+        max_window_bytes=clamp,
         batch_items=plan.batch_policy,
         # a host-compute-bound verdict's remedy: the rebuilt plan carries
         # the digest on the accelerator, so the checksum hop's ceiling
@@ -1171,5 +1386,18 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
         else plan.checksum_placement,
         host_digest_bytes_per_s=plan.host_digest_bytes_per_s,
         accel_digest_bytes_per_s=plan.accel_digest_bytes_per_s)
+    if obs_rtt:
+        # stamp the raw observed estimate on the re-timed hops (the
+        # operator surface: describe() shows rtt-est= next to the damped
+        # rtt= the plan now runs under).  Hop lists may be shared between
+        # plan.hops and the primary branch — dedupe by list identity.
+        hop_lists = {id(revised.hops): revised.hops}
+        for b in revised.branches:
+            hop_lists.setdefault(id(b.hops), b.hops)
+        for lst in hop_lists.values():
+            for i, h in enumerate(lst):
+                if h.window_link in obs_rtt:
+                    lst[i] = dataclasses.replace(
+                        h, rtt_estimate_s=obs_rtt[h.window_link])
     revised.diagnosis = diagnosis
     return revised

@@ -132,10 +132,25 @@ class StageReport:
     service_up_s: list[float] = dataclasses.field(default_factory=list)
     #: bounded reservoir of per-item downstream delivery times (put->done)
     service_down_s: list[float] = dataclasses.field(default_factory=list)
+    #: retransmissions the hop's channel paid in this window (§3.2 loss)
+    #: — the evidence behind the planner's **loss-bound** verdict.  0 on
+    #: hops without an observable channel.
+    retransmits: int = 0
+    #: sum and count of observed ACK round-trip times (WindowedStage
+    #: only): ``rtt_sum_s / acks`` is the live RTT estimate the planner
+    #: revises ``HopPlan.rtt_s`` from — a route change shows up here
+    #: *before* it can masquerade as a window-bound stall.
+    rtt_sum_s: float = 0.0
+    acks: int = 0
 
     @property
     def throughput_bytes_per_s(self) -> float:
         return self.bytes / self.elapsed_s if self.elapsed_s > 0 else 0.0
+
+    @property
+    def rtt_estimate_s(self) -> float:
+        """Mean observed ACK round trip (0.0 = no windowed observations)."""
+        return self.rtt_sum_s / self.acks if self.acks > 0 else 0.0
 
 
 #: end-of-stream sentinel for the segment peek (None is a valid item)
@@ -205,6 +220,9 @@ def merge_reports(chunks: Sequence[Sequence[StageReport]]) -> list[StageReport]:
             m.stall_down_s += r.stall_down_s
             m.stall_window_s += r.stall_window_s
             m.errors += r.errors
+            m.retransmits += r.retransmits
+            m.rtt_sum_s += r.rtt_sum_s
+            m.acks += r.acks
             m.service_up_s = (m.service_up_s
                               + list(r.service_up_s))[-SERVICE_RESERVOIR:]
             m.service_down_s = (m.service_down_s
@@ -235,7 +253,10 @@ def delta_report(cur: StageReport,
         stall_up_s=cur.stall_up_s - prev.stall_up_s,
         stall_down_s=cur.stall_down_s - prev.stall_down_s,
         stall_window_s=cur.stall_window_s - prev.stall_window_s,
-        errors=cur.errors - prev.errors)
+        errors=cur.errors - prev.errors,
+        retransmits=cur.retransmits - prev.retransmits,
+        rtt_sum_s=max(0.0, cur.rtt_sum_s - prev.rtt_sum_s),
+        acks=cur.acks - prev.acks)
 
 
 def delta_reports(cur: Sequence[StageReport],
@@ -277,6 +298,16 @@ class Stage(Generic[T, U]):
         #: upstream supports many-pulls.  Read at each loop head so a
         #: live ``resize(batch_items=...)`` takes effect mid-stream.
         self.batch_items = max(1, int(batch_items))
+        #: channel-observability hook: a transform may expose the hop's
+        #: underlying channel as ``transform.channel`` (tests/simbasin.py
+        #: attaches the SimulatedLink; a production wrapper would expose
+        #: its socket stats).  The stage reads the channel's live
+        #: ``retransmits`` counter and ``rtt_s`` — the §3.2 evidence that
+        #: makes loss and route changes *diagnosable* instead of silent.
+        self._channel = getattr(transform, "channel", None)
+        self._retrans_base = 0
+        self._rtt_obs_sum = 0.0
+        self._rtt_obs_n = 0
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
         self._items = 0
@@ -309,6 +340,13 @@ class Stage(Generic[T, U]):
         round-trip — the slab pull the batched worker loop rides.  When
         absent, ``batch_items > 1`` falls back to the per-item loop."""
         self._t_start = self._clock()
+        # snapshot the channel's cumulative retransmit counter so this
+        # stage reports only ITS OWN window of losses (segmented movers
+        # build a fresh stage per segment over one long-lived channel;
+        # without the base, merge_reports would multiply-count)
+        if self._channel is not None:
+            self._retrans_base = int(getattr(self._channel,
+                                             "retransmits", 0))
         self._upstream = upstream
         self._upstream_many = upstream_many
         self._spawn(self.workers)
@@ -487,7 +525,8 @@ class Stage(Generic[T, U]):
     def resize(self, *, capacity: Optional[int] = None,
                workers: Optional[int] = None,
                window_bytes: Optional[float] = None,
-               batch_items: Optional[int] = None) -> None:
+               batch_items: Optional[int] = None,
+               rtt_s: Optional[float] = None) -> None:
         """Apply revised staging parameters to the *running* stage.
 
         ``capacity`` re-sizes the stage's burst buffer in place
@@ -502,7 +541,9 @@ class Stage(Generic[T, U]):
         :class:`WindowedStage` has a window to revise.  ``batch_items``
         revises the slab size live — each worker reads it at its next
         loop head, so a replan can collapse a misbehaving batched hop to
-        per-item (or vice versa) with zero drain."""
+        per-item (or vice versa) with zero drain.  ``rtt_s`` revises a
+        windowed stage's ACK clock (an rtt-revised verdict); ignored on
+        queue-clocked stages."""
         if capacity is not None and capacity != self.buffer.capacity:
             self.buffer.resize(capacity)
         if batch_items is not None:
@@ -567,6 +608,11 @@ class Stage(Generic[T, U]):
                 stall_down_s=self.buffer.stats.producer_stall_s,
                 stall_window_s=self._stall_window_s,
                 errors=self._errors,
+                retransmits=(int(getattr(self._channel, "retransmits", 0))
+                             - self._retrans_base
+                             if self._channel is not None else 0),
+                rtt_sum_s=self._rtt_obs_sum,
+                acks=self._rtt_obs_n,
                 service_up_s=list(self._service_up.samples),
                 service_down_s=list(self._service_down.samples),
             )
@@ -694,20 +740,38 @@ class WindowedStage(Stage):
             # virtual time: the send completed at this worker's timeline
             # position (its serve's completion), not the global frontier
             t_sent = thread_now()
+        # the ACK clock rides the CHANNEL's live round trip when one is
+        # observable (a route change physically lengthens every ACK the
+        # moment it happens — the ledger must not keep ticking at the
+        # planned rtt); the observation accrues to the report so replan
+        # can revise HopPlan.rtt_s from the same evidence
+        ch_rtt = getattr(self._channel, "rtt_s", None)
+        rtt = (float(ch_rtt) if ch_rtt is not None and ch_rtt > 0
+               else self.rtt_s)
         with self._win_cond:
-            heapq.heappush(self._acks, (t_sent + self.rtt_s, nbytes))
+            heapq.heappush(self._acks, (t_sent + rtt, nbytes))
+            self._rtt_obs_sum += rtt
+            self._rtt_obs_n += 1
             self._win_cond.notify_all()
 
     def resize(self, *, capacity: Optional[int] = None,
                workers: Optional[int] = None,
                window_bytes: Optional[float] = None,
-               batch_items: Optional[int] = None) -> None:
+               batch_items: Optional[int] = None,
+               rtt_s: Optional[float] = None) -> None:
         if window_bytes is not None and window_bytes > 0 \
                 and window_bytes != self.window_bytes:
             with self._win_cond:
                 self.window_bytes = float(window_bytes)
                 # growth admits credit-blocked workers immediately — the
                 # live, zero-drain remedy for a window-bound verdict
+                self._win_cond.notify_all()
+        if rtt_s is not None and rtt_s > 0 and rtt_s != self.rtt_s:
+            # an rtt-revised plan retimes the ACK clock for bytes not yet
+            # sent; outstanding ledger entries keep their original ACK
+            # instants (those bytes are already in flight on the old path)
+            with self._win_cond:
+                self.rtt_s = float(rtt_s)
                 self._win_cond.notify_all()
         super().resize(capacity=capacity, workers=workers,
                        batch_items=batch_items)

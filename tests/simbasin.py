@@ -278,6 +278,10 @@ class SimulatedLink(SimulatedTier):
                  name: str = "sim-link", **kwargs):
         self.rtt_s = float(rtt_s)
         self.loss_every = int(loss_every)
+        #: cumulative scripted retransmissions — the counter a staging hop
+        #: reads through its channel handle (Stage reports the delta it
+        #: observed, so replan can price the loss regime)
+        self.retransmits = 0
         super().__init__(clock, bandwidth_bytes_per_s=bandwidth_bytes_per_s,
                          name=name, **kwargs)
 
@@ -302,6 +306,7 @@ class SimulatedLink(SimulatedTier):
         k = self._served
         if self.loss_every > 0 and k % self.loss_every == 0 \
                 and self.rtt_s > 0:
+            self.retransmits += 1
             return self.rtt_s       # retransmit: one extra round trip
         return 0.0
 
@@ -366,10 +371,17 @@ class SimHarness:
 
     def service(self, tier: SimulatedTier):
         """A stage transform serving each item through ``tier`` — the
-        executable form of a branch's private channel."""
+        executable form of a branch's private channel.  The tier rides
+        along as the transform's ``channel`` attribute, the seam a
+        :class:`~repro.core.staging.Stage` observes live link state
+        through (a :class:`SimulatedLink`'s current ``rtt_s`` clocks the
+        ACK ledger so a scripted route change is *felt*, its
+        ``retransmits`` counter surfaces scripted loss in the stage
+        report; plain tiers expose neither and the stage reads zeros)."""
         def transform(item):
             tier.serve(len(item) if hasattr(item, "__len__") else 1)
             return item
+        transform.channel = tier
         return transform
 
     def source(self, tier: SimulatedTier, n_items: int,

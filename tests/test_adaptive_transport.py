@@ -1,0 +1,412 @@
+"""Loss- and congestion-governed transport (PR 7): the window-bound
+misdiagnosis family fixed at the source.
+
+PR 5 gave windowed hops a static BDP-with-headroom window and ONE
+transport verdict — window-bound — so every long-link symptom collapsed
+into "lift the clamp".  The paper's §3.2 point is that real CCAs govern
+the window from *observed* channel state; these tests pin the adaptive
+counterparts end to end:
+
+* **rtt-revised** — a scripted mid-transfer route change (74 ms ->
+  150 ms) yields an RTT revision (window re-sized to the new BDP), NOT a
+  false window-bound verdict; the remedy recovers the planned rate both
+  offline (re-derive + re-run) and online (zero-drain resize of the
+  running stage's ACK clock).
+* **loss-bound** — scripted deterministic loss yields a loss revision:
+  the rebuilt plan deepens the window by (1 + loss), staffs the pool for
+  the retransmit round trip each item now carries, and lowers the hop's
+  promise honestly when even the full pool cannot reach the line.
+* per-branch ``max_window_bytes`` clamps (a Mapping), lifted only for
+  the branch the verdict indicts.
+* ``plan_delta`` staleness (satellite 2): a revision of the quantity a
+  window clamp was derived from recomputes the window — the delta
+  carries it instead of shipping the stale clamp to the live stages.
+* the live checksum-fold regression (satellite 1): the executed checksum
+  stage's report folds into its hop before ``replan`` sees it, so
+  host-compute-bound fires on the LIVE path, not only on recorded
+  reports.
+"""
+
+import hashlib
+import time
+
+import pytest
+
+from simbasin import SimHarness
+
+from repro.core.basin import (DrainageBasin, GBPS, GIB, Link, MIB, Tier,
+                              TierKind)
+from repro.core.mover import MoverConfig, UnifiedDataMover
+from repro.core.planner import (MAX_WORKERS, WINDOW_HEADROOM, plan_delta,
+                                plan_transfer, replan)
+from repro.core.staging import StageReport
+
+ITEM = 16 * MIB
+RTT = 0.074
+LINE = 100 * GBPS               # the long link's provisioned rate
+
+
+def _line_basin(*, rtt_ms=74.0, link_gbps=100.0, loss_rate=0.0,
+                max_window_bytes=None):
+    """A WAN path whose storage outruns the link, so the planned rate IS
+    the link's line rate — any transport misbehaviour shows up as
+    underdelivery against it, never hidden behind a slow endpoint."""
+    basin = DrainageBasin(
+        tiers=[
+            Tier("src", TierKind.SOURCE, 2 * link_gbps * GBPS,
+                 latency_s=1e-4),
+            Tier("bb", TierKind.BURST_BUFFER, 2 * link_gbps * GBPS,
+                 latency_s=1e-5),
+            Tier("dst", TierKind.SINK, 2 * link_gbps * GBPS, latency_s=1e-4),
+        ],
+        links=[
+            Link("src", "bb", 2 * link_gbps * GBPS),
+            Link("bb", "dst", link_gbps * GBPS, rtt_s=rtt_ms / 1e3,
+                 loss_rate=loss_rate),
+        ],
+    )
+    return basin
+
+
+def _plan(basin, **kwargs):
+    return plan_transfer(basin, ITEM, stages=("move",), **kwargs)
+
+
+def _run(plan, link, n_items, harness, **kwargs):
+    """Execute the plan against the scripted link in virtual time."""
+    src = harness.source(harness.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                                      wall_pacing_s=0.0), n_items, ITEM)
+    mover = harness.mover(plan=plan)
+    rep = mover.bulk_transfer(
+        iter(src), lambda _: None,
+        transforms=[("move", harness.service(link))], **kwargs)
+    return rep, mover.last_plan
+
+
+# -- rtt-revised: the scripted route change (ISSUE 7 acceptance) --------------
+
+
+def test_route_change_yields_rtt_revision_not_window_bound():
+    """74 ms -> 150 ms mid-transfer: the hop parks on a window sized for
+    the OLD round trip and collapses toward window/RTT_new — §3.2's
+    misdiagnosis bait.  The ACK spacing is first-hand telemetry, so the
+    verdict is rtt-revised (window re-sized to the new BDP), and the
+    re-run recovers >= 90% of the re-planned rate."""
+    plan = _plan(_line_basin())
+    assert plan.planned_bytes_per_s == pytest.approx(LINE)
+    h = SimHarness()
+    link = h.link(bandwidth_bytes_per_s=LINE, rtt_s=RTT)
+    link.shift_at(12, rtt_s=0.150)
+    n = 360
+    rep, _ = _run(plan, link, n, h)
+    assert rep.items == n
+    # the static window pins delivery below the line once the route shifts
+    assert rep.throughput_bytes_per_s < 0.9 * plan.planned_bytes_per_s
+
+    revised = replan(plan, rep.stage_reports, damping=1.0)
+    assert revised.diagnosis == {"move": "rtt-revised(bb->dst)"}
+    hop = revised.hops[0]
+    # the revised round trip is the observed ACK spacing (mostly 150 ms
+    # with a 74 ms prefix), and the window is the new BDP with headroom
+    assert 0.13 < hop.rtt_s < 0.151
+    assert hop.rtt_estimate_s == pytest.approx(hop.rtt_s)
+    assert hop.window_bytes == pytest.approx(
+        LINE * hop.rtt_s * WINDOW_HEADROOM)
+    # NOT window-bound: no clamp existed, none is lifted, the pipe and
+    # its tier estimates stand, and the workers do not rise
+    assert revised.max_window_bytes is None
+    assert hop.workers == plan.hops[0].workers
+    assert revised.planned_bytes_per_s == pytest.approx(
+        plan.planned_bytes_per_s)
+
+    # one window resize recovers the line on the changed route
+    h2 = SimHarness()
+    rep2, _ = _run(revised, h2.link(bandwidth_bytes_per_s=LINE, rtt_s=0.150),
+                   n, h2)
+    assert rep2.items == n
+    assert (rep2.throughput_bytes_per_s
+            >= 0.9 * revised.planned_bytes_per_s)
+
+
+def test_route_change_recovers_online_zero_drain():
+    """The online form: ``replan_every_items`` feeds the ACK spacing back
+    mid-transfer and the running stage's window AND ACK clock resize in
+    place — no drain, and the stream finishes well ahead of the static
+    run.  (A harsher shift than the offline scenario so the margin
+    survives however many items commit window waits before the
+    scheduling-dependent resize lands — see PR 5's live-resize test.)"""
+    n = 240
+    shifted_rtt = 0.6
+    h1 = SimHarness()
+    link1 = h1.link(bandwidth_bytes_per_s=LINE, rtt_s=RTT)
+    link1.shift_at(12, rtt_s=shifted_rtt)
+    static, _ = _run(_plan(_line_basin()), link1, n, h1)
+
+    h2 = SimHarness()
+    link2 = h2.link(bandwidth_bytes_per_s=LINE, rtt_s=RTT)
+    link2.shift_at(12, rtt_s=shifted_rtt)
+    live, last = _run(_plan(_line_basin()), link2, n, h2,
+                      replan_every_items=24, replan_damping=1.0)
+    assert live.items == static.items == n
+    assert live.replans >= 1
+    # the revision observably applied: the live plan runs under the
+    # revised round trip with a window re-sized to the new BDP
+    assert last.hops[0].rtt_s > 0.3
+    assert last.hops[0].window_bytes == pytest.approx(
+        LINE * last.hops[0].rtt_s * WINDOW_HEADROOM)
+    assert last.max_window_bytes is None
+    assert live.throughput_bytes_per_s >= 1.3 * static.throughput_bytes_per_s
+
+
+# -- loss-bound: scripted deterministic loss ----------------------------------
+
+
+def test_loss_yields_loss_bound_verdict_and_recovers():
+    """Every served item pays a retransmit round trip the plan never
+    modeled.  The verdict is loss-bound (the retransmit counter is
+    first-hand channel telemetry); the rebuilt plan deepens the window by
+    (1 + loss), staffs the pool for the per-item retransmit RTT, lowers
+    the promise honestly — and the re-run beats the static plan >= 1.5x
+    while meeting the honest promise."""
+    plan = _plan(_line_basin())
+    h = SimHarness()
+    # long enough that the FINAL item's retransmit round trip (which the
+    # elapsed clock must wait out) amortizes below the promise margin
+    n = 160
+    link = h.link(bandwidth_bytes_per_s=LINE, rtt_s=RTT, loss_every=1)
+    static, _ = _run(plan, link, n, h)
+    assert static.items == n
+    assert static.throughput_bytes_per_s < 0.9 * plan.planned_bytes_per_s
+
+    revised = replan(plan, static.stage_reports, damping=1.0)
+    assert revised.diagnosis == {"move": "loss-bound(bb->dst)"}
+    hop = revised.hops[0]
+    assert hop.loss_rate == pytest.approx(1.0)
+    # remedy: the window deepens by (1 + loss) ...
+    assert hop.window_bytes == pytest.approx(
+        LINE * RTT * (1.0 + hop.loss_rate) * WINDOW_HEADROOM)
+    # ... the pool is staffed for the retransmit round trip ...
+    assert hop.workers == MAX_WORKERS > plan.hops[0].workers
+    # ... and the promise drops honestly: even the full pool cannot push
+    # line rate through one retransmit RTT per item
+    assert revised.planned_bytes_per_s < plan.planned_bytes_per_s
+    # the tier estimates stand — the pipe's bandwidth was never the lie
+    assert revised.hops[0].rate_bytes_per_s == pytest.approx(
+        revised.planned_bytes_per_s)
+
+    h2 = SimHarness()
+    rep2, _ = _run(revised, h2.link(bandwidth_bytes_per_s=LINE, rtt_s=RTT,
+                                    loss_every=1), n, h2)
+    assert rep2.items == n
+    assert (rep2.throughput_bytes_per_s
+            >= 1.5 * static.throughput_bytes_per_s)
+    # the honest promise is met to within the simulator's concurrency
+    # stagger: the worker model assumes lockstep cycles, while the
+    # work-conserving pipe staggers 8 racing workers by ~10-15%
+    assert (rep2.throughput_bytes_per_s
+            >= 0.75 * revised.planned_bytes_per_s)
+
+
+def test_modeled_loss_deepens_window_and_lowers_promise_upfront():
+    """A link whose loss regime is KNOWN at plan time gets the deepened
+    window, the staffed pool, and the honest promise up front — no
+    misdiagnosis round trip required."""
+    lossless = _plan(_line_basin())
+    lossy = _plan(_line_basin(loss_rate=0.5))
+    assert lossy.hops[0].window_bytes == pytest.approx(
+        lossless.hops[0].window_bytes * 1.5)
+    assert lossy.hops[0].workers >= lossless.hops[0].workers
+    assert lossy.planned_bytes_per_s < lossless.planned_bytes_per_s
+
+
+def test_silent_loss_decay_shrinks_the_estimate_quietly():
+    """A hop modeled lossy that stops losing revises the loss estimate
+    back down — shallower window next derivation, but no verdict string
+    (nothing misbehaved)."""
+    plan = _plan(_line_basin(loss_rate=0.5))
+    hop = plan.hops[0]
+    clean = StageReport(
+        name="move", items=64, bytes=64 * ITEM,
+        elapsed_s=64 * ITEM / hop.rate_bytes_per_s,
+        stall_up_s=0.0, stall_down_s=0.0, errors=0, retransmits=0)
+    revised = replan(plan, [clean], damping=1.0)
+    assert revised.diagnosis == {}
+    assert revised.hops[0].loss_rate == pytest.approx(0.0)
+    assert revised.hops[0].window_bytes < plan.hops[0].window_bytes
+
+
+# -- per-branch window clamps -------------------------------------------------
+
+
+def _fanout_basin():
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 40.0 * GBPS, latency_s=1e-5),
+         Tier("staging", TierKind.BURST_BUFFER, 40.0 * GBPS, latency_s=1e-5),
+         Tier("site-a", TierKind.SINK, 10.0 * GBPS),
+         Tier("site-b", TierKind.SINK, 10.0 * GBPS)],
+        [Link("src", "staging"),
+         Link("staging", "site-a", 10.0 * GBPS, rtt_s=0.04),
+         Link("staging", "site-b", 10.0 * GBPS, rtt_s=0.04)])
+
+
+def test_per_branch_window_clamp_mapping():
+    """``max_window_bytes`` as a Mapping clamps each branch to ITS host
+    limit (two WAN branches behind different host configs)."""
+    plan = plan_transfer(_fanout_basin(), MIB, stages=("deliver",),
+                        max_window_bytes={"site-a": 2 * MIB,
+                                          "site-b": 4 * MIB})
+    assert plan.branch("site-a").hops[0].window_bytes == pytest.approx(
+        2 * MIB)
+    assert plan.branch("site-b").hops[0].window_bytes == pytest.approx(
+        4 * MIB)
+
+
+def test_window_bound_verdict_lifts_only_the_diagnosed_branch():
+    """A window-bound verdict on one branch lifts THAT branch's clamp;
+    the sibling's host limit is real configuration and stands."""
+    plan = plan_transfer(_fanout_basin(), MIB, stages=("deliver",),
+                        max_window_bytes={"site-a": 2 * MIB,
+                                          "site-b": 4 * MIB})
+    hop = plan.branch("site-a").hops[0]
+    elapsed = 4.0
+    rate = hop.window_bytes / hop.rtt_s        # pinned at window/RTT
+    pinned = StageReport(
+        name="site-a/deliver", items=int(rate * elapsed // MIB),
+        bytes=int(rate * elapsed), elapsed_s=elapsed,
+        stall_up_s=0.0, stall_down_s=0.0,
+        stall_window_s=0.5 * elapsed * hop.workers, errors=0)
+    revised = replan(plan, [pinned], damping=1.0)
+    assert revised.diagnosis == {
+        "site-a/deliver": "window-bound(staging->site-a)"}
+    bdp = 10.0 * GBPS * 0.04
+    assert revised.branch("site-a").hops[0].window_bytes == pytest.approx(
+        bdp * WINDOW_HEADROOM)
+    assert revised.branch("site-b").hops[0].window_bytes == pytest.approx(
+        4 * MIB)
+
+
+# -- plan_delta staleness (satellite 2) ---------------------------------------
+
+
+def test_plan_delta_carries_rtt_revision_under_identical_clamp():
+    """Two plans whose windows are clamped to the SAME host limit but
+    whose round trips differ: the delta must carry the rtt_s revision
+    (it re-times the running stage's ACK clock) even though window_bytes
+    is unchanged."""
+    a = _plan(_line_basin(rtt_ms=74.0), max_window_bytes=16 * MIB)
+    b = _plan(_line_basin(rtt_ms=150.0), max_window_bytes=16 * MIB)
+    assert a.hops[0].window_bytes == b.hops[0].window_bytes
+    delta = plan_delta(a, b)
+    assert delta
+    assert delta.hops["move"].rtt_s == pytest.approx(0.150)
+    assert not plan_delta(a, a)
+
+
+def test_burst_clamped_window_recomputes_when_capacity_estimate_shrinks():
+    """Satellite 2: a window clamped by burst capacity whose DERIVED
+    link bandwidth shrinks on revision must re-derive the window from
+    the revised BDP — not ship the stale clamp through plan_delta."""
+    basin = DrainageBasin(
+        tiers=[
+            Tier("src", TierKind.SOURCE, 200 * GBPS, latency_s=1e-4),
+            Tier("bb", TierKind.BURST_BUFFER, 200 * GBPS, latency_s=1e-5,
+                 capacity_bytes=256 * MIB),
+            Tier("dst", TierKind.SINK, 40 * GBPS, latency_s=1e-4),
+        ],
+        links=[
+            Link("src", "bb", 200 * GBPS),
+            # bandwidth DERIVED from the endpoint tiers: a revision of
+            # dst's estimate re-derives the link, hence the BDP
+            Link("bb", "dst", None, rtt_s=RTT),
+        ],
+    )
+    plan = _plan(basin)
+    # the original window is the burst-capacity clamp, not the BDP
+    assert plan.hops[0].window_bytes == pytest.approx(256 * MIB)
+    hop = plan.hops[0]
+    elapsed = 4.0
+    observed = 1.2e9                     # dst delivering ~1.2 GB/s
+    nbytes = int(observed * elapsed)
+    rep = StageReport(
+        name="move", items=nbytes // ITEM, bytes=nbytes, elapsed_s=elapsed,
+        stall_up_s=0.0, stall_down_s=0.3 * elapsed * hop.workers,
+        errors=0, service_down_s=[ITEM / observed] * 24)
+    revised = replan(plan, [rep], damping=1.0)
+    # the clamping quantity (derived link bandwidth -> BDP) was revised:
+    # the window must be the NEW BDP with headroom, below the stale clamp
+    new_win = revised.hops[0].window_bytes
+    assert new_win < 256 * MIB
+    assert new_win == pytest.approx(
+        revised.hops[0].rate_bytes_per_s * RTT * WINDOW_HEADROOM, rel=0.3)
+    delta = plan_delta(plan, revised)
+    assert delta
+    assert delta.hops["move"].window_bytes == pytest.approx(new_win)
+
+
+# -- the live checksum-fold regression (satellite 1) --------------------------
+
+
+def test_live_host_compute_bound_fires_with_executed_checksum_stage():
+    """Regression: the executed checksum stage reports under its own name,
+    so before the fold the charged hop's report never showed the digest
+    ceiling and host-compute-bound only ever fired on recorded/replayed
+    reports.  Folding the checksum stage's report into its hop makes the
+    LIVE path diagnose it: the placement flips to the accelerator
+    mid-transfer."""
+    item = bytes(MIB)
+    t0 = time.perf_counter()
+    reps = 0
+    while time.perf_counter() - t0 < 0.05:
+        hashlib.sha256(item).digest()
+        reps += 1
+    digest_rate = reps * MIB / (time.perf_counter() - t0)
+
+    basin = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 4 * digest_rate, latency_s=1e-6),
+        Tier("buf", TierKind.BURST_BUFFER, 8 * digest_rate, latency_s=1e-6),
+        Tier("dst", TierKind.SINK, 4 * digest_rate, latency_s=1e-6),
+    ])
+    plan = plan_transfer(basin, MIB, stages=("pull", "push"), checksum=True,
+                         checksum_placement="host",
+                         host_digest_bytes_per_s=digest_rate)
+    assert plan.checksum_placement == "host"
+
+    # exactly ONE revision boundary (16 of 24 items): the flip verdict is
+    # asserted at the boundary that issued it — post-flip boundaries see
+    # the real pipeline underdeliver against the modeled promise and may
+    # overwrite the hop's diagnosis entry with an ordinary tier verdict.
+    # Wall-clock test: a loaded host can blur one attempt's stall ratios
+    # past the verdict's gates, so allow a few attempts — a broken fold
+    # NEVER produces the verdict, whatever the scheduling.
+    flipped = False
+    for _ in range(3):
+        mover = UnifiedDataMover(MoverConfig(checksum=True), plan=plan)
+        rep = mover.bulk_transfer(
+            iter([item] * 24), lambda _: None,
+            transforms=[("pull", lambda x: x), ("push", lambda x: x)],
+            replan_every_items=16, replan_damping=1.0)
+        assert rep.items == 24
+        flipped = (mover.last_plan.checksum_placement == "accel"
+                   and any(v.startswith("host-compute-bound(")
+                           for v in mover.last_plan.diagnosis.values()))
+        if flipped:
+            break
+    assert flipped
+
+
+def test_coarse_item_window_covers_item_plus_bdp():
+    """An admission unit a sizable fraction of the BDP degenerates a
+    BDP-sized window toward stop-and-wait: the window must hold the item
+    in transmission AND its unACKed predecessors, or GiB-scale items
+    serialize on the ACK clock (the fig4 KiB->GiB flatness claim)."""
+    bdp = LINE * RTT
+    fine = _plan(_line_basin())
+    assert fine.hops[0].window_bytes == pytest.approx(bdp * WINDOW_HEADROOM)
+
+    coarse = plan_transfer(_line_basin(), GIB, stages=("move",))
+    assert coarse.hops[0].window_bytes == pytest.approx(
+        (bdp + GIB) * WINDOW_HEADROOM)
+    # the promise stays the line rate: the window guard exists precisely
+    # so coarse items do NOT cost throughput
+    assert coarse.planned_bytes_per_s == pytest.approx(
+        fine.planned_bytes_per_s)

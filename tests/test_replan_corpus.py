@@ -42,7 +42,8 @@ def build_basin(spec: dict) -> DrainageBasin:
         links = [
             Link(l["src"], l["dst"],
                  l["gbps"] * GBPS if l.get("gbps") is not None else None,
-                 rtt_s=l.get("rtt_ms", 0.0) / 1e3)
+                 rtt_s=l.get("rtt_ms", 0.0) / 1e3,
+                 loss_rate=l.get("loss_rate", 0.0))
             for l in links_spec
         ]
     return DrainageBasin(tiers, links)
@@ -77,7 +78,7 @@ def replay(spec: dict):
 
 
 def test_corpus_is_present():
-    assert len(FIXTURES) >= 9, (
+    assert len(FIXTURES) >= 11, (
         f"expected the recorded-report corpus under {DATA_DIR}")
 
 
@@ -104,6 +105,25 @@ def test_replayed_verdict_is_stable(path):
         # the host-compute-bound remedy: the revised plan moves the
         # digest (and nothing else — estimates and workers stand)
         assert revised.checksum_placement == placement
+    rtt_ms = spec.get("expected_rtt_ms")
+    if rtt_ms is not None:
+        # the rtt-revised remedy: the rebuilt plan runs under the revised
+        # round trip (damped toward the observed ACK spacing), and the
+        # raw observation surfaces on the hop for describe()
+        assert revised.hops[0].rtt_s == pytest.approx(rtt_ms / 1e3)
+        assert revised.hops[0].rtt_estimate_s > 0
+    loss = spec.get("expected_loss_rate")
+    if loss is not None:
+        # the loss-bound remedy: the rebuilt plan's window is sized for
+        # the revised loss regime (deepened by 1 + loss) and the pool is
+        # staffed for the retransmit round trip each item now carries
+        assert revised.hops[0].loss_rate == pytest.approx(loss)
+        base = plan_transfer(build_basin(spec), spec["item_bytes"],
+                             stages=tuple(spec["stages"]),
+                             ordered=spec.get("ordered", False),
+                             max_window_bytes=spec.get("max_window_bytes"))
+        assert revised.hops[0].window_bytes > base.hops[0].window_bytes
+        assert revised.hops[0].workers >= base.hops[0].workers
     window = spec.get("expected_window_relative")
     if window is not None:
         clamped = plan_transfer(build_basin(spec), spec["item_bytes"],
