@@ -1,32 +1,109 @@
-"""Figs. 8-9 — bulk vs streaming sweeps under simulated latency.
+"""Figs. 8-9 — bulk vs streaming data rates under an arbitered channel.
 
 The paper's testbed result: streaming transfers (data produced while
 moving) reach data rates close to bulk transfers (data at rest) across
-latencies — because the staged path overlaps production, staging, and
-transit.  Mirrored here with the unified mover's two modes.
+latencies, because the staged path overlaps production, staging, and
+transit.  Reproduced here the way the testbed actually ran it — two
+tenants on ONE channel at the same time — and in virtual time: a bulk
+tenant and a streaming tenant admit to the same
+:class:`~repro.core.fleet.FleetArbiter` under equal-weight QoS and share
+a simulated contended link across the latency sweep.  Each tenant runs a
+two-stage staged pipeline (produce -> move), so the streaming tenant's
+per-item production cost rides a stage of its own and overlaps transit;
+its achieved rate stays within a whisker of the bulk tenant's — the
+Fig. 8/9 claim, now with conservation enforced on the wire.
+
+Hard gates: at every latency the streaming tenant must reach >= 85% of
+the bulk tenant's rate, and both tenants must meet their time-averaged
+granted promises (fidelity gap < 0.15).
 """
 
-from repro.core.mover import MoverConfig, UnifiedDataMover
+import os
+import sys
 
-from .common import emit, payload_stream
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
 
-N, ITEM = 16, 1 << 20
+from simbasin import SimHarness  # noqa: E402
+
+from repro.core.basin import DrainageBasin, GBPS, Link, MIB, Tier, \
+    TierKind  # noqa: E402
+
+from .common import emit
+
+N, ITEM = 256, MIB // 4        # 64 MiB per tenant in 256 KiB items
+LINK = 10 * GBPS                # the shared channel both tenants ride
+
+
+def _basin(rtt_s: float) -> DrainageBasin:
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 4 * LINK),
+         Tier("buf", TierKind.BURST_BUFFER, 4 * LINK, latency_s=1e-5),
+         Tier("dst", TierKind.SINK, 4 * LINK)],
+        [Link("src", "buf", 4 * LINK),
+         Link("buf", "dst", LINK, rtt_s=rtt_s)])
+
+
+def _two_tenants(rtt_s: float):
+    h = SimHarness()
+    arb = h.arbiter(_basin(rtt_s))
+    link = h.link(bandwidth_bytes_per_s=LINK, rtt_s=rtt_s,
+                  wall_sync=10.0, wall_pacing_s=0.0)
+    stages = ("produce", "move")
+    adm_bulk = arb.admit("bulk", ITEM, qos="bulk", stages=stages)
+    adm_stream = arb.admit("stream", ITEM, qos="bulk", stages=stages)
+    assert adm_bulk.status == adm_stream.status == "admitted"
+
+    def tenant(adm, produce, mode, seed):
+        src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                              wall_pacing_s=0.0, seed=seed), N, ITEM)
+        run_fn = (h.mover().streaming_transfer if mode == "streaming"
+                  else h.mover().bulk_transfer)
+
+        def run():
+            return run_fn(
+                iter(src), lambda _: None,
+                transforms=[("produce", h.service(produce)),
+                            ("move", h.service(link))], fleet=adm)
+        return run
+
+    # bulk: data at rest, the produce stage is a fast local read.
+    # streaming: each item pays real production (5 Gb/s + 0.1 ms/item,
+    # ~1.7 GB/s raw — above the 625 MB/s grant, but only if the staged
+    # overlap actually hides it behind transit)
+    at_rest = h.tier(bandwidth_bytes_per_s=1000 * GBPS, wall_pacing_s=0.0)
+    producing = h.tier(bandwidth_bytes_per_s=40 * GBPS, latency_s=1e-4,
+                       seed=2, wall_pacing_s=0.0)
+    return h.run_concurrent(tenant(adm_bulk, at_rest, "bulk", seed=1),
+                            tenant(adm_stream, producing, "streaming",
+                                   seed=2))
 
 
 def run() -> None:
     for latency_ms in (10, 50, 100):
-        lat = latency_ms / 1e3
-        mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
-                                             staging_workers=4,
-                                             checksum=False))
-        bulk = mover.bulk_transfer(
-            payload_stream(N, ITEM, latency_s=lat, jitter_every=4),
-            lambda x: None)
-        streaming = mover.streaming_transfer(
-            payload_stream(N, ITEM, latency_s=lat, jitter_every=1),
-            lambda x: None)
+        bulk, stream = _two_tenants(latency_ms / 1e3)
+        ratio = (stream.throughput_bytes_per_s
+                 / max(bulk.throughput_bytes_per_s, 1e-9))
         emit(f"fig8/bulk_{latency_ms}ms", bulk.elapsed_s / N * 1e6,
-             f"{bulk.throughput_bytes_per_s / 1e6:.1f} MB/s")
-        emit(f"fig9/streaming_{latency_ms}ms", streaming.elapsed_s / N * 1e6,
-             f"{streaming.throughput_bytes_per_s / 1e6:.1f} MB/s "
-             f"({streaming.throughput_bytes_per_s / max(bulk.throughput_bytes_per_s, 1):.2f}x bulk)")
+             f"{bulk.throughput_bytes_per_s / 1e6:.1f} MB/s "
+             f"gap={bulk.fidelity_gap:.3f}",
+             fidelity_gap=bulk.fidelity_gap)
+        emit(f"fig9/streaming_{latency_ms}ms", stream.elapsed_s / N * 1e6,
+             f"{stream.throughput_bytes_per_s / 1e6:.1f} MB/s "
+             f"({ratio:.2f}x bulk) gap={stream.fidelity_gap:.3f}",
+             ratio_vs_bulk=ratio, fidelity_gap=stream.fidelity_gap)
+        if ratio < 0.85:
+            raise SystemExit(
+                f"streaming fell to {ratio:.2f}x bulk at {latency_ms} ms "
+                f"(gate: 0.85x) — the staged overlap failed to hide "
+                f"production behind transit")
+        for tag, rep in (("bulk", bulk), ("streaming", stream)):
+            if abs(rep.fidelity_gap) > 0.15:
+                raise SystemExit(
+                    f"{tag} tenant missed its granted promise at "
+                    f"{latency_ms} ms: gap {rep.fidelity_gap:.3f} "
+                    f"(gate: |gap| < 0.15)")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

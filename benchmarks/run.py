@@ -24,9 +24,10 @@ import traceback
 
 from . import (common, fig2_latency_sweep, fig4_cca_sweep,
                fig8_bulk_streaming, fig10_storage_bound,
-               fig11_staged_vs_direct, global_tuning, kernel_bench,
-               live_swap, multipath, online_replan, planned_vs_fixed,
-               roofline, staging_throughput, table5_basin_volumes)
+               fig11_staged_vs_direct, fleet_arbitration, global_tuning,
+               kernel_bench, live_swap, multipath, online_replan,
+               planned_vs_fixed, roofline, staging_throughput,
+               table5_basin_volumes)
 
 SUITES = {
     "table5": table5_basin_volumes,
@@ -35,6 +36,7 @@ SUITES = {
     "fig8": fig8_bulk_streaming,
     "fig10": fig10_storage_bound,
     "fig11": fig11_staged_vs_direct,
+    "fleet_arbitration": fleet_arbitration,
     "global_tuning": global_tuning,
     "kernels": kernel_bench,
     "live_swap": live_swap,
@@ -48,9 +50,11 @@ SUITES = {
 #: deterministic-in-virtual-time / analytic suites, fast enough for the
 #: per-push CI loop (no wall-clock sleeps, no model compiles) — plus the
 #: staging_throughput wall-clock gate, the zero-copy plane's acceptance
-#: claim (a few seconds of pure host work, no compiles, no sleeps)
-QUICK = ["table5", "fig2", "fig4", "live_swap", "multipath",
-         "staging_throughput"]
+#: claim (a few seconds of pure host work, no compiles, no sleeps).
+#: fig8 and fleet_arbitration run contended links in wall-synced virtual
+#: time (a few wall seconds each) and hard-gate the PR 8 arbiter claims.
+QUICK = ["table5", "fig2", "fig4", "fig8", "fleet_arbitration",
+         "live_swap", "multipath", "staging_throughput"]
 
 
 def _write_json(json_dir: str, name: str, rows: list, error: str) -> None:

@@ -5,6 +5,7 @@
 * :mod:`repro.core.staging` — staging workers / pipelines
 * :mod:`repro.core.mover` — unified bulk/streaming data mover
 * :mod:`repro.core.planner` — TransferPlan engine: basin -> staging parameters
+* :mod:`repro.core.fleet` — cross-plan rate arbitration over one shared basin
 * :mod:`repro.core.telemetry` — cross-layer TransferReport registry
 * :mod:`repro.core.fidelity` — fidelity-gap / roofline engine over compiled HLO
 * :mod:`repro.core.codesign` — co-design plan enumeration + analytic ranking
@@ -47,6 +48,7 @@ from .fidelity import (
     model_flops_dense,
     roofline,
 )
+from .fleet import DEFAULT_CLASSES, Admission, FleetArbiter
 from .mover import MoverConfig, TransferReport, UnifiedDataMover
 from .planner import (HopPlan, HopRevision, PlanDelta, TransferPlan,
                       plan_delta, plan_transfer, replan)
@@ -63,6 +65,7 @@ __all__ = [
     "predict", "rank_plans", "workload_from_config",
     "HardwareSpec", "HloCost", "RooflineReport", "TPU_V5E",
     "analyze_hlo_text", "model_flops_dense", "roofline",
+    "DEFAULT_CLASSES", "Admission", "FleetArbiter",
     "MoverConfig", "TransferReport", "UnifiedDataMover",
     "HopPlan", "HopRevision", "PlanDelta", "TransferPlan", "plan_delta",
     "plan_transfer", "replan",

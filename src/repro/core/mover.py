@@ -435,6 +435,7 @@ class UnifiedDataMover:
         chunk: int,
         damping: float,
         batch_items: Optional[int] = None,
+        fleet=None,
     ) -> tuple[int, int, list[StageReport], int, Optional[TransferPlan]]:
         """The zero-drain hot path: ONE persistent pipeline for the whole
         transfer.  Revision boundaries are accounting-only checkpoints —
@@ -442,13 +443,46 @@ class UnifiedDataMover:
         and the resulting :class:`~repro.core.planner.PlanDelta` is
         applied to the running stages in place (buffer resize, worker
         spawn/retire), so no staged item drains and the supply never
-        falls off line rate while the plan is being corrected."""
+        falls off line rate while the plan is being corrected.
+
+        With a ``fleet`` admission bound, the arbiter pushes re-granted
+        plans through the same in-place resize path as peers arrive and
+        finish — each rebalance counts as a replan, and the pipeline is
+        never torn down for one."""
         active = plan
         params = self._stage_params(all_transforms, active, capacity,
                                     workers)
         pipeline = self._build_pipeline(iter(source), all_transforms,
                                         params, active, batch_items)
         pipeline.start()
+        rebalances = [0]
+        applied = [active]
+        if fleet is not None:
+            fleet_lock = threading.Lock()
+
+            def _fleet_apply(new_plan, _delta) -> None:
+                # diff against what this pipeline actually runs (not the
+                # arbiter's idea of the previous plan): the bind-time
+                # sync call then degrades to a no-op when nothing moved
+                # between plan pickup and bind
+                with fleet_lock:
+                    d = plan_delta(applied[0], new_plan)
+                    applied[0] = new_plan
+                    if not d:
+                        return
+                    rebalances[0] += 1
+                    new_params = self._stage_params(all_transforms,
+                                                    new_plan, capacity,
+                                                    workers)
+                    for st, (cap, wrk, hop) in zip(pipeline.stages,
+                                                   new_params):
+                        st.resize(capacity=cap, workers=wrk,
+                                  window_bytes=self._hop_window(hop),
+                                  rtt_s=self._hop_rtt(hop),
+                                  batch_items=self._hop_batch(hop,
+                                                              batch_items))
+
+            fleet.bind(_fleet_apply)
         items = 0
         nbytes = 0
         replans = 0
@@ -490,6 +524,10 @@ class UnifiedDataMover:
                                   rtt_s=self._hop_rtt(hop),
                                   batch_items=self._hop_batch(hop,
                                                               batch_items))
+        if fleet is not None:
+            fleet.unbind()
+            active = applied[0]
+            replans += rebalances[0]
         pipeline.join()
         return items, nbytes, pipeline.reports(), replans, active
 
@@ -560,7 +598,19 @@ class UnifiedDataMover:
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
         batch_items: Optional[int] = None,
+        fleet=None,
     ) -> TransferReport:
+        if fleet is not None:
+            if replan_every_items:
+                raise ValueError(
+                    "a fleet-managed transfer delegates plan revision to "
+                    "the arbiter; replan_every_items must be 0")
+            if fleet.status != "admitted":
+                raise ValueError(
+                    f"fleet admission {fleet.name!r} is {fleet.status}"
+                    f"{': ' + fleet.reason if fleet.reason else ''}")
+            if plan is None:
+                plan = fleet.plan
         own_plan = plan is None
         plan = plan if plan is not None else self.plan
         do_sum = self.config.checksum if checksum is None else checksum
@@ -589,22 +639,33 @@ class UnifiedDataMover:
         # transfer runs as a single segment
         chunk = replan_every_items if plan is not None else 0
         t0 = self._clock()
-        if drain_per_segment and chunk:
-            items, nbytes, merged, replans, active = self._run_segmented(
-                source, sink, all_transforms, capacity, workers, plan,
-                chunk, replan_damping, batch_items)
-        else:
-            items, nbytes, merged, replans, active = self._run_live(
-                source, sink, all_transforms, capacity, workers, plan,
-                chunk, replan_damping, batch_items)
-        elapsed = self._clock() - t0
+        try:
+            if drain_per_segment and chunk:
+                items, nbytes, merged, replans, active = self._run_segmented(
+                    source, sink, all_transforms, capacity, workers, plan,
+                    chunk, replan_damping, batch_items)
+            else:
+                items, nbytes, merged, replans, active = self._run_live(
+                    source, sink, all_transforms, capacity, workers, plan,
+                    chunk, replan_damping, batch_items, fleet)
+            elapsed = self._clock() - t0
+        finally:
+            # one admission, one transfer: completion (or failure) frees
+            # the grant so survivors absorb the share immediately
+            if fleet is not None:
+                fleet.release()
         self.last_plan = active
         if own_plan and self.plan is not None:
             # the mover owns the plan: online revisions persist to the
             # next transfer (the checkpoint engine replans across saves)
             self.plan = active
 
-        if plan is not None:
+        if fleet is not None:
+            # the grant moved while the transfer ran (peers arrived and
+            # finished); the honest promise is its time average — the
+            # fleet analogue of planned_bytes_per_s
+            planned = fleet.mean_granted(t0, t0 + elapsed)
+        elif plan is not None:
             planned = plan.planned_bytes_per_s
         else:
             planned = self.basin.achievable_throughput() if self.basin else None
@@ -635,8 +696,20 @@ class UnifiedDataMover:
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
         batch_items: Optional[int] = None,
+        fleet=None,
     ) -> TransferReport:
         """Move a dataset at rest (paper section 2.2, *Bulk Transfer*).
+
+        ``fleet`` registers the transfer with a
+        :class:`~repro.core.fleet.FleetArbiter`: pass the ``"admitted"``
+        :class:`~repro.core.fleet.Admission` handle and the transfer runs
+        under the arbiter's granted plan (``plan`` defaults to it),
+        absorbs mid-stream re-grants zero-drain as peers arrive/finish
+        (each counts in ``replans``), measures its fidelity gap against
+        the time-averaged grant, and releases its share on completion.
+        The arbiter owns revision, so ``replan_every_items`` must stay 0;
+        use the same clock for mover and arbiter (the simbasin virtual
+        clock in tests) so the time-averaged promise is coherent.
 
         ``replan_every_items > 0`` makes the transfer *self-revising*: the
         observed stall ratios and service-time samples of each revision
@@ -653,7 +726,7 @@ class UnifiedDataMover:
         baseline; None defers to the plan's per-hop ``batch_items``)."""
         return self._run("bulk", source, sink, transforms, capacity, workers,
                          checksum, plan, replan_every_items, replan_damping,
-                         drain_per_segment, batch_items)
+                         drain_per_segment, batch_items, fleet)
 
     def streaming_transfer(
         self,
@@ -669,6 +742,7 @@ class UnifiedDataMover:
         replan_damping: float = 0.5,
         drain_per_segment: bool = False,
         batch_items: Optional[int] = None,
+        fleet=None,
     ) -> TransferReport:
         """Move a still-growing stream (paper section 2.2, *Streaming
         Transfer*): the source iterator may block while data is produced;
@@ -677,10 +751,12 @@ class UnifiedDataMover:
         contract — the unified-mover property.  ``replan_every_items``
         revises the plan online, applied zero-drain to the persistent
         pipeline as in :meth:`bulk_transfer`; ``batch_items`` overrides
-        the per-hop slab size as in :meth:`bulk_transfer`."""
+        the per-hop slab size and ``fleet`` registers with an arbiter as
+        in :meth:`bulk_transfer`."""
         return self._run("streaming", source, sink, transforms, capacity,
                          workers, checksum, plan, replan_every_items,
-                         replan_damping, drain_per_segment, batch_items)
+                         replan_damping, drain_per_segment, batch_items,
+                         fleet)
 
     # -- parallel-branch path (DAG plans) --------------------------------------
 
@@ -966,13 +1042,15 @@ class UnifiedDataMover:
         damping: float,
         digest: _StreamDigest,
         batch_items: Optional[int] = None,
+        fleet=None,
     ) -> tuple[int, int, list[StageReport], int, TransferPlan]:
         """Zero-drain parallel path: queues, branch stages, and the
         dispatcher live for the whole transfer.  Revision checkpoints
         compute the window's branch-tagged evidence + split-node intake
         ratios, and apply the resulting plan delta to the running
         machinery — weights swap into the live dispatcher, stages and
-        queues resize in place."""
+        queues resize in place.  A bound ``fleet`` admission pushes
+        arbiter re-grants through the same in-place machinery."""
         active = plan
         queues, pbp = self._branch_pipelines(active, transforms, capacity,
                                              workers, route, batch_items)
@@ -990,6 +1068,39 @@ class UnifiedDataMover:
             name="branch-dispatch", daemon=True)
         pbp.start()
         dispatch.start()
+        rebalances = [0]
+        applied = [active]
+        if fleet is not None:
+            fleet_lock = threading.Lock()
+
+            def _fleet_apply(new_plan, _delta) -> None:
+                with fleet_lock:
+                    d = plan_delta(applied[0], new_plan)
+                    applied[0] = new_plan
+                    if not d:
+                        return
+                    rebalances[0] += 1
+                    for bid2, pipe in pbp.branches:
+                        b = new_plan.branch(bid2)
+                        for i, st in enumerate(pipe.stages):
+                            hop = b.hop_for(i, st.name)
+                            st.resize(capacity=capacity or hop.capacity,
+                                      workers=workers or hop.workers,
+                                      window_bytes=self._hop_window(hop),
+                                      rtt_s=self._hop_rtt(hop),
+                                      batch_items=self._hop_batch(
+                                          hop, batch_items))
+                    if route == "steal":
+                        agg = sum(b.hops[0].capacity
+                                  for b in new_plan.branches)
+                        queues[order[0]].resize(capacity or max(1, agg))
+                    else:
+                        for b in new_plan.branches:
+                            queues[b.branch_id].resize(b.hops[0].capacity)
+                    weights.update(
+                        self._normalized_weights(new_plan.branches))
+
+            fleet.bind(_fleet_apply)
         items = 0
         nbytes = 0
         seen = 0            # attempted deliveries: the boundary clock —
@@ -1066,6 +1177,10 @@ class UnifiedDataMover:
                         for b in active.branches:
                             queues[b.branch_id].resize(b.hops[0].capacity)
                     weights.update(self._normalized_weights(active.branches))
+        if fleet is not None:
+            fleet.unbind()
+            active = applied[0]
+            replans += rebalances[0]
         dispatch.join()
         pbp.join()
         if source_err:
@@ -1169,8 +1284,17 @@ class UnifiedDataMover:
         drain_per_segment: bool = False,
         drainer_pool: bool = False,
         batch_items: Optional[int] = None,
+        fleet=None,
     ) -> TransferReport:
         """Move a stream down every branch of a multipath plan at once.
+
+        ``fleet`` registers the transfer with a
+        :class:`~repro.core.fleet.FleetArbiter` exactly as in
+        :meth:`bulk_transfer`: the admitted plan is the default ``plan``,
+        arbiter re-grants resize branches/queues/weights in place
+        mid-stream, the promise is the time-averaged grant, and the
+        share is released on completion (``replan_every_items`` must
+        stay 0 — the arbiter owns revision).
 
         One stage pipeline per :class:`~repro.core.planner.BranchPlan`; a
         dispatcher thread plays the split node.  ``mode="split"`` routes
@@ -1219,6 +1343,17 @@ class UnifiedDataMover:
             raise ValueError(f"unknown split route {route!r}")
         if route == "steal" and mode != "split":
             raise ValueError("route='steal' requires mode='split'")
+        if fleet is not None:
+            if replan_every_items:
+                raise ValueError(
+                    "a fleet-managed transfer delegates plan revision to "
+                    "the arbiter; replan_every_items must be 0")
+            if fleet.status != "admitted":
+                raise ValueError(
+                    f"fleet admission {fleet.name!r} is {fleet.status}"
+                    f"{': ' + fleet.reason if fleet.reason else ''}")
+            if plan is None:
+                plan = fleet.plan
         own_plan = plan is None
         plan = plan if plan is not None else self.plan
         if plan is None or not plan.branches:
@@ -1248,7 +1383,9 @@ class UnifiedDataMover:
         chunk = replan_every_items
         t0 = self._clock()
         try:
-            if drain_per_segment or not chunk:
+            # a fleet admission always takes the live path (chunk is 0,
+            # but re-grants need the persistent machinery to resize)
+            if (drain_per_segment or not chunk) and fleet is None:
                 items, nbytes, merged, replans, active = \
                     self._parallel_segmented(
                         source, deliver, plan, mode, route, transforms,
@@ -1259,10 +1396,12 @@ class UnifiedDataMover:
                     self._parallel_live(
                         source, deliver, plan, mode, route, transforms,
                         capacity, workers, chunk, replan_damping, digest,
-                        batch_items)
+                        batch_items, fleet)
         except BaseException:
             # the primary failure wins: drain the pool for cleanup but do
             # not let a retired client's error replace the real traceback
+            if fleet is not None:
+                fleet.release()
             if pool is not None:
                 try:
                     pool.close()
@@ -1272,10 +1411,14 @@ class UnifiedDataMover:
         if pool is not None:
             pool.close()
         elapsed = self._clock() - t0
+        if fleet is not None:
+            fleet.release()
         self.last_plan = active
         if own_plan and self.plan is not None:
             self.plan = active
-        if mode == "mirror":
+        if fleet is not None:
+            planned = fleet.mean_granted(t0, t0 + elapsed)
+        elif mode == "mirror":
             # replication paces at the slowest branch: every branch moves
             # every item, so the honest promise is n x the weakest rate,
             # not the split-mode aggregate

@@ -252,6 +252,14 @@ class TransferPlan:
     #: the ``batch_items`` policy the plan was derived under (None, int,
     #: or "auto") — carried so :func:`replan` re-derives with it
     batch_policy: Optional[object] = None
+    #: arbiter-granted rate share (bytes/s) the plan was sized under, or
+    #: None when the transfer owns the basin.  A capped plan's promise is
+    #: the GRANT, its windows are sized from ``grant x RTT`` (so a
+    #: windowed hop self-paces to its share), and :func:`replan` treats
+    #: share-shaped stalls on a hop that still delivers its grant as the
+    #: arbiter at work — never as a degraded tier (the fleet analogue of
+    #: the §3.2 misdiagnosis family).  Carried through re-derivations.
+    rate_cap_bytes_per_s: Optional[float] = None
     host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S
     accel_digest_bytes_per_s: float = ACCEL_DIGEST_BYTES_PER_S
 
@@ -309,13 +317,21 @@ class TransferPlan:
             hops = ", ".join(self._fmt_hop(h) for h in self.hops)
             place = (f":{self.checksum_placement}"
                      if self.checksum_index is not None else "")
+            cap = ""
+            if self.rate_cap_bytes_per_s is not None:
+                cap = (f" arbiter-capped@"
+                       f"{self.rate_cap_bytes_per_s / 1e6:.1f} MB/s")
             return (f"TransferPlan({hops}; planned="
-                    f"{self.planned_bytes_per_s / 1e6:.1f} MB/s, "
+                    f"{self.planned_bytes_per_s / 1e6:.1f} MB/s{cap}, "
                     f"checksum@{self.checksum_index}{place}{diag})")
         split = (f"split:{self.checksum_placement}"
                  if self.checksum_at_split else "None")
+        cap = ""
+        if self.rate_cap_bytes_per_s is not None:
+            cap = (f" arbiter-capped@"
+                   f"{self.rate_cap_bytes_per_s / 1e6:.1f} MB/s")
         lines = [f"TransferPlan({len(self.branches)} branches, planned="
-                 f"{self.planned_bytes_per_s / 1e6:.1f} MB/s aggregate, "
+                 f"{self.planned_bytes_per_s / 1e6:.1f} MB/s aggregate{cap}, "
                  f"checksum@{split}"]
         shown = set()
         for b in self.branches:
@@ -517,6 +533,7 @@ def _plan_path(
     target: float | None = None,
     max_window_bytes: float | None = None,
     batch_items: int = 1,
+    rate_cap: float | None = None,
 ) -> tuple[list[HopPlan], list[float], float]:
     """Per-hop parameters for one *linear* path.  ``target`` overrides the
     rate the hops are sized against (a branch's allocated share); default
@@ -524,11 +541,16 @@ def _plan_path(
     windowed hop's in-flight window (the host buffer limit).
     ``batch_items`` is the resolved slab-size starting point (see
     :func:`_resolve_batch`); each hop clamps it to its own window and
-    burst capacity."""
+    burst capacity.  ``rate_cap`` is an arbiter grant: windows size from
+    ``grant x RTT`` instead of the link's full BDP, so a capped windowed
+    hop self-paces to its share on a link it does not own — uncapped
+    plans keep the historical BDP sizing bit for bit."""
     tiers = basin.tiers
     n = len(stages)
     if target is None:
         target = _raw_line_rate(basin)
+    if rate_cap is not None:
+        target = min(target, rate_cap)
 
     hops: list[HopPlan] = []
     headroom: list[float] = []          # uncapped sustainable rate per hop
@@ -559,8 +581,21 @@ def _plan_path(
             # ``win / (rtt * (1 + loss))``, so the burst-capacity clamp
             # drops the hop's promise by the same factor (honesty), while
             # a host clamp keeps the promise and surfaces as window-bound
+            # an arbiter-capped plan keeps only its granted share of the
+            # pipe in flight: window credit IS the enforcement mechanism
+            # (K capped peers on one work-conserving link each converge
+            # to exactly their grant — the credit clocks, not goodwill).
+            # A binding grant carries NO jitter headroom: headroom exists
+            # to absorb estimate error on a link the plan owns, but on a
+            # shared link it would overshoot the grant — and K overshoots
+            # sum to a standing queue whose delay lands unevenly (big
+            # windows burst hardest), skewing every class off its share.
+            capped = rate_cap is not None and target * rtt < bdp
+            if capped:
+                bdp = target * rtt
+            slack = 1.0 if capped else WINDOW_HEADROOM
             bdp_eff = bdp * (1.0 + loss)
-            win = bdp_eff * WINDOW_HEADROOM
+            win = bdp_eff * slack
             # coarse admission units (§3.4): the window admits whole
             # items, so once one item is a sizable fraction of the BDP a
             # BDP-sized window degenerates toward stop-and-wait — it
@@ -568,7 +603,7 @@ def _plan_path(
             # predecessors.  Size for both, and throughput stays flat
             # from KiB items to GiB items (the fig4 claim).
             if item_bytes * 4 > bdp_eff:
-                win = (bdp_eff + item_bytes) * WINDOW_HEADROOM
+                win = (bdp_eff + item_bytes) * slack
             if math.isfinite(cap_bytes) and cap_bytes < win:
                 win = cap_bytes
                 hop_cap = min(hop_cap, win / (rtt * (1.0 + loss)))
@@ -666,6 +701,7 @@ def plan_transfer(
     checksum_placement: str = "host",
     host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S,
     accel_digest_bytes_per_s: float = ACCEL_DIGEST_BYTES_PER_S,
+    rate_cap_bytes_per_s: Optional[float] = None,
 ) -> TransferPlan:
     """Derive per-hop staging parameters from the basin model.
 
@@ -707,9 +743,19 @@ def plan_transfer(
     Performance of Data Transfers" — while ``"accel"`` charges the
     batched Pallas digest kernel's rate (``accel_digest_bytes_per_s``),
     taking integrity off the host's critical path.
+
+    ``rate_cap_bytes_per_s`` is an arbiter grant (see
+    :mod:`repro.core.fleet`): every hop is sized against
+    ``min(line rate, grant)``, windowed hops get ``grant x RTT`` windows
+    (the credit clock enforces the share on a link the transfer does not
+    own), the promise becomes the grant, and :func:`replan` will not read
+    share-shaped stalls on a hop still delivering its grant as a degraded
+    tier.  ``None`` (default) plans as the basin's sole occupant.
     """
     if item_bytes <= 0:
         raise ValueError("item_bytes must be > 0")
+    if rate_cap_bytes_per_s is not None and rate_cap_bytes_per_s <= 0:
+        raise ValueError("rate_cap_bytes_per_s must be > 0 or None")
     if not stages:
         raise ValueError("need at least one stage name")
     if checksum_placement not in ("host", "accel"):
@@ -725,7 +771,9 @@ def plan_transfer(
             basin, item_bytes, stages, ordered, max_workers, max_capacity,
             max_window_bytes=_branch_window_clamp(
                 max_window_bytes, basin.tiers[-1].name),
-            batch_items=batch)
+            batch_items=batch, rate_cap=rate_cap_bytes_per_s)
+        if rate_cap_bytes_per_s is not None:
+            planned = min(planned, rate_cap_bytes_per_s)
         checksum_index = None
         if checksum:
             # integrity rides the hop with the most headroom over the plan
@@ -746,12 +794,21 @@ def plan_transfer(
                             max_window_bytes=max_window_bytes,
                             checksum_placement=checksum_placement,
                             batch_policy=batch_items,
+                            rate_cap_bytes_per_s=rate_cap_bytes_per_s,
                             host_digest_bytes_per_s=host_digest_bytes_per_s,
                             accel_digest_bytes_per_s=accel_digest_bytes_per_s)
 
     # -- branching basin: one plan per root->sink path -----------------------
     paths = basin.paths()
     rates = basin.branch_rates()
+    # an arbiter grant below the aggregate scales every branch's share
+    # proportionally — conservation INSIDE the plan is branch_rates' job,
+    # conservation ACROSS plans is the grant's
+    cap_scale = 1.0
+    if rate_cap_bytes_per_s is not None:
+        agg = sum(rates.values())
+        if agg > rate_cap_bytes_per_s > 0:
+            cap_scale = rate_cap_bytes_per_s / agg
     ids = _branch_ids(paths)
     crossing = {t.name: sum(1 for p in paths if t.name in p)
                 for t in basin.tiers}
@@ -760,9 +817,11 @@ def plan_transfer(
         sub = basin.path_basin(path)
         hops, _, planned = _plan_path(
             sub, item_bytes, stages, ordered, max_workers, max_capacity,
-            target=rates[path],
+            target=rates[path] * cap_scale,
             max_window_bytes=_branch_window_clamp(max_window_bytes, bid),
-            batch_items=batch)
+            batch_items=batch,
+            rate_cap=None if rate_cap_bytes_per_s is None
+            else rates[path] * cap_scale)
         branches.append(BranchPlan(
             branch_id=bid, path=path, hops=hops,
             rate_bytes_per_s=planned, weight=0.0,
@@ -780,6 +839,7 @@ def plan_transfer(
                         max_window_bytes=max_window_bytes,
                         checksum_placement=checksum_placement,
                         batch_policy=batch_items,
+                        rate_cap_bytes_per_s=rate_cap_bytes_per_s,
                         host_digest_bytes_per_s=host_digest_bytes_per_s,
                         accel_digest_bytes_per_s=accel_digest_bytes_per_s)
 
@@ -1018,6 +1078,15 @@ def _collect_evidence(plan: TransferPlan,
                                      up_limited=True, busy=True,
                                      candidate_tier=hop.up_tier,
                                      pipe_shared=True))
+                continue
+            # arbiter-capped gate: a fleet member that is DELIVERING its
+            # granted share necessarily waits whenever peers occupy the
+            # rest of the pipe — those stalls are the arbiter at work,
+            # not a degraded tier, and letting them fall through to the
+            # stall ledger would misdiagnose every well-behaved tenant
+            # as bandwidth-bound (the §3.2 misdiagnosis family, fleet
+            # edition).  A capped hop below its grant is still evidence.
+            if plan.rate_cap_bytes_per_s is not None and not underdelivered:
                 continue
             busy = False
             if max(r_up, r_down) >= STALL_THRESHOLD:
@@ -1385,7 +1454,10 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
         checksum_placement="accel" if offload_digest
         else plan.checksum_placement,
         host_digest_bytes_per_s=plan.host_digest_bytes_per_s,
-        accel_digest_bytes_per_s=plan.accel_digest_bytes_per_s)
+        accel_digest_bytes_per_s=plan.accel_digest_bytes_per_s,
+        # the arbiter grant survives re-derivation: a revision must never
+        # silently promote a fleet member back to sole-occupant sizing
+        rate_cap_bytes_per_s=plan.rate_cap_bytes_per_s)
     if obs_rtt:
         # stamp the raw observed estimate on the re-timed hops (the
         # operator surface: describe() shows rtt-est= next to the damped

@@ -58,6 +58,18 @@ class TelemetryRegistry:
         self._aggregates: dict[str, LayerSummary] = {}
         self._recent: collections.deque[tuple[str, "TransferReport"]] = \
             collections.deque(maxlen=keep_recent)
+        # latest fleet-arbitration snapshot (FleetArbiter.stats()):
+        # aggregate granted rate + per-class weighted-fairness view of a
+        # multi-tenant basin; None until an arbiter records one
+        self._fleet: Optional[dict] = None
+
+    def record_fleet(self, stats: dict) -> None:
+        """Record the latest fleet arbitration snapshot (pushed by
+        :class:`~repro.core.fleet.FleetArbiter` on every rebalance); it
+        rides :meth:`to_json` / :meth:`append_jsonl` so JSONL trends
+        cover multi-tenant runs."""
+        with self._lock:
+            self._fleet = dict(stats)
 
     def record(self, layer: str, report: "TransferReport") -> None:
         with self._lock:
@@ -104,6 +116,15 @@ class TelemetryRegistry:
                 f"{name:>10}: {s.transfers} transfers, {s.items} items, "
                 f"{s.throughput_bytes_per_s / 1e6:.1f} MB/s, "
                 f"worst gap {gap}")
+        with self._lock:
+            fleet = self._fleet
+        if fleet is not None:
+            lines.append(
+                f"{'fleet':>10}: {fleet.get('live', 0)} live, "
+                f"{fleet.get('queued', 0)} queued, "
+                f"{fleet.get('aggregate_granted_bytes_per_s', 0.0) / 1e6:.1f}"
+                f" MB/s granted, "
+                f"fairness {fleet.get('fairness_index', 1.0):.3f}")
         return "\n".join(lines) or "(no transfers recorded)"
 
     # -- serialization (the dashboard surface) --------------------------------
@@ -121,12 +142,14 @@ class TelemetryRegistry:
                        "throughput_bytes_per_s": s.throughput_bytes_per_s}
                 for name, s in self._aggregates.items()
             }
+            fleet = self._fleet
         gaps = [d["worst_fidelity_gap"] for d in layers.values()
                 if d["worst_fidelity_gap"] is not None]
-        return json.dumps(
-            {"version": 1, "layers": layers,
-             "worst_fidelity_gap": max(gaps) if gaps else None},
-            indent=indent, sort_keys=True)
+        payload = {"version": 1, "layers": layers,
+                   "worst_fidelity_gap": max(gaps) if gaps else None}
+        if fleet is not None:
+            payload["fleet"] = fleet
+        return json.dumps(payload, indent=indent, sort_keys=True)
 
     @classmethod
     def from_json(cls, text: str) -> "TelemetryRegistry":
@@ -141,6 +164,7 @@ class TelemetryRegistry:
                 bytes=int(d["bytes"]),
                 elapsed_s=float(d["elapsed_s"]),
                 worst_fidelity_gap=d.get("worst_fidelity_gap"))
+        reg._fleet = data.get("fleet")
         return reg
 
     def dump_json(self, path: str, *, indent: Optional[int] = 2) -> None:
@@ -171,6 +195,7 @@ class TelemetryRegistry:
         with self._lock:
             self._aggregates.clear()
             self._recent.clear()
+            self._fleet = None
 
 
 _global = TelemetryRegistry()

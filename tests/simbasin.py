@@ -151,7 +151,8 @@ class SimulatedTier:
                  latency_s: float = 0.0, jitter_s: float = 0.0,
                  seed: int = 0, name: str = "sim-tier",
                  wall_pacing_s: float = 1e-4,
-                 wall_scale: float = 0.0):
+                 wall_scale: float = 0.0,
+                 wall_sync: float = 0.0):
         self._clock = clock
         self.name = name
         self.bandwidth_bytes_per_s = float(bandwidth_bytes_per_s)
@@ -171,6 +172,19 @@ class SimulatedTier:
         # each serve's virtual duration; stall *ratios* then separate
         # cleanly per branch while all absolute timing stays virtual.
         self.wall_scale = float(wall_scale)
+        # fleet scenarios: a tier shared by SEVERAL independent transfers.
+        # The default service model assigns link slots in wall call order
+        # (fine for one transfer — the result is interleaving-invariant;
+        # wrong across transfers — a window-starved flow's far-future
+        # transmissions must not crowd out a peer transmitting NOW).
+        # wall_sync > 0 (wall seconds per virtual second) switches to a
+        # contended model: callers are wall-gated into virtual-arrival
+        # order and served against a busy frontier, so each flow's share
+        # of the pipe follows its *window pacing* — the arbiter's
+        # enforcement mechanism — rather than thread scheduling.
+        self.wall_sync = float(wall_sync)
+        self._wall_anchor: Optional[tuple[float, float]] = None
+        self._busy = 0.0                # contended-mode service frontier
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
         self._cum_tx = 0.0              # total transmit work accepted so far
@@ -211,6 +225,20 @@ class SimulatedTier:
         # worker's completion must not delay this one's start — that is
         # precisely how concurrency overlaps latency)
         arrival = self._clock.thread_now()
+        if self.wall_sync > 0.0:
+            # contended mode, step 1: gate this caller into virtual-
+            # arrival order.  All concurrent flows map their virtual
+            # arrivals onto one shared wall timeline (wall_sync seconds
+            # of wall per virtual second); a flow whose window pacing
+            # puts its next item far in the virtual future sleeps here
+            # until the wall catches up, so call order ~ arrival order.
+            with self._lock:
+                if self._wall_anchor is None:
+                    self._wall_anchor = (time.monotonic(), arrival)
+            w0, v0 = self._wall_anchor
+            delay = w0 + self.wall_sync * (arrival - v0) - time.monotonic()
+            if delay > 0:
+                time.sleep(min(delay, 1.0))
         with self._lock:
             shift = self._shifts.pop(self._served, None)
             if shift:
@@ -230,7 +258,17 @@ class SimulatedTier:
             # across wall-clock thread interleavings — determinism beats
             # modeling pipe idle gaps, which none of the scripted
             # scenarios exercise.)
-            tx_done = max(arrival + tx, self._first_arrival + self._cum_tx)
+            if self.wall_sync > 0.0:
+                # contended mode, step 2: a busy frontier in service
+                # order.  With callers gated into arrival order above,
+                # this is FIFO-by-arrival: every flow sees the same
+                # queueing delay, so per-flow rates settle proportional
+                # to their windows — grant enforcement on the wire.
+                start = max(arrival, self._busy)
+                tx_done = self._busy = start + tx
+            else:
+                tx_done = max(arrival + tx,
+                              self._first_arrival + self._cum_tx)
             # per-item extra delay decided under the SAME lock acquisition
             # as the serve counter, so which item pays it is a function of
             # the script, not of thread interleaving (SimulatedLink loss)
@@ -259,25 +297,40 @@ class SimulatedLink(SimulatedTier):
     scenario script (and must match the plan's ``HopPlan.rtt_s`` for the
     simulation to mirror the model).
 
-    Two scripted impairments, both deterministic:
+    Three scripted impairments, all deterministic:
 
     * ``loss_every=k`` — every k-th served item is "lost" and pays one
       full extra RTT (the retransmission timeout of a stop-and-wait
       recovery; coarse, but it injects exactly the RTT-proportional
       penalty §3.2 attributes to loss on long links),
-    * ``shift_at(i, rtt_s=..., bandwidth_bytes_per_s=..., loss_every=...)``
-      — a per-segment regime shift from the i-th served item on (a route
-      change mid-transfer lengthening the RTT, a congested peering hop
-      cutting the rate).
+    * ``loss_rate=p`` — *stochastic* loss: each served item is lost with
+      probability ``p``, drawn from a dedicated per-link seeded PRNG in
+      service order (so a run is still a pure function of the script —
+      "stochastic" describes the model, not the reproducibility).  The
+      draw happens only when ``loss_rate > 0``, so every existing
+      ``loss_every`` scenario stays byte-identical.  Both impairments
+      may be active at once; a scripted loss preempts the draw for that
+      item (it is already paying the RTT),
+    * ``shift_at(i, rtt_s=..., bandwidth_bytes_per_s=..., loss_every=...,
+      loss_rate=...)`` — a per-segment regime shift from the i-th served
+      item on (a route change mid-transfer lengthening the RTT, a
+      congested peering hop cutting the rate or turning lossy).
     """
 
-    _LINK_PARAMS = {"rtt_s", "loss_every"}
+    _LINK_PARAMS = {"rtt_s", "loss_every", "loss_rate"}
 
     def __init__(self, clock: VirtualClock, *, bandwidth_bytes_per_s: float,
                  rtt_s: float = 0.0, loss_every: int = 0,
-                 name: str = "sim-link", **kwargs):
+                 loss_rate: float = 0.0, name: str = "sim-link", **kwargs):
+        if not 0.0 <= loss_rate < 1.0:
+            raise ValueError(f"loss_rate must be in [0, 1), got {loss_rate}")
         self.rtt_s = float(rtt_s)
         self.loss_every = int(loss_every)
+        self.loss_rate = float(loss_rate)
+        # dedicated PRNG for loss draws, seeded from the link's seed:
+        # sharing the jitter RNG would shift jitter draws and silently
+        # change every existing scripted scenario
+        self._loss_rng = random.Random(0x10551 ^ int(kwargs.get("seed", 0)))
         #: cumulative scripted retransmissions — the counter a staging hop
         #: reads through its channel handle (Stage reports the delta it
         #: observed, so replan can price the loss regime)
@@ -308,6 +361,10 @@ class SimulatedLink(SimulatedTier):
                 and self.rtt_s > 0:
             self.retransmits += 1
             return self.rtt_s       # retransmit: one extra round trip
+        if self.loss_rate > 0 and self.rtt_s > 0 \
+                and self._loss_rng.random() < self.loss_rate:
+            self.retransmits += 1
+            return self.rtt_s       # stochastic loss: same RTT penalty
         return 0.0
 
 
@@ -396,3 +453,38 @@ class SimHarness:
         config_kwargs.setdefault("checksum", False)
         return UnifiedDataMover(MoverConfig(**config_kwargs), plan=plan,
                                 clock=self.clock)
+
+    def arbiter(self, basin, **kwargs):
+        """A :class:`~repro.core.fleet.FleetArbiter` stamping its grant
+        history from this harness's virtual clock, so time-averaged
+        promises (``Admission.mean_granted``) are deterministic and
+        comparable with simulated transfer elapsed times."""
+        from repro.core.fleet import FleetArbiter
+        return FleetArbiter(basin, clock=self.clock, **kwargs)
+
+    def run_concurrent(self, *thunks):
+        """Run ``thunks`` on concurrent threads against this harness's
+        single virtual clock and return their results in order — the
+        fleet scenario shape: N transfers sharing simulated tiers, each
+        driven by its own thread, all timing virtual.  Timelines are
+        anchored at the current virtual time; the first exception (if
+        any) is re-raised after every thread has joined."""
+        results: list = [None] * len(thunks)
+        errors: list = []
+        self.clock.on_threads_spawn()
+
+        def runner(i, fn):
+            try:
+                results[i] = fn()
+            except BaseException as exc:  # noqa: BLE001 - reraised below
+                errors.append(exc)
+
+        threads = [threading.Thread(target=runner, args=(i, fn), daemon=True)
+                   for i, fn in enumerate(thunks)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        return results

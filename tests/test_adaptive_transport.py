@@ -207,6 +207,26 @@ def test_loss_yields_loss_bound_verdict_and_recovers():
             >= 0.75 * revised.planned_bytes_per_s)
 
 
+def test_stochastic_loss_yields_loss_bound_with_measured_rate():
+    """Seeded per-item stochastic loss (the fleet satellite's second loss
+    model) lands in the same diagnosis family as scripted loss: the
+    measured retransmit fraction becomes the hop's loss estimate, and the
+    verdict names the lossy branch."""
+    plan = _plan(_line_basin())
+    h = SimHarness()
+    n = 160
+    link = h.link(bandwidth_bytes_per_s=LINE, rtt_s=RTT, loss_rate=0.5,
+                  seed=11)
+    rep, _ = _run(plan, link, n, h)
+    assert rep.items == n
+    assert 0 < link.retransmits < n
+
+    revised = replan(plan, rep.stage_reports, damping=1.0)
+    assert revised.diagnosis == {"move": "loss-bound(bb->dst)"}
+    assert revised.hops[0].loss_rate == pytest.approx(
+        link.retransmits / n)
+
+
 def test_modeled_loss_deepens_window_and_lowers_promise_upfront():
     """A link whose loss regime is KNOWN at plan time gets the deepened
     window, the staffed pool, and the honest promise up front — no

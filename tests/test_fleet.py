@@ -1,0 +1,425 @@
+"""Fleet-scale basin arbitration (the PR 8 tentpole): weighted QoS
+shares, admission control, queue promotion, load shedding via basin
+revision, the arbiter-capped replan gate, telemetry fleet rows, and the
+zero-drain concurrent end-to-end scenario on the simulated basin.
+
+The division of labor with test_fleet_properties.py: that file sweeps
+randomized fleets for the conservation/monotonicity invariants; this one
+pins exact arithmetic and the stateful paths (promotion takes share,
+shedding, rebalance recovery, live transfers)."""
+
+import json
+import threading
+
+import pytest
+
+from simbasin import SimHarness
+
+from repro.core.basin import DrainageBasin, GBPS, Link, MIB, Tier, TierKind
+from repro.core.fleet import DEFAULT_CLASSES, Admission, FleetArbiter
+from repro.core.planner import plan_transfer, replan
+from repro.core.staging import StageReport
+from repro.core.telemetry import TelemetryRegistry
+
+ITEM = 1 * MIB
+L = 100 * GBPS                  # the shared channel's line rate
+
+
+def _channel_basin(link_bps=L, rtt_s=0.005):
+    """Fat endpoints around one shared channel link: the tightest element
+    is the link, so every conservation question is about L."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 2 * link_bps),
+         Tier("dst", TierKind.SINK, 2 * link_bps)],
+        [Link("src", "dst", link_bps, rtt_s=rtt_s)])
+
+
+def _admit_fleet(arb, specs):
+    """specs: (name, qos[, kwargs]) -> dict of admissions, all asserted in."""
+    out = {}
+    for spec in specs:
+        name, qos, kw = (spec if len(spec) == 3 else (*spec, {}))
+        adm = arb.admit(name, ITEM, qos=qos, stages=("move",), **kw)
+        assert adm.status == "admitted", (name, adm.status, adm.reason)
+        out[name] = adm
+    return out
+
+
+# -- weighted shares ----------------------------------------------------------
+
+
+def test_one_member_per_class_splits_line_by_weight():
+    """Four members, one per default class, saturate one channel: the
+    aggregate is exactly L and each grant is exactly its weight's share
+    (8:4:2:1), with perfect weighted fairness."""
+    arb = FleetArbiter(_channel_basin())
+    adms = _admit_fleet(arb, [("a", "interactive"), ("b", "priority"),
+                              ("c", "bulk"), ("d", "scavenger")])
+    grants = arb.grants()
+    total_w = sum(DEFAULT_CLASSES.values())       # 15
+    assert sum(grants.values()) == pytest.approx(L)
+    for name, qos in (("a", "interactive"), ("b", "priority"),
+                      ("c", "bulk"), ("d", "scavenger")):
+        assert grants[name] == pytest.approx(
+            L * DEFAULT_CLASSES[qos] / total_w)
+        assert adms[name].granted_bytes_per_s == grants[name]
+    assert arb.weighted_fairness() == pytest.approx(1.0)
+
+
+def test_single_member_gets_the_whole_line():
+    arb = FleetArbiter(_channel_basin())
+    (adm,) = _admit_fleet(arb, [("solo", "scavenger")]).values()
+    assert adm.granted_bytes_per_s == pytest.approx(L)
+    assert adm.plan.planned_bytes_per_s <= L * (1 + 1e-9)
+
+
+def test_granted_plan_windows_enforce_the_grant():
+    """The grant is enforced by the window, not just recorded: a capped
+    plan's windowed hop carries exactly grant x RTT of credit — no
+    jitter headroom, which on a shared link would overshoot the grant
+    and breach conservation on the wire — and describe() names the
+    cap."""
+    rtt = 0.005
+    arb = FleetArbiter(_channel_basin(rtt_s=rtt))
+    adms = _admit_fleet(arb, [("a", "interactive"), ("b", "interactive")])
+    for adm in adms.values():
+        grant = adm.granted_bytes_per_s
+        assert grant == pytest.approx(L / 2)
+        hop = next(hp for hp in adm.plan.hops if hp.rtt_s > 0)
+        assert hop.window_bytes == pytest.approx(grant * rtt)
+        assert adm.plan.rate_cap_bytes_per_s == pytest.approx(grant)
+        assert "arbiter-capped" in adm.plan.describe()
+
+
+def test_floor_below_fair_share_never_inflates_the_grant():
+    """An admission floor is a guarantee, not a bonus: a scavenger whose
+    floor sits below its fair share receives exactly the floorless
+    allocation."""
+    floorless = FleetArbiter(_channel_basin())
+    _admit_fleet(floorless, [("a", "interactive"), ("b", "priority"),
+                             ("c", "bulk"), ("d", "scavenger")])
+    floored = FleetArbiter(_channel_basin())
+    _admit_fleet(floored, [("a", "interactive"), ("b", "priority"),
+                           ("c", "bulk"),
+                           ("d", "scavenger",
+                            {"min_bytes_per_s": 0.05 * L})])
+    assert floored.grants() == pytest.approx(floorless.grants())
+    assert floored.grants()["d"] == pytest.approx(L / 15)
+
+
+# -- admission control --------------------------------------------------------
+
+
+def test_unfittable_min_ask_queues_and_never_perturbs_the_fleet():
+    arb = FleetArbiter(_channel_basin())
+    _admit_fleet(arb, [("a", "interactive"), ("b", "priority"),
+                       ("c", "bulk"), ("d", "scavenger")])
+    before = arb.grants()
+    greedy = arb.admit("greedy", ITEM, qos="bulk",
+                       min_bytes_per_s=0.3 * L, stages=("move",))
+    assert greedy.status == "queued"
+    assert greedy.reason.startswith("granting min")
+    assert greedy.plan is None
+    assert arb.grants() == before
+    assert arb.stats()["queued"] == 1
+
+
+def test_queue_false_rejects_instead():
+    arb = FleetArbiter(_channel_basin())
+    _admit_fleet(arb, [("a", "interactive"), ("b", "priority"),
+                       ("c", "bulk"), ("d", "scavenger")])
+    before = arb.grants()
+    adm = arb.admit("greedy", ITEM, qos="bulk", min_bytes_per_s=0.3 * L,
+                    queue=False, stages=("move",))
+    assert adm.status == "rejected"
+    assert arb.grants() == before
+    assert arb.stats()["queued"] == 0
+
+
+def test_ask_beyond_path_capability_rejected_even_on_empty_fleet():
+    arb = FleetArbiter(_channel_basin())
+    adm = arb.admit("impossible", ITEM, qos="interactive",
+                    min_bytes_per_s=2 * L, stages=("move",))
+    assert adm.status == "rejected"
+    assert "capability" in adm.reason
+
+
+def test_duplicate_name_and_unknown_qos_raise():
+    arb = FleetArbiter(_channel_basin())
+    _admit_fleet(arb, [("a", "bulk")])
+    with pytest.raises(ValueError, match="already exists"):
+        arb.admit("a", ITEM, qos="bulk", stages=("move",))
+    with pytest.raises(ValueError, match="unknown QoS"):
+        arb.admit("x", ITEM, qos="platinum", stages=("move",))
+
+
+def test_promotion_requires_the_fair_share_to_reach_the_floor():
+    """A queued ask promotes only when its floorless fair share reaches
+    its floor — one release may not be enough.  greedy (bulk, w=2,
+    min 0.3L): after releasing a, its share is 2/9 L (< 0.3L, still
+    queued); after releasing b too, 2/5 L (>= 0.3L, admitted)."""
+    arb = FleetArbiter(_channel_basin())
+    adms = _admit_fleet(arb, [("a", "interactive"), ("b", "priority"),
+                              ("c", "bulk"), ("d", "scavenger")])
+    greedy = arb.admit("greedy", ITEM, qos="bulk",
+                       min_bytes_per_s=0.3 * L, stages=("move",))
+    assert greedy.status == "queued"
+
+    adms["a"].release()
+    assert greedy.status == "queued"          # 2/9 L < 0.3 L
+    assert "greedy" not in arb.grants()
+
+    adms["b"].release()                       # 2/5 L >= 0.3 L
+    assert greedy.status == "admitted"
+    grants = arb.grants()
+    assert grants["greedy"] == pytest.approx(0.4 * L)
+    assert grants["c"] == pytest.approx(0.4 * L)
+    assert grants["d"] == pytest.approx(0.2 * L)
+    assert greedy.plan is not None
+    assert greedy.plan.rate_cap_bytes_per_s == pytest.approx(0.4 * L)
+
+
+def test_releasing_a_queued_ask_withdraws_it():
+    arb = FleetArbiter(_channel_basin())
+    _admit_fleet(arb, [("a", "interactive")])
+    greedy = arb.admit("greedy", ITEM, qos="bulk",
+                       min_bytes_per_s=0.9 * L, stages=("move",))
+    assert greedy.status == "queued"
+    greedy.release()
+    assert arb.stats()["queued"] == 0
+    assert arb.grants() == {"a": pytest.approx(L)}
+
+
+# -- load shedding via basin revision -----------------------------------------
+
+
+def test_capacity_loss_sheds_the_lowest_class_floor_first():
+    """Admission keeps the floors feasible on the basin they were
+    admitted against, so shedding only becomes reachable when the basin
+    is revised under the fleet's feet: rebalance(basin=degraded) with
+    the channel at half rate leaves the floors oversubscribed, the
+    higher class keeps its floor, and the lower class is cut to the
+    remainder and marked shed — but stays live."""
+    arb = FleetArbiter(_channel_basin())
+    adms = _admit_fleet(arb, [
+        ("ckpt", "bulk", {"min_bytes_per_s": 0.4 * L}),
+        ("scav", "scavenger", {"min_bytes_per_s": 0.3 * L})])
+    assert arb.grants() == {"ckpt": pytest.approx(2 * L / 3),
+                            "scav": pytest.approx(L / 3)}
+    assert arb.stats()["shed"] == []
+
+    arb.rebalance(basin=_channel_basin(link_bps=L / 2))
+    grants = arb.grants()
+    assert grants["ckpt"] == pytest.approx(0.4 * L)   # floor honored
+    assert grants["scav"] == pytest.approx(0.1 * L)   # cut below its floor
+    assert adms["scav"].shed and not adms["ckpt"].shed
+    assert arb.stats()["shed"] == ["scav"]
+    assert adms["scav"].plan.rate_cap_bytes_per_s == pytest.approx(0.1 * L)
+    assert "SHED" in arb.describe()
+
+    # capacity comes back: the shed member recovers, the flag clears
+    arb.rebalance(basin=_channel_basin())
+    assert arb.grants() == {"ckpt": pytest.approx(2 * L / 3),
+                            "scav": pytest.approx(L / 3)}
+    assert arb.stats()["shed"] == []
+
+
+def test_rebalance_rejects_a_different_topology():
+    arb = FleetArbiter(_channel_basin())
+    other = DrainageBasin(
+        [Tier("elsewhere", TierKind.SOURCE, L),
+         Tier("dst", TierKind.SINK, L)],
+        [Link("elsewhere", "dst", L)])
+    with pytest.raises(ValueError, match="topology"):
+        arb.rebalance(basin=other)
+
+
+# -- the arbiter-capped replan gate -------------------------------------------
+
+
+def _capped_report(rate, *, n_items=360):
+    bytes_ = n_items * 4 * MIB
+    return StageReport(
+        name="move", items=n_items, bytes=bytes_,
+        elapsed_s=bytes_ / rate, stall_up_s=0.0,
+        stall_down_s=0.7 * bytes_ / rate, errors=0,
+        # tight sink service samples: the bandwidth-bound signature
+        service_down_s=[0.026, 0.02601] * 10)
+
+
+def test_replan_holds_verdicts_for_a_capped_plan_delivering_its_grant():
+    """A fleet member pinned at its grant stalls downstream by
+    construction — conservation at work, not degradation.  replan on a
+    capped plan delivering the grant returns no verdict and keeps the
+    cap; the same evidence on an UNCAPPED plan indicts the pipe."""
+    basin = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 10 * GBPS),
+        Tier("buf", TierKind.BURST_BUFFER, 100 * GBPS, latency_s=1e-5),
+        Tier("dst", TierKind.SINK, 40 * GBPS, latency_s=1e-4)])
+    cap = 6 * GBPS
+    capped = plan_transfer(basin, 4 * MIB, stages=("move",),
+                           rate_cap_bytes_per_s=cap)
+    assert capped.planned_bytes_per_s == pytest.approx(cap)
+    report = _capped_report(1.007 * cap)      # delivering the grant
+    revised = replan(capped, [report], damping=1.0)
+    assert revised.diagnosis == {}
+    assert revised.rate_cap_bytes_per_s == pytest.approx(cap)
+    assert revised.planned_bytes_per_s == pytest.approx(cap)
+
+    uncapped = plan_transfer(basin, 4 * MIB, stages=("move",))
+    loud = replan(uncapped, [report], damping=1.0)
+    assert loud.diagnosis != {}
+
+
+def test_replan_still_fires_when_a_capped_member_underdelivers():
+    """The gate is a grant-awareness filter, not a gag: delivery far
+    below the member's OWN grant is a real symptom and diagnoses as
+    usual, with the cap carried onto the rebuilt plan."""
+    basin = DrainageBasin([
+        Tier("src", TierKind.SOURCE, 10 * GBPS),
+        Tier("buf", TierKind.BURST_BUFFER, 100 * GBPS, latency_s=1e-5),
+        Tier("dst", TierKind.SINK, 40 * GBPS, latency_s=1e-4)])
+    cap = 6 * GBPS
+    capped = plan_transfer(basin, 4 * MIB, stages=("move",),
+                           rate_cap_bytes_per_s=cap)
+    revised = replan(capped, [_capped_report(0.18 * cap, n_items=64)],
+                     damping=1.0)
+    assert revised.diagnosis != {}
+    assert revised.rate_cap_bytes_per_s == pytest.approx(cap)
+
+
+def test_rate_cap_validation():
+    basin = _channel_basin()
+    with pytest.raises(ValueError, match="rate_cap"):
+        plan_transfer(basin, ITEM, stages=("move",),
+                      rate_cap_bytes_per_s=0.0)
+
+
+# -- grant history / time-averaged promise ------------------------------------
+
+
+def test_mean_granted_integrates_the_grant_step_function():
+    """The honest promise for a transfer whose share moved mid-stream is
+    the time-average of the grant: solo at L for 1 s, then halved when a
+    peer arrives for 1 s -> 0.75 L over the window."""
+    h = SimHarness()
+    arb = h.arbiter(_channel_basin())
+    a = arb.admit("a", ITEM, qos="bulk", stages=("move",))
+    h.clock.advance(1.0)
+    arb.admit("b", ITEM, qos="bulk", stages=("move",))
+    h.clock.advance(1.0)
+    assert a.granted_bytes_per_s == pytest.approx(L / 2)
+    assert a.mean_granted(0.0, 2.0) == pytest.approx(0.75 * L)
+    assert a.mean_granted(1.0, 2.0) == pytest.approx(0.5 * L)
+
+
+# -- telemetry: the fleet row (satellite 6) -----------------------------------
+
+
+def test_fleet_stats_ride_the_telemetry_surfaces(tmp_path):
+    reg = TelemetryRegistry()
+    arb = FleetArbiter(_channel_basin(), telemetry=reg)
+    _admit_fleet(arb, [("a", "interactive"), ("b", "scavenger")])
+
+    payload = json.loads(reg.to_json())
+    fleet = payload["fleet"]
+    assert fleet["live"] == 2
+    assert fleet["queued"] == 0
+    assert fleet["aggregate_granted_bytes_per_s"] == pytest.approx(L)
+    assert fleet["fairness_index"] == pytest.approx(1.0)
+    assert fleet["classes"]["interactive"]["granted_bytes_per_s"] == (
+        pytest.approx(8 * L / 9))
+
+    # the row survives the round trip and shows on the operator summary
+    restored = TelemetryRegistry.from_json(reg.to_json())
+    assert json.loads(restored.to_json())["fleet"] == fleet
+    assert "fleet" in reg.format_summary()
+    assert "2 live" in reg.format_summary()
+
+    path = tmp_path / "trend.jsonl"
+    reg.append_jsonl(str(path))
+    row = json.loads(path.read_text().splitlines()[-1])
+    assert row["fleet"]["live"] == 2
+
+    reg.clear()
+    assert "fleet" not in json.loads(reg.to_json())
+
+
+def test_every_membership_change_publishes_a_fresh_row():
+    reg = TelemetryRegistry()
+    arb = FleetArbiter(_channel_basin(), telemetry=reg)
+    adms = _admit_fleet(arb, [("a", "bulk"), ("b", "bulk")])
+    assert json.loads(reg.to_json())["fleet"]["live"] == 2
+    adms["a"].release()
+    fleet = json.loads(reg.to_json())["fleet"]
+    assert fleet["live"] == 1
+    assert fleet["aggregate_granted_bytes_per_s"] == pytest.approx(L)
+
+
+# -- mover integration: the zero-drain concurrent scenario --------------------
+
+
+def test_mover_refuses_a_non_admitted_fleet_handle():
+    arb = FleetArbiter(_channel_basin())
+    _admit_fleet(arb, [("a", "interactive")])
+    queued = arb.admit("q", ITEM, qos="bulk", min_bytes_per_s=0.9 * L,
+                       stages=("move",))
+    assert queued.status == "queued"
+    h = SimHarness()
+    with pytest.raises(ValueError, match="queued"):
+        h.mover().bulk_transfer(
+            iter([b"\0" * 64]), lambda _: None,
+            transforms=[("move", lambda x: x)], fleet=queued)
+
+
+def test_two_tenants_share_one_channel_zero_drain():
+    """The tentpole end to end: tenant A starts alone at the full line,
+    tenant B admits mid-stream, the arbiter pushes A's halved grant
+    through the zero-drain applier (A's report counts >= 1 replan), both
+    meet their TIME-AVERAGED promises on the shared simulated channel,
+    and finishing auto-releases every grant."""
+    h = SimHarness()
+    arb = h.arbiter(_channel_basin())
+    # contended-link mode: wall-gate callers into virtual-arrival order
+    # so per-flow rates settle in proportion to their granted windows
+    link = h.link(bandwidth_bytes_per_s=L, rtt_s=0.005,
+                  wall_sync=10.0, wall_pacing_s=0.0)
+
+    adm_a = arb.admit("A", ITEM, qos="interactive", stages=("move",))
+    b_go = threading.Event()
+    sunk_a = [0]
+
+    def sink_a(item):
+        sunk_a[0] += 1
+        if sunk_a[0] == 24:
+            b_go.set()
+
+    def run_a():
+        src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                              wall_pacing_s=0.0), 96, ITEM)
+        return h.mover().bulk_transfer(
+            iter(src), sink_a,
+            transforms=[("move", h.service(link))], fleet=adm_a)
+
+    def run_b():
+        b_go.wait(timeout=60)
+        adm_b = arb.admit("B", ITEM, qos="bulk", stages=("move",))
+        assert adm_b.status == "admitted", adm_b.reason
+        src = h.source(h.tier(bandwidth_bytes_per_s=1000 * GBPS,
+                              wall_pacing_s=0.0, seed=3), 96, ITEM)
+        rep = h.mover().bulk_transfer(
+            iter(src), lambda _: None,
+            transforms=[("move", h.service(link))], fleet=adm_b)
+        return rep, adm_b
+
+    rep_a, (rep_b, adm_b) = h.run_concurrent(run_a, run_b)
+    assert rep_a.items == 96 and rep_b.items == 96
+    # A's grant moved mid-stream: the rebalance reached the live stage
+    assert rep_a.replans >= 1
+    # both met their time-averaged promises on the contended channel
+    assert abs(rep_a.fidelity_gap) < 0.25, rep_a.fidelity_gap
+    assert abs(rep_b.fidelity_gap) < 0.25, rep_b.fidelity_gap
+    # completion auto-released both grants
+    assert arb.grants() == {}
+    assert adm_a.granted_bytes_per_s == 0.0
+    assert adm_b.granted_bytes_per_s == 0.0

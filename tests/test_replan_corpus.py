@@ -57,9 +57,13 @@ def replay(spec: dict):
     reports may carry ``stall_window_s``.  ``checksum`` /
     ``checksum_placement`` / ``host_digest_gbps`` record the integrity
     budget the plan carried (a host-compute-bound fixture captures a
-    digest placed on a too-slow host)."""
+    digest placed on a too-slow host).  ``rate_cap_gbps`` records an
+    arbiter grant the plan ran under (a fleet fixture captures how the
+    cap gates — or deliberately does not gate — the stall verdicts)."""
     basin = build_basin(spec)
     kwargs = {}
+    if "rate_cap_gbps" in spec:
+        kwargs["rate_cap_bytes_per_s"] = spec["rate_cap_gbps"] * GBPS
     if spec.get("checksum"):
         kwargs["checksum"] = True
         kwargs["checksum_placement"] = spec.get("checksum_placement",
@@ -78,7 +82,7 @@ def replay(spec: dict):
 
 
 def test_corpus_is_present():
-    assert len(FIXTURES) >= 11, (
+    assert len(FIXTURES) >= 13, (
         f"expected the recorded-report corpus under {DATA_DIR}")
 
 

@@ -10,7 +10,7 @@ time bounds instead of loose real-time ratios.
 
 import pytest
 
-from simbasin import SimHarness, SimulatedTier, VirtualClock
+from simbasin import SimHarness, SimulatedLink, SimulatedTier, VirtualClock
 
 from repro.core.basin import DrainageBasin, GBPS, MIB, Tier, TierKind
 from repro.core.planner import (MAX_WORKERS, diagnose_service, plan_transfer,
@@ -369,3 +369,71 @@ def test_online_replan_checksum_spans_chunks(simbasin):
             checksum=True, replan_every_items=chunk)
 
     assert run(0).checksum == run(16).checksum
+
+
+# -- stochastic link loss (loss_rate) ----------------------------------------
+
+def test_link_loss_rate_is_deterministic_per_seed():
+    """Stochastic loss is a seeded model: identical script, identical
+    timeline and retransmit count; a different seed draws differently."""
+    def run(seed):
+        clock = VirtualClock()
+        link = SimulatedLink(clock, bandwidth_bytes_per_s=1e9, rtt_s=0.01,
+                             loss_rate=0.2, seed=seed)
+        return [link.serve(10_000) for _ in range(200)], link.retransmits
+
+    times, lost = run(7)
+    assert (times, lost) == run(7)
+    assert 0 < lost < 200
+    assert lost / 200 == pytest.approx(0.2, abs=0.1)
+    assert run(8) != (times, lost)
+
+
+def test_link_loss_rate_zero_is_byte_identical_to_scripted_only():
+    """loss_rate=0 never touches the loss PRNG, so every pre-existing
+    loss_every scenario replays identically with the parameter present."""
+    def run(**kw):
+        clock = VirtualClock()
+        link = SimulatedLink(clock, bandwidth_bytes_per_s=1e9, rtt_s=0.01,
+                             loss_every=5, jitter_s=1e-4, seed=3, **kw)
+        return [link.serve(4096) for _ in range(100)], link.retransmits
+
+    assert run() == run(loss_rate=0.0)
+
+
+def test_link_loss_rate_preempted_by_scripted_loss():
+    """An item already paying a scripted retransmit is not drawn again:
+    with loss_every=1 every item is scripted-lost, whatever loss_rate."""
+    clock = VirtualClock()
+    link = SimulatedLink(clock, bandwidth_bytes_per_s=1e9, rtt_s=0.01,
+                         loss_every=1, loss_rate=0.9, seed=1)
+    for _ in range(50):
+        link.serve(1000)
+    assert link.retransmits == 50
+
+
+def test_link_loss_rate_charges_nothing_without_rtt():
+    clock = VirtualClock()
+    link = SimulatedLink(clock, bandwidth_bytes_per_s=1e9, loss_rate=0.5)
+    for _ in range(50):
+        link.serve(1000)
+    assert link.retransmits == 0
+
+
+def test_link_loss_rate_validated():
+    with pytest.raises(ValueError):
+        SimulatedLink(VirtualClock(), bandwidth_bytes_per_s=1e9,
+                      loss_rate=1.0)
+
+
+def test_link_loss_rate_shift_at_turns_loss_on_mid_stream():
+    clock = VirtualClock()
+    link = SimulatedLink(clock, bandwidth_bytes_per_s=1e9, rtt_s=0.01,
+                         seed=1)
+    link.shift_at(50, loss_rate=0.5)
+    for _ in range(50):
+        link.serve(1000)
+    assert link.retransmits == 0
+    for _ in range(50):
+        link.serve(1000)
+    assert link.retransmits > 0
