@@ -1,0 +1,240 @@
+"""Fault-recovery chaos suite: the survive layer's acceptance claims,
+deterministic in virtual time.
+
+Scripted chaos — a mid-transfer link outage ridden out by hop retries
+AND one permanent branch death failed over mid-stream — must not cost
+correctness or (much) speed:
+
+  fault_recovery/chaos      outage + branch death; completes, stream
+                            checksum verified against ground truth
+  fault_recovery/naive      the restart-from-zero baseline: fail-hard
+                            run to the death, then the whole stream
+                            again over the survivor
+  fault_recovery/resume     a killed bulk transfer resumed from its
+                            durable ledger
+
+Hard gates (exit nonzero):
+  * the chaos run completes with the exact ground-truth checksum and a
+    ``branch-dead`` verdict on the corpse;
+  * failover beats the naive restart-from-zero baseline by >= 1.5x;
+  * the ledger resume re-moves < 10% of the already-verified bytes.
+"""
+
+import dataclasses
+import hashlib
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+from simbasin import SimHarness  # noqa: E402
+
+from repro.core.basin import DrainageBasin, GBPS, Link, MIB, Tier, \
+    TierKind  # noqa: E402
+from repro.core.mover import MoverConfig, UnifiedDataMover  # noqa: E402
+from repro.core.planner import plan_transfer  # noqa: E402
+from repro.core.resume import TransferLedger  # noqa: E402
+
+from .common import emit
+
+N_ITEMS = 240
+ITEM_BYTES = 1 * MIB
+#: path-b's served-item index of its permanent death — late enough that
+#: restarting from zero is clearly worse than carrying on, early enough
+#: that the survivor still has real work left
+DIE_AT = 90
+#: path-a's link blacks out for this window of virtual time
+OUTAGE_AT_S = 0.01
+OUTAGE_S = 0.025
+#: the chaos posture's backoff base: two retries' cumulative backoff
+#: (>= base * (1 + 2) = 0.03 s) always clears the outage window, while
+#: the corpse's final backoff tail stays small against the stream's
+#: virtual work time
+BACKOFF_S = 0.01
+
+
+def _chaos_retry(plan):
+    """Re-price the planned hops' backoff base for the scripted outage
+    (the planner's default is sized for WAN-scale flaps)."""
+    def swap(h):
+        return dataclasses.replace(h, backoff_base_s=BACKOFF_S)
+    plan.hops[:] = [swap(h) for h in plan.hops]
+    plan.branches[:] = [
+        dataclasses.replace(b, hops=tuple(swap(h) for h in b.hops))
+        for b in plan.branches]
+    return plan
+
+
+def _tiers():
+    return [
+        Tier("src", TierKind.SOURCE, 40.0 * GBPS, latency_s=1e-5),
+        Tier("staging", TierKind.BURST_BUFFER, 40.0 * GBPS, latency_s=1e-5),
+        Tier("path-a", TierKind.SINK, 10.0 * GBPS),
+        Tier("path-b", TierKind.SINK, 10.0 * GBPS),
+    ]
+
+
+def _fanout_basin() -> DrainageBasin:
+    src, staging, a, b = _tiers()
+    return DrainageBasin([src, staging, a, b],
+                         [Link("src", "staging"), Link("staging", "path-a"),
+                          Link("staging", "path-b")])
+
+
+def _survivor_basin() -> DrainageBasin:
+    """What a naive restart has left: the one surviving path."""
+    src, staging, a, _ = _tiers()
+    return DrainageBasin([src, staging, a])
+
+
+def _payloads():
+    # distinct payloads: identical items XOR their SHA-256s away in
+    # pairs, which would blind the checksum to a lost pair
+    return [bytes([i % 251 + 1]) * ITEM_BYTES for i in range(N_ITEMS)]
+
+
+def _truth(payloads) -> str:
+    acc = bytearray(32)
+    for p in payloads:
+        d = hashlib.sha256(p).digest()
+        for i in range(32):
+            acc[i] ^= d[i]
+    return bytes(acc).hex()
+
+
+def _chaos_scenario(h: SimHarness):
+    """Scripted truth: path-a's link blacks out mid-stream (transient —
+    retries ride it out), path-b's element dies permanently."""
+    link_a = h.link(bandwidth_bytes_per_s=10.0 * GBPS, rtt_s=1e-4,
+                    wall_pacing_s=0.0)
+    link_a.outage(OUTAGE_AT_S, OUTAGE_S)
+    tier_b = h.branch_tier("path-b", bandwidth_bytes_per_s=10.0 * GBPS,
+                           wall_pacing_s=0.0)
+    tier_b.fail_at(DIE_AT, permanent=True)
+    return link_a, tier_b
+
+
+def _run_chaos():
+    h = SimHarness()
+    link_a, tier_b = _chaos_scenario(h)
+    plan = _chaos_retry(
+        plan_transfer(_fanout_basin(), ITEM_BYTES, stages=("deliver",)))
+    got = []
+    mover = h.mover(plan=plan, checksum=True)
+    rep = mover.parallel_transfer(
+        iter(_payloads()), got.append,
+        transforms={"path-a": [("deliver", h.service(link_a))],
+                    "path-b": [("deliver", h.service(tier_b))]},
+        mode="split", checksum=True)
+    return rep, got, mover, link_a
+
+
+def _run_naive():
+    """Restart-from-zero: the fail-hard run costs its virtual time up to
+    the death, then the whole stream moves again over the survivor."""
+    h = SimHarness()
+    _, tier_b = _chaos_scenario(h)
+    tier_a = h.branch_tier("path-a", bandwidth_bytes_per_s=10.0 * GBPS,
+                           wall_pacing_s=0.0)
+    plan = _chaos_retry(
+        plan_transfer(_fanout_basin(), ITEM_BYTES, stages=("deliver",)))
+    try:
+        h.mover(plan=plan).parallel_transfer(
+            iter(_payloads()), lambda _: None,
+            transforms={"path-a": [("deliver", h.service(tier_a))],
+                        "path-b": [("deliver", h.service(tier_b))]},
+            mode="split", drain_per_segment=True)     # the fail-hard path
+        raise SystemExit("fault_recovery: the fail-hard baseline run was "
+                         "expected to die on path-b's permanent fault")
+    except RuntimeError:
+        wasted_s = h.clock.now()
+
+    h2 = SimHarness()
+    tier_a2 = h2.branch_tier("path-a", bandwidth_bytes_per_s=10.0 * GBPS,
+                             wall_pacing_s=0.0)
+    plan2 = _chaos_retry(plan_transfer(_survivor_basin(), ITEM_BYTES,
+                                        stages=("deliver",)))
+    rep = h2.mover(plan=plan2).bulk_transfer(
+        iter(_payloads()), lambda _: None,
+        transforms=[("deliver", h2.service(tier_a2))])
+    return wasted_s + rep.elapsed_s, wasted_s
+
+
+def _run_resume():
+    payloads = _payloads()
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ledger.jsonl")
+        led = TransferLedger(path)
+        count = {"n": 0}
+
+        def power_cut(item):
+            if count["n"] >= 160:
+                raise RuntimeError("power cut")
+            count["n"] += 1
+
+        try:
+            UnifiedDataMover(MoverConfig(checksum=True)).bulk_transfer(
+                iter(payloads), power_cut, resume=led)
+            raise SystemExit("fault_recovery: the first ledger run was "
+                             "expected to be killed mid-stream")
+        except RuntimeError:
+            pass
+        led.close()
+        verified = TransferLedger(path).bytes_recorded
+
+        led2 = TransferLedger(path)
+        moved = []
+        rep = UnifiedDataMover(MoverConfig(checksum=True)).bulk_transfer(
+            iter(payloads), moved.append, resume=led2)
+        led2.close()
+        removed_verified = verified - led2.skipped_bytes
+        return rep, verified, removed_verified, len(moved)
+
+
+def run() -> None:
+    payloads = _payloads()
+    truth = _truth(payloads)
+
+    rep, got, mover, link_a = _run_chaos()
+    diag = mover.last_plan.diagnosis
+    emit("fault_recovery/chaos", rep.elapsed_s * 1e6,
+         f"{rep.throughput_bytes_per_s / 1e6:.1f}MB/s "
+         f"items={len(got)}/{N_ITEMS} outage_faults={link_a.faults} "
+         f"verdict={diag.get('path-b', '?')}")
+    if (sorted(got) != sorted(payloads) or rep.checksum != truth
+            or link_a.faults < 1
+            or not diag.get("path-b", "").startswith("branch-dead")):
+        raise SystemExit(
+            f"fault_recovery: chaos run broke correctness — "
+            f"items={len(got)}/{N_ITEMS} checksum_ok="
+            f"{rep.checksum == truth} outage_faults={link_a.faults} "
+            f"diagnosis={diag}")
+
+    naive_s, wasted_s = _run_naive()
+    speedup = naive_s / max(rep.elapsed_s, 1e-12)
+    emit("fault_recovery/naive", naive_s * 1e6,
+         f"restart-from-zero baseline (wasted {wasted_s:.2f}s) "
+         f"x{speedup:.2f} slower than failover")
+    if speedup < 1.5:
+        raise SystemExit(
+            f"fault_recovery: failover ({rep.elapsed_s:.3f}s) failed to "
+            f"beat the naive restart baseline ({naive_s:.3f}s) by 1.5x "
+            f"(got x{speedup:.2f})")
+
+    rep2, verified, removed_verified, moved = _run_resume()
+    frac = removed_verified / max(verified, 1)
+    emit("fault_recovery/resume", rep2.elapsed_s * 1e6,
+         f"verified={verified / MIB:.0f}MiB re-moved="
+         f"{removed_verified / MIB:.1f}MiB ({frac:.1%}) "
+         f"remainder={moved} items")
+    if rep2.checksum != truth or frac >= 0.10:
+        raise SystemExit(
+            f"fault_recovery: ledger resume re-moved {frac:.1%} of the "
+            f"already-verified bytes (gate < 10%) or broke the checksum "
+            f"(ok={rep2.checksum == truth})")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

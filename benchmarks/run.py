@@ -22,7 +22,7 @@ import os
 import sys
 import traceback
 
-from . import (common, fig2_latency_sweep, fig4_cca_sweep,
+from . import (common, fault_recovery, fig2_latency_sweep, fig4_cca_sweep,
                fig8_bulk_streaming, fig10_storage_bound,
                fig11_staged_vs_direct, fleet_arbitration, global_tuning,
                kernel_bench, live_swap, multipath, online_replan,
@@ -31,6 +31,7 @@ from . import (common, fig2_latency_sweep, fig4_cca_sweep,
 
 SUITES = {
     "table5": table5_basin_volumes,
+    "fault_recovery": fault_recovery,
     "fig2": fig2_latency_sweep,
     "fig4": fig4_cca_sweep,
     "fig8": fig8_bulk_streaming,
@@ -53,8 +54,12 @@ SUITES = {
 #: claim (a few seconds of pure host work, no compiles, no sleeps).
 #: fig8 and fleet_arbitration run contended links in wall-synced virtual
 #: time (a few wall seconds each) and hard-gate the PR 8 arbiter claims.
-QUICK = ["table5", "fig2", "fig4", "fig8", "fleet_arbitration",
-         "live_swap", "multipath", "staging_throughput"]
+#: fig10 and fault_recovery run planned transfers in virtual time and
+#: hard-gate the storage-bound roof and the PR 9 survive-layer claims
+#: (chaos completion + checksum, failover vs restart, ledger resume).
+QUICK = ["table5", "fault_recovery", "fig2", "fig4", "fig8", "fig10",
+         "fleet_arbitration", "live_swap", "multipath",
+         "staging_throughput"]
 
 
 def _write_json(json_dir: str, name: str, rows: list, error: str) -> None:

@@ -76,6 +76,12 @@ DEFAULT_CLASSES: Mapping[str, float] = {
 #: relative tolerance for rate comparisons (grants, floors, conservation)
 _REL_TOL = 1e-9
 
+#: bandwidth a dead basin element is derated to (bytes/s): effectively
+#: zero, but nonzero so every rate fixed point stays finite — members
+#: crossing the corpse re-price to ~nothing and survivors absorb the
+#: share on the next allocation instead of waiting on a hung grant
+DEAD_ELEMENT_BYTES_PER_S = 1.0
+
 
 @dataclasses.dataclass
 class _Member:
@@ -160,6 +166,15 @@ class Admission:
         """Time-averaged grant over ``[t0, t1]`` — the honest promise for
         a transfer whose share moved while it ran."""
         return self._arbiter._mean_granted(self._member, t0, t1)
+
+    def element_died(self, tier_name: str) -> None:
+        """Failover hook: the mover reports that a branch of this
+        member's transfer died for good on ``tier_name`` (retry budget
+        exhausted).  Delegates to :meth:`FleetArbiter.element_died` —
+        the tier derates and the whole fleet re-levels, so the member's
+        grant re-prices to its surviving branches instead of hanging on
+        a promise the corpse can no longer keep."""
+        self._arbiter.element_died(tier_name)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Admission({self._member.name!r}, {self.status}, "
@@ -293,6 +308,27 @@ class FleetArbiter:
                 force=basin is not None)
             self._promote_queue()
             self._publish()
+
+    def element_died(self, tier_name: str) -> None:
+        """A basin element died under the fleet's feet (a live member's
+        branch exhausted its retry budget against it).  The tier is
+        derated to :data:`DEAD_ELEMENT_BYTES_PER_S` — same topology, so
+        every member's sub-basin re-derives cleanly — and the fleet
+        re-levels: survivors absorb the share, members whose floor no
+        longer fits are shed in class order.  Unknown tiers no-op (the
+        corpse may be a branch-private tier outside this basin)."""
+        with self._lock:
+            if all(t.name != tier_name for t in self.basin.tiers):
+                return
+            already = {t.name: t.bandwidth_bytes_per_s
+                       for t in self.basin.tiers}
+            if already[tier_name] <= DEAD_ELEMENT_BYTES_PER_S:
+                return          # idempotent: the obituary already landed
+            tiers = [dataclasses.replace(
+                         t, bandwidth_bytes_per_s=DEAD_ELEMENT_BYTES_PER_S)
+                     if t.name == tier_name else t
+                     for t in self.basin.tiers]
+            self.rebalance(basin=self.basin.replace_tiers(tiers))
 
     def _make_member(self, name, item_bytes, qos, min_bytes_per_s, path,
                      on_revision, plan_kwargs) -> _Member:

@@ -188,6 +188,14 @@ class HopPlan:
     #: host-compute-bound verdict); accelerator placement charges the
     #: Pallas kernel's rate, far above line rate.
     digest_bytes_per_s: float = 0.0
+    #: transient-failure retry budget: how many times one item's
+    #: pull+transform may be re-attempted (exponential backoff from
+    #: ``backoff_base_s``, seeded jitter) before the failure is final
+    #: and the branch is declared dead.  0 = fail fast.
+    retry_budget: int = 2
+    #: base of the exponential backoff between retries (seconds);
+    #: attempt k waits ``backoff_base_s * 2**k * (1 + jitter)``
+    backoff_base_s: float = 0.05
 
 
 def _hop_lookup(hops: Sequence[HopPlan], index: int,
@@ -299,7 +307,8 @@ class TransferPlan:
         # slab size surfaces only when the hop is actually batched, so a
         # per-item plan's describe() stays byte-identical to the old form
         batch = f" b={h.batch_items}" if h.batch_items > 1 else ""
-        return (f"{h.name}[cap={h.capacity} w={h.workers}{batch}{win} "
+        retry = f" retry={h.retry_budget}" if h.retry_budget > 0 else ""
+        return (f"{h.name}[cap={h.capacity} w={h.workers}{batch}{win}{retry} "
                 f"{h.up_tier}->{h.down_tier}]")
 
     def describe(self) -> str:
@@ -341,7 +350,12 @@ class TransferPlan:
                         for k in keys if k in self.diagnosis]
             shown.update(k for k in keys if k in self.diagnosis)
             tail = f"  !{'; '.join(verdicts)}" if verdicts else ""
-            lines.append(f"  {b.branch_id} w={b.weight:.2f} "
+            # a failed-over branch carries its obituary under its bare id
+            dead = ""
+            if self.diagnosis.get(b.branch_id, "").startswith("branch-dead"):
+                shown.add(b.branch_id)
+                dead = " dead"
+            lines.append(f"  {b.branch_id}{dead} w={b.weight:.2f} "
                          f"@{b.rate_bytes_per_s / 1e6:.1f} MB/s: {hops}{tail}")
         # verdicts carried over from branches no longer in the plan
         stray = {k: v for k, v in self.diagnosis.items() if k not in shown}
@@ -943,6 +957,13 @@ class _Evidence:
     #: not any tier; the remedy is offloading the digest, not touching
     #: estimates or workers
     compute: bool = False
+    #: fraction of the hop's worker-time spent in retry backoff (> 0 =
+    #: the hop paid its retry budget against a faulting element).  The
+    #: retry counter is the stage's own first-hand telemetry; letting
+    #: the backoff-inflated service samples reach the dispersion test
+    #: would misread a flapping link as latency-bound, so this verdict
+    #: is collected BEFORE the stall classifiers.
+    faulted: float = 0.0
 
 
 def _collect_evidence(plan: TransferPlan,
@@ -1070,6 +1091,24 @@ def _collect_evidence(plan: TransferPlan,
                                      up_limited=True, busy=True,
                                      candidate_tier=hop.up_tier,
                                      compute=True))
+                continue
+            # fault-degraded check, BEFORE the stall classifiers: a hop
+            # that paid real worker-time in retry backoff (its own retry
+            # counter — first-hand, never phase noise) and underdelivered
+            # is limited by the faulting element, not by any estimate.
+            # The backoff intervals inflate the per-item service samples,
+            # so falling through would misdiagnose a flapping link as
+            # latency-bound and prescribe MORE workers into the fault —
+            # the §3.2 misdiagnosis family, robustness edition.  Remedy:
+            # lower the hop's promise honestly and re-level traffic.
+            retry_frac = (rep.retry_wait_s / worker_time
+                          if worker_time > 0 else 0.0)
+            if (rep.retries > 0 and underdelivered
+                    and retry_frac >= STALL_THRESHOLD):
+                out.append(_Evidence(branch=branch, hop=hop, report=rep,
+                                     up_limited=True, busy=False,
+                                     candidate_tier=hop.up_tier,
+                                     faulted=retry_frac))
                 continue
             if has_intake and multipath:
                 if branch.branch_id not in culprits or not underdelivered:
@@ -1245,6 +1284,18 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
     at its modeled level — then the clamp really is the lie, and on a
     per-branch clamp only the diagnosed branch's clamp is lifted.
 
+    A robustness verdict, **fault-degraded**, sits before the stall
+    classifiers: a hop that spent at least the stall threshold of its
+    worker-time in retry backoff (``StageReport.retries`` /
+    ``retry_wait_s`` — the stage's own retry ledger, first-hand) and
+    underdelivered is limited by a *flapping* element, not a mis-modeled
+    one.  The backoff intervals inflate the per-item service samples, so
+    without this ordering a flapping link would read as latency-bound
+    and the remedy would pour workers into the fault.  Instead the
+    faulting side's estimate is pulled toward the observed effective
+    rate (backoff included) — the promise drops honestly and a branching
+    plan re-levels traffic toward healthy siblings.
+
     On a branching plan, reports tagged ``"<branch>/<stage>"`` attribute
     per branch (private-tier + corroboration rules, module docstring),
     and the rebuilt plan re-allocates branch rates from the revised
@@ -1328,6 +1379,29 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
             evidence.remove(ev)
             offload_digest = True
             diagnosis[key] = f"host-compute-bound({ev.hop.up_tier}:digest)"
+        elif ev.faulted > 0:
+            # fault-degraded: the element is flapping, not mis-modeled —
+            # but the retries cost real delivered bytes, so the honest
+            # remedy is pulling the faulting side's estimate toward the
+            # observed effective rate (backoff time included).  On a
+            # branching plan the retry counter is the branch's own
+            # first-hand telemetry, so the derate lands on its private
+            # tier — the rebuilt plan re-levels traffic toward healthy
+            # siblings instead of degrading the whole fan-out.
+            evidence.remove(ev)
+            tier_name = ev.hop.up_tier
+            if (multipath and ev.branch.private_tiers
+                    and tier_name not in ev.branch.private_tiers):
+                tier_name = ev.branch.private_tiers[-1]
+            rep_f = ev.report
+            active = rep_f.active_s if rep_f.active_s > 0 \
+                else rep_f.elapsed_s
+            observed = rep_f.bytes / active if active > 0 else 0.0
+            if observed > 0:
+                est[tier_name] = ((1.0 - damping) * est[tier_name]
+                                  + damping * observed)
+            element = ev.hop.window_link or tier_name
+            diagnosis[key] = f"fault-degraded({element})"
     resolved = []
     for ev in evidence:
         tier_name = _attributed_tier(ev, evidence, plan, culprits,

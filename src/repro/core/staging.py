@@ -142,6 +142,13 @@ class StageReport:
     #: *before* it can masquerade as a window-bound stall.
     rtt_sum_s: float = 0.0
     acks: int = 0
+    #: transform attempts re-run after a raise, and the backoff the
+    #: workers waited before re-running them — first-hand fault evidence
+    #: (the planner's **fault-degraded** verdict reads these BEFORE the
+    #: stall classifiers, so a flapping hop is priced as faulty rather
+    #: than misread as latency-bound).
+    retries: int = 0
+    retry_wait_s: float = 0.0
 
     @property
     def throughput_bytes_per_s(self) -> float:
@@ -223,6 +230,8 @@ def merge_reports(chunks: Sequence[Sequence[StageReport]]) -> list[StageReport]:
             m.retransmits += r.retransmits
             m.rtt_sum_s += r.rtt_sum_s
             m.acks += r.acks
+            m.retries += r.retries
+            m.retry_wait_s += r.retry_wait_s
             m.service_up_s = (m.service_up_s
                               + list(r.service_up_s))[-SERVICE_RESERVOIR:]
             m.service_down_s = (m.service_down_s
@@ -256,7 +265,9 @@ def delta_report(cur: StageReport,
         errors=cur.errors - prev.errors,
         retransmits=cur.retransmits - prev.retransmits,
         rtt_sum_s=max(0.0, cur.rtt_sum_s - prev.rtt_sum_s),
-        acks=cur.acks - prev.acks)
+        acks=cur.acks - prev.acks,
+        retries=cur.retries - prev.retries,
+        retry_wait_s=max(0.0, cur.retry_wait_s - prev.retry_wait_s))
 
 
 def delta_reports(cur: Sequence[StageReport],
@@ -285,6 +296,8 @@ class Stage(Generic[T, U]):
         sizeof: Optional[Callable[[Any], int]] = None,
         clock: Optional[Callable[[], float]] = None,
         batch_items: int = 1,
+        retry_budget: int = 0,
+        backoff_base_s: float = 0.05,
     ):
         self.name = name
         self._clock = clock or time.monotonic
@@ -305,6 +318,22 @@ class Stage(Generic[T, U]):
         #: ``retransmits`` counter and ``rtt_s`` — the §3.2 evidence that
         #: makes loss and route changes *diagnosable* instead of silent.
         self._channel = getattr(transform, "channel", None)
+        #: fault tolerance: a transform raise is retried up to
+        #: ``retry_budget`` times with exponential backoff
+        #: (``backoff_base_s * 2**attempt``) plus seeded jitter before the
+        #: error surfaces.  0 (the default) is the historical fail-fast
+        #: path; the planner staffs real budgets per hop
+        #: (``HopPlan.retry_budget``).  Retries and backoff waits accrue
+        #: to the report as ``retries``/``retry_wait_s`` — fault evidence,
+        #: deliberately kept OUT of the service reservoirs so the regime
+        #: diagnosis still reads clean service cost.
+        self.retry_budget = max(0, int(retry_budget))
+        self.backoff_base_s = float(backoff_base_s)
+        # seeded from the stage name (stable across runs, unlike hash()):
+        # backoff jitter must be a pure function of the script
+        self._retry_rng = random.Random(0xFA11 ^ sum(name.encode()))
+        self._retries = 0
+        self._retry_wait_s = 0.0
         self._retrans_base = 0
         self._rtt_obs_sum = 0.0
         self._rtt_obs_n = 0
@@ -321,6 +350,10 @@ class Stage(Generic[T, U]):
             Callable[[int], Optional[list[T]]]] = None
         self._active = 0        # spawned minus exited workers
         self._retire = 0        # pending lazy-retirement requests
+        #: items a worker held when its transform failed for good (budget
+        #: exhausted) — the branch-failover layer re-routes these onto
+        #: surviving branches instead of silently dropping them
+        self._salvage: list = []
         self._spawned = 0       # lifetime worker counter (thread names)
         self._t_start: Optional[float] = None
         self._t_end: Optional[float] = None
@@ -392,6 +425,47 @@ class Stage(Generic[T, U]):
         """Record that ``nbytes`` finished transmitting at ``t_sent`` (the
         instant the credit clock starts counting toward their ACK)."""
 
+    # -- fault tolerance ------------------------------------------------------
+
+    def _backoff(self, wait_s: float) -> None:
+        """Wait out one retry backoff.  Under the simulated basin's
+        virtual clock the waiter's own timeline jumps forward (the same
+        per-thread model as windowed admission), so a scripted fault's
+        recovery point is deterministic; under a real clock it sleeps."""
+        set_thread = getattr(self._clock, "set_thread", None)
+        thread_now = getattr(self._clock, "thread_now", None)
+        if set_thread is not None and thread_now is not None:
+            set_thread(thread_now() + wait_s)
+        else:
+            time.sleep(wait_s)
+
+    def _run_with_retry(self, attempt_fn: Callable[[], U]) -> U:
+        """Run one transform attempt under the hop's retry policy:
+        ``retry_budget`` re-runs with exponential backoff and seeded
+        jitter.  The final failure re-raises (the worker's error path —
+        and, one level up, branch failover — takes over from there)."""
+        budget = self.retry_budget
+        if budget <= 0:
+            return attempt_fn()
+        attempt = 0
+        while True:
+            try:
+                return attempt_fn()
+            except Exception:
+                if attempt >= budget:
+                    raise
+                # exponential backoff with jitter in [1x, 1.5x): spreads
+                # sibling workers' retries so a recovered hop is not
+                # re-stormed by a synchronized burst.  Drawn under the
+                # stage lock so the jitter sequence is well-defined.
+                with self._lock:
+                    wait = (self.backoff_base_s * (2 ** attempt)
+                            * (1.0 + 0.5 * self._retry_rng.random()))
+                    self._retries += 1
+                    self._retry_wait_s += wait
+                attempt += 1
+                self._backoff(wait)
+
     def _run_worker(self) -> None:
         try:
             while True:
@@ -444,12 +518,15 @@ class Stage(Generic[T, U]):
         self._admit(nbytes_wire)
         t_tx0 = self._clock()
         try:
-            out = self.transform(item) if self.transform else item
+            out = (self._run_with_retry(lambda: self.transform(item))
+                   if self.transform else item)
         except BaseException:
             # a failed transmit must still return its credit (via
             # the ACK path, one RTT out) or siblings blocked on
             # the window would wait on an ACK that never comes
             self._on_sent(nbytes_wire, self._clock())
+            with self._lock:
+                self._salvage.append(item)
             raise
         t1 = self._clock()
         self._on_sent(nbytes_wire, t1)
@@ -500,10 +577,16 @@ class Stage(Generic[T, U]):
                 out = batch
             else:
                 many = getattr(transform, "many", None)
-                out = (list(many(batch)) if many is not None
-                       else [transform(it) for it in batch])
+                # the whole slab is one retryable attempt: a mid-slab
+                # fault re-runs the slab (simulated tiers charge per
+                # serve, so the re-run is paid for honestly)
+                out = self._run_with_retry(
+                    lambda: list(many(batch)) if many is not None
+                    else [transform(it) for it in batch])
         except BaseException:
             self._on_sent(nbytes_wire, self._clock())
+            with self._lock:
+                self._salvage.extend(batch)
             raise
         t1 = self._clock()
         self._on_sent(nbytes_wire, t1)
@@ -572,11 +655,42 @@ class Stage(Generic[T, U]):
         if grow > 0 and self._upstream is not None:
             self._spawn(grow)
 
-    def join(self, timeout: Optional[float] = None) -> None:
+    @property
+    def failed(self) -> bool:
+        """True once a worker died on an unretryable (or
+        budget-exhausted) error — the dead-branch signal failover acts
+        on."""
+        with self._lock:
+            return self._error_tb is not None
+
+    def take_salvage(self) -> list:
+        """Claim (and clear) the items workers held when their transforms
+        failed for good, so a failover path can re-route them."""
+        with self._lock:
+            out, self._salvage = self._salvage, []
+            return out
+
+    def error_summary(self) -> str:
+        """Last line of the fatal error's traceback ('' while healthy) —
+        the one-line obituary failover verdicts carry."""
+        with self._lock:
+            tb = self._error_tb
+        if not tb:
+            return ""
+        lines = [ln for ln in tb.strip().splitlines() if ln.strip()]
+        return lines[-1].strip() if lines else ""
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Join worker threads without raising on a recorded error — the
+        quiescence barrier failover needs before salvaging (join() is the
+        fail-fast form)."""
         with self._lock:
             threads = list(self._threads)
         for t in threads:
             t.join(timeout)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self.wait(timeout)
         if self._error_tb:
             raise RuntimeError(f"stage {self.name} failed:\n{self._error_tb}")
 
@@ -613,6 +727,8 @@ class Stage(Generic[T, U]):
                              if self._channel is not None else 0),
                 rtt_sum_s=self._rtt_obs_sum,
                 acks=self._rtt_obs_n,
+                retries=self._retries,
+                retry_wait_s=self._retry_wait_s,
                 service_up_s=list(self._service_up.samples),
                 service_down_s=list(self._service_down.samples),
             )
@@ -646,6 +762,17 @@ class WindowedStage(Stage):
     zero-drain remedy for a window-bound verdict); shrinkage applies as
     outstanding ACKs return.  An item larger than the whole window is
     admitted alone (the stream must always make progress).
+
+    **Fractional credit** — admission is whole-item, so a window worth
+    ``k + f`` items (``0 < f < 1``) would truncate to ``k`` in flight
+    and deliver only ``k/(k+f)`` of the grant (severe at small windows —
+    an arbitered 10 ms hop granted 2.5 items delivers 80 %).  The stage
+    therefore *banks* the stranded fractional credit: each admission
+    that blocks on a nearly-full window deposits the unusable leftover
+    (capped at one item), and once the bank covers an item's shortfall
+    the item is admitted overdrawn.  Long-run average in-flight bytes
+    stay ≤ the window; the instantaneous overdraft is bounded by one
+    item — the grant is honored in expectation instead of floored.
     """
 
     def __init__(self, name: str, *, window_bytes: float, rtt_s: float,
@@ -660,6 +787,7 @@ class WindowedStage(Stage):
         self._win_cond = threading.Condition(threading.Lock())
         self._inflight = 0.0                      # admitted, not yet ACKed
         self._acks: list[tuple[float, int]] = []  # heap of (ack_time, bytes)
+        self._win_bank = 0.0    # stranded fractional credit, ≤ one item
 
     @property
     def inflight_bytes(self) -> float:
@@ -672,6 +800,33 @@ class WindowedStage(Stage):
         while self._acks and self._acks[0][0] <= now + 1e-12:
             _, nb = heapq.heappop(self._acks)
             self._inflight -= nb
+
+    def _locked_try_admit(self, nbytes: int,
+                          banked: bool) -> tuple[bool, bool]:
+        """One admission attempt (win lock held, credit already reaped).
+
+        Returns ``(admitted, banked)``.  A blocked attempt on a window
+        with free-but-insufficient credit deposits that leftover into
+        the fractional-credit bank — at most once per admission call
+        (``banked`` tracks it), and the bank never exceeds one item —
+        then admits overdrawn once bank + leftover cover the item."""
+        if (self._inflight <= 0
+                or self._inflight + nbytes <= self.window_bytes + 1e-9):
+            self._inflight += nbytes
+            return True, banked
+        leftover = self.window_bytes - self._inflight
+        if leftover > 0:
+            if self._win_bank + leftover >= nbytes - 1e-9:
+                # spend the bank: the overdraft is exactly the credit
+                # truncation stranded on earlier admissions
+                self._win_bank -= nbytes - leftover
+                self._inflight += nbytes
+                return True, banked
+            if not banked:
+                self._win_bank = min(self._win_bank + leftover,
+                                     float(nbytes))
+                banked = True
+        return False, banked
 
     def _admit(self, nbytes: int) -> None:
         thread_now = getattr(self._clock, "thread_now", None)
@@ -689,13 +844,12 @@ class WindowedStage(Stage):
         forward under other stages' stall measurements."""
         entry = thread_now()
         t = entry
+        banked = False
         with self._win_cond:
             while True:
                 self._reap(t)
-                if (self._inflight <= 0
-                        or self._inflight + nbytes
-                        <= self.window_bytes + 1e-9):
-                    self._inflight += nbytes
+                admitted, banked = self._locked_try_admit(nbytes, banked)
+                if admitted:
                     break
                 if self._acks:
                     # the oldest ACK's arrival is when credit next frees
@@ -715,13 +869,12 @@ class WindowedStage(Stage):
         the oldest outstanding ACK, re-checking as ACKs mature."""
         t0 = self._clock()
         waited = False
+        banked = False
         with self._win_cond:
             while True:
                 self._reap(self._clock())
-                if (self._inflight <= 0
-                        or self._inflight + nbytes
-                        <= self.window_bytes + 1e-9):
-                    self._inflight += nbytes
+                admitted, banked = self._locked_try_admit(nbytes, banked)
+                if admitted:
                     break
                 waited = True
                 if self._acks:
@@ -801,35 +954,56 @@ class StagePipeline:
             self._source_iter = iter(source)
         self._source_lock = threading.Lock()
         self._started = False
+        # failover kill switch: once set, every pull reads end-of-stream,
+        # so an aborted branch stops competing with its surviving
+        # siblings for shared-intake items (see abort())
+        self._aborted = threading.Event()
 
     def _source_pull(self) -> Optional[Any]:
+        if self._aborted.is_set():
+            return None
         with self._source_lock:
             return next(self._source_iter, None)
 
     def _source_pull_many(self, k: int) -> Optional[list[Any]]:
+        if self._aborted.is_set():
+            return None
         # one lock round-trip covers the whole slab
         with self._source_lock:
             batch = list(itertools.islice(self._source_iter, k))
         return batch or None
 
-    @staticmethod
-    def _buffer_pull(buf: BurstBuffer) -> Callable[[], Optional[Any]]:
+    def _buffer_pull(self, buf: BurstBuffer) -> Callable[[], Optional[Any]]:
         def pull() -> Optional[Any]:
+            if self._aborted.is_set():
+                return None
             try:
                 return buf.get()
             except BufferClosed:
                 return None
         return pull
 
-    @staticmethod
-    def _buffer_pull_many(buf: BurstBuffer
+    def _buffer_pull_many(self, buf: BurstBuffer
                           ) -> Callable[[int], Optional[list[Any]]]:
         def pull_many(k: int) -> Optional[list[Any]]:
+            if self._aborted.is_set():
+                return None
             try:
                 return buf.get_many(k)
             except BufferClosed:
                 return None
         return pull_many
+
+    def abort(self) -> None:
+        """Shut the pipeline down without losing staged items: every pull
+        starts reading end-of-stream, and every stage buffer is closed so
+        workers blocked mid-put unblock (staged items stay consumable by
+        the buffer-close contract).  Branch failover calls this on a dead
+        branch before salvaging what it stranded; it never touches a
+        shared source buffer, which surviving siblings keep draining."""
+        self._aborted.set()
+        for st in self.stages:
+            st.buffer.close()
 
     def start(self) -> "StagePipeline":
         if self._started:
@@ -859,6 +1033,11 @@ class StagePipeline:
     def join(self, timeout: Optional[float] = None) -> None:
         for stage in self.stages:
             stage.join(timeout)
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Join without raising on a failed stage (the failover form)."""
+        for stage in self.stages:
+            stage.wait(timeout)
 
     def reports(self) -> list[StageReport]:
         return [s.report() for s in self.stages]
@@ -907,6 +1086,41 @@ class ParallelBranchPipeline:
         self._open_branches = 0
         self._lock = threading.Lock()
         self._started = False
+        #: stranded items recovered from branches that died mid-segment,
+        #: keyed by branch id — items the dead branch had pulled from its
+        #: feed but never delivered to the merge.  Under a shared (steal)
+        #: intake they are re-queued onto the survivors automatically; a
+        #: per-branch (deal) dispatcher claims them via
+        #: :meth:`take_stranded` and re-deals.
+        self._stranded: dict[str, list] = {}
+        self._dead: set[str] = set()
+
+    def _salvage_branch(self, pipe: StagePipeline) -> list:
+        """Everything the dead branch pulled but never delivered: items
+        in workers' hands when their transforms failed for good, plus
+        items parked in inter-stage buffers.  The branch is aborted and
+        quiesced first — its pulls read end-of-stream so it stops
+        competing with survivors for shared-intake items, and its closed
+        buffers keep staged items consumable.  Items re-enter at the
+        branch feed level: any transforms the dead branch already applied
+        are re-applied by the surviving branch, which double-pays a hop's
+        service rather than ever double-counting or dropping an item."""
+        pipe.abort()
+        for st in pipe.stages:
+            st.wait()
+        stranded: list = []
+        for st in pipe.stages:
+            stranded.extend(st.take_salvage())
+        # the LAST stage's buffer feeds the merge drainer, which has
+        # already drained it to exhaustion — only inter-stage parking
+        # (and the stages' in-hand salvage) can strand items
+        for st in pipe.stages[:-1]:
+            try:
+                while True:
+                    stranded.extend(st.buffer.get_many(1 << 10))
+            except BufferClosed:
+                pass
+        return stranded
 
     def start(self) -> "ParallelBranchPipeline":
         if self._started:
@@ -925,11 +1139,31 @@ class ParallelBranchPipeline:
                 up = self._upstreams.get(bid)
                 if up is not None:
                     up.close()
+                died = any(st.failed for st in pipe.stages)
+                stranded = self._salvage_branch(pipe) if died else []
                 with self._lock:
                     # last branch out closes the merge (mirror of the
                     # last-worker-out rule inside Stage)
                     self._open_branches -= 1
                     last = self._open_branches == 0
+                    if died:
+                        self._dead.add(bid)
+                        self._stranded.setdefault(bid, []).extend(stranded)
+                if died and not last and stranded \
+                        and self._shared_upstream is not None:
+                    # steal route: hand the dead branch's stranded items
+                    # straight back to the shared intake — the surviving
+                    # branches pull them like any other work, so nothing
+                    # committed to the intake is ever lost to one death
+                    claim = self.take_stranded(bid)
+                    try:
+                        self._shared_upstream.put_many(claim)
+                    except BufferClosed:
+                        # intake already closed (death at stream tail):
+                        # keep the claim stranded so the mover's final
+                        # salvage sweep re-moves it instead of losing it
+                        with self._lock:
+                            self._stranded.setdefault(bid, []).extend(claim)
                 if last:
                     if self._shared_upstream is not None:
                         self._shared_upstream.close()
@@ -951,6 +1185,24 @@ class ParallelBranchPipeline:
         """The merge buffer; yields ``(branch_id, item)`` pairs."""
         return self.merge
 
+    def dead_branches(self) -> set[str]:
+        """Branch ids that died (a stage exhausted its retry budget) —
+        the dispatcher-side failover signal."""
+        with self._lock:
+            dead = set(self._dead)
+        # a branch whose stage has failed but whose drainer has not yet
+        # unwound still counts: the dispatcher must stop feeding it NOW
+        for bid, pipe in self.branches:
+            if bid not in dead and any(st.failed for st in pipe.stages):
+                dead.add(bid)
+        return dead
+
+    def take_stranded(self, bid: str) -> list:
+        """Claim (and clear) the items branch ``bid`` stranded when it
+        died; the deal-route dispatcher re-deals them to survivors."""
+        with self._lock:
+            return self._stranded.pop(bid, [])
+
     def __iter__(self) -> Iterator[tuple[str, Any]]:
         if not self._started:
             self.start()
@@ -961,6 +1213,28 @@ class ParallelBranchPipeline:
             pipe.join(timeout)
         for t in self._drainers:
             t.join(timeout)
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Join without raising on dead branches — the failover form:
+        survivors' completion is the success criterion, and the dead
+        branches' errors are already recorded in :meth:`dead_branches`
+        (and surfaced as ``branch-dead`` verdicts by the mover)."""
+        for _, pipe in self.branches:
+            pipe.wait(timeout)
+        for t in self._drainers:
+            t.join(timeout)
+
+    def branch_error(self, bid: str) -> str:
+        """First line of the recorded error for a dead branch ('' when
+        none) — the obituary text a ``branch-dead(...)`` verdict carries."""
+        for b, pipe in self.branches:
+            if b != bid:
+                continue
+            for st in pipe.stages:
+                tb = st.error_summary()
+                if tb:
+                    return tb
+        return ""
 
     def reports(self) -> list[StageReport]:
         """Every branch's stage reports, names tagged ``<branch>/<stage>``."""

@@ -39,6 +39,12 @@ class LayerSummary:
     bytes: int = 0
     elapsed_s: float = 0.0
     worst_fidelity_gap: Optional[float] = None
+    #: fault posture: transient faults retried away inside this layer's
+    #: transfers, and the worker-time those backoffs consumed — a layer
+    #: can meet its fidelity gate while quietly burning retry budget,
+    #: and this is where that cost stays visible
+    retries: int = 0
+    retry_wait_s: float = 0.0
 
     @property
     def throughput_bytes_per_s(self) -> float:
@@ -79,6 +85,9 @@ class TelemetryRegistry:
             s.items += report.items
             s.bytes += report.bytes
             s.elapsed_s += report.elapsed_s
+            for r in report.stage_reports:
+                s.retries += r.retries
+                s.retry_wait_s += r.retry_wait_s
             gap = report.fidelity_gap
             if gap is not None:
                 if s.worst_fidelity_gap is None or gap > s.worst_fidelity_gap:
@@ -112,10 +121,13 @@ class TelemetryRegistry:
         for name, s in sorted(self.summary().items()):
             gap = ("n/a" if s.worst_fidelity_gap is None
                    else f"{s.worst_fidelity_gap:.3f}")
+            faults = (f", {s.retries} retries "
+                      f"({s.retry_wait_s:.2f}s backoff)"
+                      if s.retries else "")
             lines.append(
                 f"{name:>10}: {s.transfers} transfers, {s.items} items, "
                 f"{s.throughput_bytes_per_s / 1e6:.1f} MB/s, "
-                f"worst gap {gap}")
+                f"worst gap {gap}{faults}")
         with self._lock:
             fleet = self._fleet
         if fleet is not None:
@@ -163,7 +175,9 @@ class TelemetryRegistry:
                 items=int(d["items"]),
                 bytes=int(d["bytes"]),
                 elapsed_s=float(d["elapsed_s"]),
-                worst_fidelity_gap=d.get("worst_fidelity_gap"))
+                worst_fidelity_gap=d.get("worst_fidelity_gap"),
+                retries=int(d.get("retries", 0)),
+                retry_wait_s=float(d.get("retry_wait_s", 0.0)))
         reg._fleet = data.get("fleet")
         return reg
 

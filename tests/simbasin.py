@@ -58,6 +58,20 @@ from repro.core.planner import TransferPlan
 import random
 
 
+class SimulatedFault(RuntimeError):
+    """An injected fault raised by a simulated tier's :meth:`serve` — the
+    scripted stand-in for a storage error, host stall, or flaky mount.
+    Deterministic: which attempt fails is a function of the script
+    (``fail_at``), never of thread interleaving."""
+
+
+class LinkOutage(SimulatedFault):
+    """A serve attempted while a scripted link blackout is in effect
+    (:meth:`SimulatedLink.outage`).  Retrying after backing off past the
+    outage window succeeds — the flap/backoff/recover cycle the stage
+    retry loop and the ``fault-degraded`` verdict are built around."""
+
+
 class VirtualClock:
     """Thread-safe simulated clock: time only moves forward, pushed by
     whichever simulated tier finishes latest (monotonic max).
@@ -190,7 +204,46 @@ class SimulatedTier:
         self._cum_tx = 0.0              # total transmit work accepted so far
         self._first_arrival: Optional[float] = None
         self._served = 0
+        self._attempts = 0              # every serve call, incl. failed ones
         self._shifts: dict[int, dict[str, float]] = {}
+        self._fails: dict[int, tuple[Exception, bool]] = {}
+        self._dead: Optional[Exception] = None
+        #: cumulative injected failures raised (scripted faults + outages)
+        self.faults = 0
+
+    # -- fault injection -----------------------------------------------------
+
+    def fail_at(self, item: int, *, error: Optional[Exception] = None,
+                permanent: bool = False) -> "SimulatedTier":
+        """Script the ``item``-th serve *attempt* (0-based, counting failed
+        attempts too — before any fault fires, attempt index == served-item
+        index) to raise.  Transient by default: exactly that one attempt
+        fails and the caller's retry re-serves the item.  ``permanent=True``
+        kills the tier from that attempt on — every later serve raises too
+        (the scripted tier death behind branch failover).  The failing
+        attempt charges no transmission and moves no timeline; the caller's
+        retry backoff is what pays for the fault, which keeps the run a
+        pure function of the script."""
+        err = error if error is not None else SimulatedFault(
+            f"{self.name}: injected fault at attempt {int(item)}")
+        with self._lock:
+            self._fails[int(item)] = (err, bool(permanent))
+        return self
+
+    def _locked_fault(self, arrival: float) -> Optional[Exception]:
+        """The fault (if any) for the attempt being served, decided with
+        the tier lock held — same determinism contract as
+        :meth:`_locked_extra_delay`.  ``arrival`` is the caller's virtual
+        arrival time (used by :class:`SimulatedLink` outage windows)."""
+        if self._dead is not None:
+            return self._dead
+        hit = self._fails.pop(self._attempts - 1, None)
+        if hit is not None:
+            err, permanent = hit
+            if permanent:
+                self._dead = err
+            return err
+        return None
 
     def _locked_extra_delay(self) -> float:
         """Per-item extra service delay, computed with the tier lock held
@@ -240,6 +293,14 @@ class SimulatedTier:
             if delay > 0:
                 time.sleep(min(delay, 1.0))
         with self._lock:
+            self._attempts += 1
+            fault = self._locked_fault(arrival)
+            if fault is not None:
+                # the failed attempt consumes its attempt slot but charges
+                # no transmission and advances no timeline: the retrying
+                # caller pays through its own scripted backoff instead
+                self.faults += 1
+                raise fault
             shift = self._shifts.pop(self._served, None)
             if shift:
                 for key, val in shift.items():
@@ -335,8 +396,33 @@ class SimulatedLink(SimulatedTier):
         #: reads through its channel handle (Stage reports the delta it
         #: observed, so replan can price the loss regime)
         self.retransmits = 0
+        self._outages: list[tuple[float, float]] = []
         super().__init__(clock, bandwidth_bytes_per_s=bandwidth_bytes_per_s,
                          name=name, **kwargs)
+
+    def outage(self, start_s: float, duration_s: float) -> "SimulatedLink":
+        """Script a link blackout: every serve whose virtual arrival falls
+        in ``[start_s, start_s + duration_s)`` raises :class:`LinkOutage`.
+        Deterministic against the virtual clock — a caller that backs off
+        past the window's end reconnects and succeeds (the flap the
+        ``fault-degraded`` verdict prices)."""
+        if duration_s <= 0:
+            raise ValueError(f"outage duration must be > 0, got {duration_s}")
+        with self._lock:
+            self._outages.append((float(start_s),
+                                  float(start_s) + float(duration_s)))
+        return self
+
+    def _locked_fault(self, arrival: float) -> Optional[Exception]:
+        fault = super()._locked_fault(arrival)
+        if fault is not None:
+            return fault
+        for lo, hi in self._outages:
+            if lo <= arrival < hi:
+                return LinkOutage(
+                    f"{self.name}: link down {lo:.3f}s-{hi:.3f}s "
+                    f"(arrived {arrival:.3f}s)")
+        return None
 
     def shift_at(self, item_index: int, **params: float) -> "SimulatedLink":
         link_part = {k: v for k, v in params.items()

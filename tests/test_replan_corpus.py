@@ -77,12 +77,18 @@ def replay(spec: dict):
                          max_window_bytes=spec.get("max_window_bytes"),
                          **kwargs)
     reports = [StageReport(**r) for r in spec["reports"]]
-    return replan(plan, reports, damping=spec.get("damping", 1.0),
-                  intake_ratio=spec.get("intake_ratio"))
+    revised = replan(plan, reports, damping=spec.get("damping", 1.0),
+                     intake_ratio=spec.get("intake_ratio"))
+    # ``obituaries`` replays the mover's branch-death re-stamp: replan
+    # rebuilds the diagnosis from report evidence alone, and the mover
+    # re-applies its recorded obituaries after every revision — a
+    # failover fixture captures both halves of that contract
+    revised.diagnosis.update(spec.get("obituaries", {}))
+    return revised
 
 
 def test_corpus_is_present():
-    assert len(FIXTURES) >= 13, (
+    assert len(FIXTURES) >= 15, (
         f"expected the recorded-report corpus under {DATA_DIR}")
 
 
@@ -128,6 +134,26 @@ def test_replayed_verdict_is_stable(path):
                              max_window_bytes=spec.get("max_window_bytes"))
         assert revised.hops[0].window_bytes > base.hops[0].window_bytes
         assert revised.hops[0].workers >= base.hops[0].workers
+    retries = spec.get("expected_retries")
+    if retries is not None:
+        # the fault posture the fixture recorded: this many transient
+        # faults were retried away inside the reports, and the verdict
+        # charges the *element* (an honest re-price), never the pool
+        reports = [StageReport(**r) for r in spec["reports"]]
+        assert sum(r.retries for r in reports) == retries
+        base = plan_transfer(build_basin(spec), spec["item_bytes"],
+                             stages=tuple(spec["stages"]),
+                             ordered=spec.get("ordered", False))
+        assert [h.workers for h in revised.hops] == \
+            [h.workers for h in base.hops]
+    dead = spec.get("expected_dead_branch")
+    if dead is not None:
+        # the failover remedy: the corpse keeps its obituary through
+        # the replan and the survivors carry the revised weight
+        assert revised.diagnosis[dead].startswith("branch-dead")
+        by = {b.branch_id: b for b in revised.branches}
+        assert all(b.weight >= by[dead].weight
+                   for bid, b in by.items() if bid != dead)
     window = spec.get("expected_window_relative")
     if window is not None:
         clamped = plan_transfer(build_basin(spec), spec["item_bytes"],
