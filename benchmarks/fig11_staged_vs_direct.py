@@ -1,28 +1,238 @@
-"""Fig. 11 — the zx-vs-aws-cli contrast: a co-designed staged path vs the
-abstracted synchronous path, both with integrity on (the paper's transfer
-carried full checksumming).  The staged path overlaps hash + staging +
-delivery; the direct path serializes them — the 'cloud abstraction
-penalty' (§3.6: 30-50%)."""
+"""Fig. 11 re-ported — stream-vs-stage as a *planned* decision.
 
-from repro.core.mover import MoverConfig, UnifiedDataMover
+The seed form of this benchmark measured the staged-vs-direct contrast
+wall-clock and left the choice to the caller.  This form closes the
+loop on §3.6: ``plan_transfer(path="auto")`` prices every execution
+shape (direct cut-through, staged streams, windowed-staged, compressed
+wire) against the basin and the run EXECUTES the chosen shape on the
+simulated-basin harness in virtual time — deterministic, a pure
+function of the script.
 
-from .common import emit, payload_stream
+Two hard gates:
 
-N, ITEM = 24, 1 << 20
+* **sweep** — at every (basin regime, item size) point, the auto path
+  achieves >= 0.95x the best forced path, and somewhere in the sweep
+  the worst forced path loses by >= 1.5x (the decision is non-trivial:
+  picking wrong costs integer factors, exactly what the paper measures);
+* **regime shift** — a scripted mid-transfer route change (0.2 ms ->
+  40 ms) flips a correct direct choice into a stop-and-wait crawl; the
+  ``path-revised`` verdict switches the live transfer to
+  windowed-staged at a revision boundary and the post-switch run beats
+  the stay-the-course baseline >= 1.3x.
+
+Execution mapping: a plan whose shape is ``direct`` runs cut-through —
+its staging hop does NOT serve the burst-buffer tier (that copy is
+what the bypass skips); a ``compressed`` plan serves the wire with
+``item_bytes / ratio`` (the int8 transform's bytes actually crossing
+the bottleneck link).  Every other shape stages through the buffer at
+full wire bytes.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+from simbasin import SimHarness  # noqa: E402
+
+from repro.core.basin import DrainageBasin, Link, Tier, TierKind  # noqa: E402
+from repro.core.planner import COMPRESS_WIRE_RATIO, plan_transfer  # noqa: E402
+
+from .common import emit
+
+KIB = 1 << 10
+MIB = 1 << 20
+
+#: modeled-vs-measured tolerance for the auto gate: the sim executes
+#: the shapes it prices, so auto may only lose to a forced shape by
+#: measurement noise, never by a mispriced model
+AUTO_TOLERANCE = 0.95
+WORST_LOSES_BY = 1.5
+
+
+def slow_bb_basin() -> DrainageBasin:
+    """Fast endpoints, slow staging tier, short wire — direct country."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, 0.15e9, latency_s=50e-6),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9),
+         Link("bb", "dst", 5e9, rtt_s=0.2e-3)])
+
+
+def long_fat_basin() -> DrainageBasin:
+    """Fast staging, long-round-trip wire — windowed country."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, 6e9, latency_s=10e-6),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9),
+         Link("bb", "dst", 12e9, rtt_s=20e-3)])
+
+
+def wire_bound_basin() -> DrainageBasin:
+    """Everything fast except the wire — compressed country."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, 6e9, latency_s=10e-6),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9),
+         Link("bb", "dst", 0.6e9, rtt_s=1e-3)])
+
+
+def _measured(make_basin, item_bytes: int, path: str, *,
+              compressible: bool = False, n_items: int = 16) -> tuple:
+    """Plan with ``path`` and execute the planned shape in virtual
+    time; returns (achieved bytes/s, executed path label)."""
+    basin = make_basin()
+    plan = plan_transfer(basin, item_bytes, stages=("stage", "move"),
+                         path=path, compressible=compressible)
+    h = SimHarness()
+    bb_bw = next(t.bandwidth_bytes_per_s for t in basin.tiers
+                 if t.kind is TierKind.BURST_BUFFER)
+    bb = h.tier(bandwidth_bytes_per_s=bb_bw, wall_pacing_s=0.0)
+    wire = next(l for l in basin.links if l.dst == "dst")
+    link = h.link(bandwidth_bytes_per_s=wire.bandwidth_bytes_per_s,
+                  rtt_s=wire.rtt_s, wall_pacing_s=0.0)
+
+    if plan.path == "direct":
+        # cut-through: the staging copy never happens
+        def stage_tf(item):
+            return item
+    else:
+        stage_tf = h.service(bb)
+    ratio = COMPRESS_WIRE_RATIO if plan.path == "compressed" else 1.0
+
+    def move_tf(item, _link=link, _ratio=ratio):
+        _link.serve(max(1, int(len(item) / _ratio)))
+        return item
+    move_tf.channel = link
+
+    src = h.source(h.tier(bandwidth_bytes_per_s=8e9, wall_pacing_s=0.0),
+                   n_items, item_bytes)
+    rep = h.mover(plan=plan).bulk_transfer(
+        iter(src), lambda _: None,
+        transforms=[("stage", stage_tf), ("move", move_tf)])
+    return rep.throughput_bytes_per_s, plan.path
+
+
+def _sweep() -> None:
+    # small-item points move enough items to fill the window and
+    # amortize the pipeline ramp — a 256 KiB point on a 240 MB-BDP
+    # pipe measured over 16 items would be all transient
+    points = [
+        ("slow_bb_64k", slow_bb_basin, 64 * KIB, False, 256),
+        ("slow_bb_64m", slow_bb_basin, 64 * MIB, False, 16),
+        ("long_fat_256k", long_fat_basin, 256 * KIB, False, 256),
+        ("wire_bound_4m", wire_bound_basin, 4 * MIB, True, 48),
+    ]
+    nontrivial = False
+    for label, make_basin, item, compressible, n_items in points:
+        forced = {}
+        shapes = ["direct", "staged", "windowed-staged"]
+        if compressible:
+            shapes.append("compressed")
+        for shape in shapes:
+            bps, _ = _measured(make_basin, item, shape,
+                               compressible=compressible,
+                               n_items=n_items)
+            forced[shape] = bps
+            emit(f"fig11/{label}_{shape}", item / bps * 1e6,
+                 f"{bps / 1e6:.1f} MB/s forced",
+                 path=shape, item_bytes=item,
+                 throughput_mb_s=round(bps / 1e6, 1))
+        auto_bps, chosen = _measured(make_basin, item, "auto",
+                                     compressible=compressible,
+                                     n_items=n_items)
+        best = max(forced.values())
+        worst = min(forced.values())
+        emit(f"fig11/{label}_auto", item / auto_bps * 1e6,
+             f"{auto_bps / 1e6:.1f} MB/s auto->{chosen} "
+             f"(best forced {best / 1e6:.1f}, worst {worst / 1e6:.1f})",
+             path=chosen, item_bytes=item,
+             throughput_mb_s=round(auto_bps / 1e6, 1))
+        if auto_bps < AUTO_TOLERANCE * best:
+            raise SystemExit(
+                f"fig11: auto chose {chosen} at {label} and achieved "
+                f"{auto_bps / 1e6:.1f} MB/s < {AUTO_TOLERANCE:.2f}x the "
+                f"best forced path ({best / 1e6:.1f} MB/s)")
+        if worst * WORST_LOSES_BY <= best:
+            nontrivial = True
+    if not nontrivial:
+        raise SystemExit(
+            "fig11: no sweep point separates the forced paths by "
+            f">= {WORST_LOSES_BY}x — the decision the engine automates "
+            "is trivial and the sweep no longer exercises it")
+
+    # KiB->GiB endpoint, model-priced (a GiB item's staging residency
+    # would dwarf the harness; the decision itself is the figure)
+    plan = plan_transfer(slow_bb_basin(), 1 << 30,
+                         stages=("stage", "move"), path="auto")
+    emit("fig11/slow_bb_1g_model", 0.0,
+         f"auto->{plan.path} " + " ".join(
+             f"{k}={v / 1e6:.0f}MB/s"
+             for k, v in sorted(plan.path_scores.items())),
+         path=plan.path, item_bytes=1 << 30,
+         throughput_mb_s=round(plan.path_scores[plan.path] / 1e6, 1))
+
+
+def _regime_shift(policy: str, replan_every: int) -> tuple:
+    """One 96-item transfer over the slow-bb basin whose wire round
+    trip is re-routed 0.2 ms -> 40 ms at the 24th served item.  Both
+    runs execute identical simulated services (staging copy included)
+    so the only difference is what the planner does about the shift."""
+    item = 256 * KIB
+    plan = plan_transfer(slow_bb_basin(), item, stages=("stage", "move"),
+                         path=policy)
+    h = SimHarness()
+    bb = h.tier(bandwidth_bytes_per_s=0.15e9, wall_pacing_s=0.0)
+    link = h.link(bandwidth_bytes_per_s=5e9, rtt_s=0.2e-3,
+                  wall_pacing_s=0.0)
+    link.shift_at(24, rtt_s=40e-3)
+    src = h.source(h.tier(bandwidth_bytes_per_s=8e9, wall_pacing_s=0.0),
+                   96, item)
+    mover = h.mover(plan=plan)
+    rep = mover.bulk_transfer(
+        iter(src), lambda _: None,
+        transforms=[("stage", h.service(bb)), ("move", h.service(link))],
+        replan_every_items=replan_every)
+    return rep, mover.last_plan
+
+
+def _shift_gate() -> None:
+    stay, stay_plan = _regime_shift("direct", 0)
+    auto, auto_plan = _regime_shift("auto", 16)
+    emit("fig11/shift_stay_direct", stay.elapsed_s / stay.items * 1e6,
+         f"{stay.throughput_bytes_per_s / 1e6:.1f} MB/s stop-and-wait "
+         "rode the 40 ms route to the end",
+         path=stay_plan.path, item_bytes=256 * KIB,
+         throughput_mb_s=round(stay.throughput_bytes_per_s / 1e6, 1))
+    emit("fig11/shift_auto_revised", auto.elapsed_s / auto.items * 1e6,
+         f"{auto.throughput_bytes_per_s / 1e6:.1f} MB/s "
+         f"path={auto_plan.path} replans={auto.replans} "
+         f"verdict={auto_plan.diagnosis.get('path', '-')}",
+         path=auto_plan.path, item_bytes=256 * KIB,
+         throughput_mb_s=round(auto.throughput_bytes_per_s / 1e6, 1))
+    if auto_plan.path != "windowed-staged" \
+            or not auto_plan.diagnosis.get("path", "").startswith(
+                "path-revised(direct->"):
+        raise SystemExit(
+            f"fig11: the scripted regime shift did not produce a "
+            f"path-revised switch (final path {auto_plan.path!r}, "
+            f"diagnosis {auto_plan.diagnosis})")
+    gain = (auto.throughput_bytes_per_s
+            / max(stay.throughput_bytes_per_s, 1e-9))
+    if gain < 1.3:
+        raise SystemExit(
+            f"fig11: path-revised run beat stay-the-course by only "
+            f"x{gain:.2f} (< 1.3) — the online switch stopped paying")
 
 
 def run() -> None:
-    mover = UnifiedDataMover(MoverConfig(staging_capacity=8,
-                                         staging_workers=4, checksum=True))
-    staged = mover.bulk_transfer(
-        payload_stream(N, ITEM, latency_s=5e-3), lambda x: None)
-    direct = mover.direct_transfer(
-        payload_stream(N, ITEM, latency_s=5e-3), lambda x: None)
-    assert staged.checksum == direct.checksum, "integrity mismatch"
-    penalty = 1.0 - (direct.throughput_bytes_per_s
-                     / staged.throughput_bytes_per_s)
-    emit("fig11/staged_zx_like", staged.elapsed_s / N * 1e6,
-         f"{staged.throughput_bytes_per_s / 1e6:.1f} MB/s (checksummed)")
-    emit("fig11/direct_cli_like", direct.elapsed_s / N * 1e6,
-         f"{direct.throughput_bytes_per_s / 1e6:.1f} MB/s "
-         f"abstraction_penalty={penalty:.1%}")
+    _sweep()
+    _shift_gate()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -57,8 +57,11 @@ SUITES = {
 #: fig10 and fault_recovery run planned transfers in virtual time and
 #: hard-gate the storage-bound roof and the PR 9 survive-layer claims
 #: (chaos completion + checksum, failover vs restart, ledger resume).
+#: fig11 executes planner-chosen paths in virtual time and hard-gates
+#: the stream-vs-stage decision engine (auto >= 0.95x best forced at
+#: every sweep point; the path-revised switch beats stay-the-course).
 QUICK = ["table5", "fault_recovery", "fig2", "fig4", "fig8", "fig10",
-         "fleet_arbitration", "live_swap", "multipath",
+         "fig11", "fleet_arbitration", "live_swap", "multipath",
          "staging_throughput"]
 
 

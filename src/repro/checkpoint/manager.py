@@ -102,7 +102,7 @@ def _leaf_plan(total_bytes: int, n_leaves: int,
         return plan
     item_bytes = max(1, total_bytes // max(1, n_leaves))
     return plan_transfer(checkpoint_basin(), item_bytes,
-                         stages=("serialize",))
+                         stages=("serialize",), path="auto")
 
 
 def _prepare_tmp(root: str, step: int) -> tuple[str, str]:
@@ -179,7 +179,7 @@ def save_checkpoint(root: str, step: int, tree: Any, *,
             if plan is None or not plan.is_multipath:
                 item_bytes = max(1, total_bytes // max(1, len(snapshot)))
                 plan = plan_transfer(mirrored_checkpoint_basin(), item_bytes,
-                                     stages=("serialize",))
+                                     stages=("serialize",), path="auto")
             primary_id = plan.branches[0].branch_id
             write_mirror = _make_writer(mirror_dirs[1], None)
             transforms = {

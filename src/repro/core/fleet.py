@@ -82,6 +82,11 @@ _REL_TOL = 1e-9
 #: share on the next allocation instead of waiting on a hung grant
 DEAD_ELEMENT_BYTES_PER_S = 1.0
 
+#: observed throughput across a derated element above which a
+#: post-derate probe reads as recovery (bytes/s) — far enough above the
+#: 1 B/s obituary that retry trickle can never fake a resurrection
+RECOVERY_PROBE_BYTES_PER_S = 1e3
+
 
 @dataclasses.dataclass
 class _Member:
@@ -206,6 +211,9 @@ class FleetArbiter:
         self._members: dict[str, _Member] = {}
         self._queue: list[tuple[_Member, Admission]] = []
         self._seq = 0
+        #: pre-derate bandwidth estimates of dead elements, keyed by tier
+        #: name — what :meth:`element_recovered` restores
+        self._derated: dict[str, float] = {}
 
     # -- membership --------------------------------------------------------
 
@@ -225,7 +233,21 @@ class FleetArbiter:
         rejects it — the live fleet's grants are untouched either way.
         Remaining keyword arguments (``stages``, ``checksum``,
         ``ordered``, ``batch_items``, ...) pass through to
-        :func:`~repro.core.planner.plan_transfer` on every grant."""
+        :func:`~repro.core.planner.plan_transfer` on every grant.
+
+        ``path`` is overloaded the way the planner reads it: a
+        *sequence of tier names* restricts the member's route (above),
+        while a plain *string* (``"auto"`` or a forced execution shape)
+        is the planner's path policy and passes through to
+        ``plan_transfer`` — a granted member planning ``path="auto"``
+        re-prices its shape candidates against every re-grant, so the
+        stream-vs-stage choice tracks the member's share of the basin,
+        not the raw line."""
+        if isinstance(path, str):
+            # execution-shape policy, not a tier route: the planner's
+            # path argument (validated there), re-priced on every grant
+            plan_kwargs["path"] = path
+            path = None
         if item_bytes <= 0:
             raise ValueError("item_bytes must be > 0")
         if min_bytes_per_s < 0:
@@ -324,11 +346,62 @@ class FleetArbiter:
                        for t in self.basin.tiers}
             if already[tier_name] <= DEAD_ELEMENT_BYTES_PER_S:
                 return          # idempotent: the obituary already landed
+            # keep the pre-derate estimate so a returned element can be
+            # re-admitted at its known capability, not a guess
+            self._derated[tier_name] = already[tier_name]
             tiers = [dataclasses.replace(
                          t, bandwidth_bytes_per_s=DEAD_ELEMENT_BYTES_PER_S)
                      if t.name == tier_name else t
                      for t in self.basin.tiers]
             self.rebalance(basin=self.basin.replace_tiers(tiers))
+
+    def element_recovered(self, tier_name: str,
+                          bandwidth_bytes_per_s: Optional[float] = None
+                          ) -> None:
+        """A derated element returned to service: restore its pre-derate
+        bandwidth estimate (or an explicit revised one) and re-level the
+        fleet — survivors give back the absorbed share, shed floors
+        re-fit, and queued asks are promoted against the recovered
+        capacity.  The exact inverse of :meth:`element_died`; no-ops for
+        tiers that are not currently derated."""
+        with self._lock:
+            stored = self._derated.pop(tier_name, None)
+            bw = bandwidth_bytes_per_s if bandwidth_bytes_per_s else stored
+            if bw is None or bw <= DEAD_ELEMENT_BYTES_PER_S:
+                return
+            by_name = {t.name: t for t in self.basin.tiers}
+            tier = by_name.get(tier_name)
+            if tier is None or tier.bandwidth_bytes_per_s > \
+                    DEAD_ELEMENT_BYTES_PER_S:
+                return          # unknown, or never actually derated
+            tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=bw)
+                     if t.name == tier_name else t
+                     for t in self.basin.tiers]
+            self.rebalance(basin=self.basin.replace_tiers(tiers))
+
+    def probe_element(self, tier_name: str,
+                      observed_bytes_per_s: float) -> bool:
+        """Recovery *detection*: a member that kept (or resumed) pushing
+        traffic across a derated tier reports what it actually observed
+        through it.  A clean post-derate probe — observed throughput far
+        above the 1 B/s obituary — is the evidence the element returned;
+        the arbiter re-admits it at the stored pre-derate estimate
+        (clamped to the observation when the element came back weaker)
+        and re-levels.  Returns True when the probe triggered
+        re-admission."""
+        with self._lock:
+            by_name = {t.name: t for t in self.basin.tiers}
+            tier = by_name.get(tier_name)
+            if tier is None or tier.bandwidth_bytes_per_s > \
+                    DEAD_ELEMENT_BYTES_PER_S:
+                return False
+            if observed_bytes_per_s <= RECOVERY_PROBE_BYTES_PER_S:
+                return False    # still (near-)dead: obituary stands
+            stored = self._derated.get(tier_name)
+            bw = observed_bytes_per_s if stored is None \
+                else min(stored, observed_bytes_per_s)
+            self.element_recovered(tier_name, bw)
+            return True
 
     def _make_member(self, name, item_bytes, qos, min_bytes_per_s, path,
                      on_revision, plan_kwargs) -> _Member:

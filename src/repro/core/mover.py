@@ -131,6 +131,10 @@ class TransferReport:
     planned_bytes_per_s: Optional[float] = None
     #: online plan revisions applied mid-transfer (``replan_every_items``)
     replans: int = 0
+    #: execution shape the transfer finished on (``TransferPlan.path``) —
+    #: differs from the initial choice when a ``path-revised`` verdict
+    #: switched shapes mid-stream
+    path: Optional[str] = None
 
     @property
     def throughput_bytes_per_s(self) -> float:
@@ -345,6 +349,18 @@ class UnifiedDataMover:
             return max(1, int(batch_items))
         return hop.batch_items if hop is not None else 1
 
+    @staticmethod
+    def _hop_retry(hop: Optional[HopPlan]) -> dict:
+        """Resize kwargs carrying a hop's revised fault posture — a
+        fault-degraded element's re-priced ``retry_budget`` /
+        ``backoff_base_s`` apply to the running stage at the same
+        zero-drain boundary as a window raise.  Empty for unplanned hops
+        (those keep their construction-time posture)."""
+        if hop is None:
+            return {}
+        return {"retry_budget": hop.retry_budget,
+                "backoff_base_s": hop.backoff_base_s}
+
     def _deal_batch(self, plan: TransferPlan,
                     batch_items: Optional[int] = None) -> int:
         """Split-node slab size: the smallest first-hop batch across
@@ -488,7 +504,8 @@ class UnifiedDataMover:
                                   window_bytes=self._hop_window(hop),
                                   rtt_s=self._hop_rtt(hop),
                                   batch_items=self._hop_batch(hop,
-                                                              batch_items))
+                                                              batch_items),
+                                  **self._hop_retry(hop))
 
             fleet.bind(_fleet_apply)
         items = 0
@@ -531,7 +548,8 @@ class UnifiedDataMover:
                                   window_bytes=self._hop_window(hop),
                                   rtt_s=self._hop_rtt(hop),
                                   batch_items=self._hop_batch(hop,
-                                                              batch_items))
+                                                              batch_items),
+                                  **self._hop_retry(hop))
         if fleet is not None:
             fleet.unbind()
             active = applied[0]
@@ -701,6 +719,7 @@ class UnifiedDataMover:
             checksum=digest.hexdigest(),
             planned_bytes_per_s=planned,
             replans=replans,
+            path=active.path if active is not None else None,
         ))
 
     # -- public API -----------------------------------------------------------
@@ -1201,7 +1220,8 @@ class UnifiedDataMover:
                                       window_bytes=self._hop_window(hop),
                                       rtt_s=self._hop_rtt(hop),
                                       batch_items=self._hop_batch(
-                                          hop, batch_items))
+                                          hop, batch_items),
+                                      **self._hop_retry(hop))
                     if route == "steal":
                         agg = sum(b.hops[0].capacity
                                   for b in new_plan.branches)
@@ -1315,7 +1335,8 @@ class UnifiedDataMover:
                                       window_bytes=self._hop_window(hop),
                                       rtt_s=self._hop_rtt(hop),
                                       batch_items=self._hop_batch(
-                                          hop, batch_items))
+                                          hop, batch_items),
+                                      **self._hop_retry(hop))
                     if route == "steal":
                         agg = sum(b.hops[0].capacity
                                   for b in active.branches)
@@ -1629,6 +1650,7 @@ class UnifiedDataMover:
             checksum=digest.hexdigest(),
             planned_bytes_per_s=planned,
             replans=replans,
+            path=active.path if active is not None else None,
         ))
 
     # -- direct (un-staged) path, for comparison -------------------------------
@@ -1663,4 +1685,5 @@ class UnifiedDataMover:
             stage_reports=[],
             checksum=digest.hexdigest(),
             planned_bytes_per_s=planned,
+            path="direct",
         ))

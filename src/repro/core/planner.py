@@ -106,7 +106,7 @@ import dataclasses
 import math
 from typing import Mapping, Optional, Sequence, Union
 
-from .basin import DrainageBasin, Tier
+from .basin import DrainageBasin, Tier, TierKind
 from .staging import StageReport
 
 #: ceiling on per-hop concurrency (a planning guard, not a tuning knob:
@@ -147,6 +147,38 @@ RTT_REVISION_TOLERANCE = 0.2
 #: regime, whose remedy deepens the window by (1 + loss) and lowers the
 #: promise honestly wherever a clamp keeps the window shallow
 LOSS_RATE_THRESHOLD = 0.05
+#: execution shapes the path decision engine prices (§3.6's stream-vs-
+#: stage question made a planned quantity).  ``direct`` is the cut-
+#: through stream: one worker, no burst-buffer depth, stop-and-wait on
+#: any latency-bearing link — it bypasses the staging copy entirely.
+#: ``staged`` is N synchronous streams through the burst buffer (each
+#: worker pays the round trip per item).  ``windowed-staged`` is the
+#: historical full shape: staged concurrency plus BDP-sized transport
+#: credit.  ``compressed`` is windowed-staged with the int8 wire
+#: transform: :data:`COMPRESS_WIRE_RATIO` fewer bytes cross every link,
+#: paid for at :data:`COMPRESS_BYTES_PER_S` of quantize compute.
+PATH_CHOICES = ("direct", "staged", "windowed-staged", "compressed")
+#: wire-byte reduction of the compressed path: float32 payloads quantize
+#: to int8 (+ per-block scales) via ``integrity.compress_transform`` —
+#: 4x fewer bytes on every link the plan prices
+COMPRESS_WIRE_RATIO = 4.0
+#: modeled quantize/dequantize service rate (bytes of UNCOMPRESSED
+#: payload per second) — the compute charge the compressed-wire path
+#: pays for its wire relief; it only wins when a link is the priced
+#: bottleneck by more than this ceiling allows
+COMPRESS_BYTES_PER_S = 8e9
+#: online path-revision hysteresis: a replan abandons the executing path
+#: only when the re-scored challenger beats the incumbent's re-scored
+#: rate by this factor.  A live shape switch re-parameterizes a running
+#: pipeline; near-ties must not flap it every revision boundary.
+PATH_REVISION_MARGIN = 1.2
+#: ceiling on a fault-priced retry budget: past this, a flapping element
+#: needs failover (branch death / fleet re-admission), not more patience
+MAX_RETRY_BUDGET = 8
+#: default transient-failure posture (budget, backoff base) for an
+#: element with no observed faults in the telemetry priors
+DEFAULT_RETRY_BUDGET = 2
+DEFAULT_BACKOFF_BASE_S = 0.05
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +302,33 @@ class TransferPlan:
     rate_cap_bytes_per_s: Optional[float] = None
     host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S
     accel_digest_bytes_per_s: float = ACCEL_DIGEST_BYTES_PER_S
+    #: the execution shape the hops are parameterized for (one of
+    #: :data:`PATH_CHOICES`).  Legacy derivations (no ``path=`` given)
+    #: label what they built — ``"windowed-staged"`` when any hop carries
+    #: transport credit, ``"staged"`` otherwise — without pricing
+    #: candidates.
+    path: str = "windowed-staged"
+    #: the caller's path request, carried through re-derivations: None
+    #: (legacy, no decision engine), ``"auto"`` (replan may re-choose —
+    #: the **path-revised** verdict), or a forced member of
+    #: :data:`PATH_CHOICES` (pinned; replan re-prices but never switches)
+    path_policy: Optional[str] = None
+    #: candidate shape -> modeled end-to-end bytes/s over the item-size
+    #: distribution; empty on legacy derivations.  ``describe()`` prints
+    #: it so an operator can see what the chosen path beat.
+    path_scores: dict[str, float] = dataclasses.field(default_factory=dict)
+    #: normalized item-size histogram ``((bytes, weight), ...)`` the
+    #: candidates were priced over (None = priced at ``item_bytes``).  A
+    #: small-file storm prices its per-item latency honestly instead of
+    #: hiding behind the mean.
+    item_bytes_dist: Optional[tuple] = None
+    #: the compressed-wire candidate is only enumerable when the caller
+    #: vouches the payload survives the int8 transform
+    compressible: bool = False
+    #: element name ("src->dst" link or tier) -> observed transient-fault
+    #: rate (retries per item), the telemetry prior retry budgets are
+    #: priced from; None = every element keeps the cheap default posture
+    fault_priors: Optional[Mapping[str, float]] = None
 
     @property
     def stages(self) -> list[str]:
@@ -294,6 +353,15 @@ class TransferPlan:
     def total_buffer_items(self) -> int:
         hops = [h for b in self.branches for h in b.hops] or self.hops
         return sum(h.capacity for h in hops)
+
+    def _fmt_path(self) -> str:
+        """Chosen execution shape + per-candidate scores; "" on legacy
+        plans so their describe() stays byte-identical."""
+        if not self.path_scores:
+            return ""
+        scores = ",".join(f"{name}={rate / 1e6:.1f}"
+                          for name, rate in sorted(self.path_scores.items()))
+        return f" path={self.path} scores[{scores}]MB/s"
 
     @staticmethod
     def _fmt_hop(h: HopPlan) -> str:
@@ -331,7 +399,8 @@ class TransferPlan:
                 cap = (f" arbiter-capped@"
                        f"{self.rate_cap_bytes_per_s / 1e6:.1f} MB/s")
             return (f"TransferPlan({hops}; planned="
-                    f"{self.planned_bytes_per_s / 1e6:.1f} MB/s{cap}, "
+                    f"{self.planned_bytes_per_s / 1e6:.1f} MB/s{cap}"
+                    f"{self._fmt_path()}, "
                     f"checksum@{self.checksum_index}{place}{diag})")
         split = (f"split:{self.checksum_placement}"
                  if self.checksum_at_split else "None")
@@ -340,7 +409,8 @@ class TransferPlan:
             cap = (f" arbiter-capped@"
                    f"{self.rate_cap_bytes_per_s / 1e6:.1f} MB/s")
         lines = [f"TransferPlan({len(self.branches)} branches, planned="
-                 f"{self.planned_bytes_per_s / 1e6:.1f} MB/s aggregate{cap}, "
+                 f"{self.planned_bytes_per_s / 1e6:.1f} MB/s aggregate{cap}"
+                 f"{self._fmt_path()}, "
                  f"checksum@{split}"]
         shown = set()
         for b in self.branches:
@@ -381,6 +451,11 @@ class HopRevision:
     #: a stale ACK clock mis-paces admission and mis-reads the next
     #: revision window's evidence.
     rtt_s: float = 0.0
+    #: revised transient-fault posture (fault-prior pricing): the running
+    #: stage adopts the new budget/backoff without a drain, so a hop that
+    #: just proved it flaps gets its deeper budget before the next fault
+    retry_budget: int = DEFAULT_RETRY_BUDGET
+    backoff_base_s: float = DEFAULT_BACKOFF_BASE_S
 
 
 @dataclasses.dataclass
@@ -402,9 +477,16 @@ class PlanDelta:
         dataclasses.field(default_factory=dict)
     #: branch id -> new traffic weight (branches whose share shifted)
     weights: dict[str, float] = dataclasses.field(default_factory=dict)
+    #: the revised plan's execution shape when it differs from the old
+    #: plan's (a **path-revised** switch): the mover rebuilds the pipeline
+    #: shape — via the same per-hop resizes, since every shape is a
+    #: parameterization of the same stage chain — while buffers, ledger,
+    #: fleet grant, and the stream digest carry over.  None = same shape.
+    path: Optional[str] = None
 
     def __bool__(self) -> bool:
-        return bool(self.hops or self.branch_hops or self.weights)
+        return bool(self.hops or self.branch_hops or self.weights
+                    or self.path)
 
 
 def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
@@ -420,18 +502,28 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
         # rtt_s is part of the live-applicable surface: an rtt-revised
         # plan whose (clamped) window came out numerically identical must
         # still produce a truthy delta, or the running WindowedStage
-        # keeps a stale ACK clock through the revision
+        # keeps a stale ACK clock through the revision.  The retry
+        # posture rides the same surface: a fault-priced budget must
+        # reach the running stage before the element's next flap.
         return prev is None or (
-            (h.capacity, h.workers, h.window_bytes, h.batch_items, h.rtt_s)
+            (h.capacity, h.workers, h.window_bytes, h.batch_items, h.rtt_s,
+             h.retry_budget, h.backoff_base_s)
             != (prev.capacity, prev.workers, prev.window_bytes,
-                prev.batch_items, prev.rtt_s))
+                prev.batch_items, prev.rtt_s,
+                prev.retry_budget, prev.backoff_base_s))
 
+    def revision(h: HopPlan) -> HopRevision:
+        return HopRevision(h.name, h.capacity, h.workers, h.window_bytes,
+                           h.batch_items, h.rtt_s,
+                           retry_budget=h.retry_budget,
+                           backoff_base_s=h.backoff_base_s)
+
+    if new.path != old.path:
+        delta.path = new.path
     old_hops = {h.name: h for h in old.hops}
     for h in new.hops:
         if changed_hop(h, old_hops.get(h.name)):
-            delta.hops[h.name] = HopRevision(h.name, h.capacity, h.workers,
-                                             h.window_bytes, h.batch_items,
-                                             h.rtt_s)
+            delta.hops[h.name] = revision(h)
     old_branches = {b.branch_id: b for b in old.branches}
     for b in new.branches:
         prev = old_branches.get(b.branch_id)
@@ -441,9 +533,7 @@ def plan_delta(old: TransferPlan, new: TransferPlan) -> PlanDelta:
         changed = {}
         for h in b.hops:
             if changed_hop(h, prev_hops.get(h.name)):
-                changed[h.name] = HopRevision(h.name, h.capacity, h.workers,
-                                              h.window_bytes, h.batch_items,
-                                              h.rtt_s)
+                changed[h.name] = revision(h)
         if changed:
             delta.branch_hops[b.branch_id] = changed
     return delta
@@ -548,6 +638,8 @@ def _plan_path(
     max_window_bytes: float | None = None,
     batch_items: int = 1,
     rate_cap: float | None = None,
+    shape: str = "windowed-staged",
+    wire_ratio: float = 1.0,
 ) -> tuple[list[HopPlan], list[float], float]:
     """Per-hop parameters for one *linear* path.  ``target`` overrides the
     rate the hops are sized against (a branch's allocated share); default
@@ -558,13 +650,25 @@ def _plan_path(
     burst capacity.  ``rate_cap`` is an arbiter grant: windows size from
     ``grant x RTT`` instead of the link's full BDP, so a capped windowed
     hop self-paces to its share on a link it does not own — uncapped
-    plans keep the historical BDP sizing bit for bit."""
+    plans keep the historical BDP sizing bit for bit.
+
+    ``shape`` parameterizes the same stage chain into one of
+    :data:`PATH_CHOICES`: ``"windowed-staged"`` (and ``"compressed"``,
+    which additionally scales every link's wire bytes by ``wire_ratio``)
+    keep the historical derivation; ``"staged"`` runs N synchronous
+    streams — each worker pays the full round trip per item, the window
+    holds exactly one item per worker; ``"direct"`` is the cut-through
+    stream — one worker, one buffer slot, stop-and-wait credit of a
+    single item on any latency-bearing link.  Because shapes differ only
+    in hop parameters, a live path switch is applied with the same
+    zero-drain resizes as any other revision."""
     tiers = basin.tiers
     n = len(stages)
     if target is None:
         target = _raw_line_rate(basin)
     if rate_cap is not None:
         target = min(target, rate_cap)
+    sync_rtt = shape in ("direct", "staged")
 
     hops: list[HopPlan] = []
     headroom: list[float] = []          # uncapped sustainable rate per hop
@@ -604,23 +708,34 @@ def _plan_path(
             # shared link it would overshoot the grant — and K overshoots
             # sum to a standing queue whose delay lands unevenly (big
             # windows burst hardest), skewing every class off its share.
-            capped = rate_cap is not None and target * rtt < bdp
+            # wire bytes per item: the compressed shape moves the int8
+            # form across the link, so window credit (which meters the
+            # WIRE) is sized and charged in compressed bytes while hop
+            # rates stay in delivered (uncompressed) bytes
+            wire_item = item_bytes / wire_ratio
+            capped = rate_cap is not None and (target / wire_ratio) * rtt < bdp
             if capped:
-                bdp = target * rtt
+                bdp = (target / wire_ratio) * rtt
             slack = 1.0 if capped else WINDOW_HEADROOM
             bdp_eff = bdp * (1.0 + loss)
-            win = bdp_eff * slack
-            # coarse admission units (§3.4): the window admits whole
-            # items, so once one item is a sizable fraction of the BDP a
-            # BDP-sized window degenerates toward stop-and-wait — it
-            # cannot hold the item in transmission AND its unACKed
-            # predecessors.  Size for both, and throughput stays flat
-            # from KiB items to GiB items (the fig4 claim).
-            if item_bytes * 4 > bdp_eff:
-                win = (bdp_eff + item_bytes) * slack
+            if shape == "direct":
+                # stop-and-wait: exactly one item's wire bytes in flight;
+                # every item pays the round trip (charged in rate_1 below)
+                win = wire_item
+            else:
+                win = bdp_eff * slack
+                # coarse admission units (§3.4): the window admits whole
+                # items, so once one item is a sizable fraction of the BDP
+                # a BDP-sized window degenerates toward stop-and-wait — it
+                # cannot hold the item in transmission AND its unACKed
+                # predecessors.  Size for both, and throughput stays flat
+                # from KiB items to GiB items (the fig4 claim).
+                if wire_item * 4 > bdp_eff:
+                    win = (bdp_eff + wire_item) * slack
             if math.isfinite(cap_bytes) and cap_bytes < win:
                 win = cap_bytes
-                hop_cap = min(hop_cap, win / (rtt * (1.0 + loss)))
+                hop_cap = min(hop_cap,
+                              wire_ratio * win / (rtt * (1.0 + loss)))
             if max_window_bytes is not None:
                 win = min(win, float(max_window_bytes))
         # slab size: ordered transfers pin to per-item (a slab reorders
@@ -633,10 +748,14 @@ def _plan_path(
         # a lossy hop's workers each carry the expected retransmit
         # round trip per item; the pool is staffed for it, and when even
         # ``max_workers`` cannot reach the line, the hop's promise drops
-        # with the staffed pool — honestly, not as a fidelity gap
+        # with the staffed pool — honestly, not as a fidelity gap.  The
+        # synchronous shapes (direct, staged) pay the FULL round trip
+        # per item — that is what makes them lose on a long fat link and
+        # what makes their model honest when they win anyway.
+        extra = rtt * (1.0 + loss) if (sync_rtt and rtt > 0) else loss * rtt
         rate_1 = _worker_rate(up, down, item_bytes, batch_items=b,
-                              extra_latency_s=loss * rtt)
-        if ordered:
+                              extra_latency_s=extra)
+        if ordered or shape == "direct":
             workers = 1
         else:
             workers = max(1, min(max_workers, math.ceil(target / rate_1)))
@@ -657,6 +776,22 @@ def _plan_path(
             # whatever clamped capacity also clamps the slab (a slab must
             # fit the buffer twice over, or put_many serializes in waves)
             b = max(1, min(b, capacity // 2))
+        if shape == "direct":
+            # cut-through: no burst-buffer depth, no pool, no slabs —
+            # the item passes straight through, which is exactly where
+            # the shape's win (no staging copy) and its loss (no
+            # concurrency to amortize latency) both come from
+            workers, capacity, b = 1, 1, 1
+        elif shape == "staged" and win > 0:
+            # N synchronous streams: window credit of one item per
+            # worker, so each stream is stop-and-wait on its own round
+            # trip while the pool overlaps them — transport credit never
+            # exceeds what the synchronous semantics can use
+            win = workers * (item_bytes / wire_ratio)
+            if math.isfinite(cap_bytes):
+                win = min(win, cap_bytes)
+            if max_window_bytes is not None:
+                win = min(win, float(max_window_bytes))
         headroom.append(workers * rate_1)
         hop_rate = min(workers * rate_1, hop_cap)
         hops.append(HopPlan(name=name, capacity=capacity, workers=workers,
@@ -667,8 +802,16 @@ def _plan_path(
                             loss_rate=loss if win > 0 else 0.0,
                             batch_items=b))
 
-    planned = min(min(h.rate_bytes_per_s for h in hops),
-                  basin.achievable_throughput())
+    achievable = basin.achievable_throughput()
+    if wire_ratio > 1.0:
+        # the compressed wire carries ratio-fewer bytes per delivered
+        # byte: links stop binding until their boosted rate does, and the
+        # quantize kernel's service rate becomes the new ceiling
+        rates = [t.bandwidth_bytes_per_s for t in tiers]
+        rates.extend((l.bandwidth_bytes_per_s or math.inf) * wire_ratio
+                     for l in basin.links)
+        achievable = min(min(rates), COMPRESS_BYTES_PER_S)
+    planned = min(min(h.rate_bytes_per_s for h in hops), achievable)
     return hops, headroom, planned
 
 
@@ -701,6 +844,218 @@ def _branch_ids(paths: Sequence[tuple[str, ...]]) -> list[str]:
     return ["->".join(p) for p in paths]
 
 
+# ---------------------------------------------------------------------------
+# Path decision engine: §3.6's stream-vs-stage question, priced per basin
+# ---------------------------------------------------------------------------
+
+
+def _resolve_dist(item_bytes_dist, item_bytes: float
+                  ) -> tuple[tuple[float, float], ...]:
+    """Normalize an item-size histogram to ``((bytes, weight), ...)``.
+
+    Accepts a mapping ``bytes -> weight`` or a sequence of pairs; None
+    degenerates to a single bucket at ``item_bytes``.  Weights are
+    relative (they need not sum to 1)."""
+    if item_bytes_dist is None:
+        return ((float(item_bytes), 1.0),)
+    if isinstance(item_bytes_dist, collections.abc.Mapping):
+        pairs = list(item_bytes_dist.items())
+    else:
+        pairs = [tuple(p) for p in item_bytes_dist]
+    out = []
+    for b, w in pairs:
+        b, w = float(b), float(w)
+        if b <= 0 or w <= 0:
+            raise ValueError(
+                f"item_bytes_dist buckets must be positive, got ({b}, {w})")
+        out.append((b, w))
+    if not out:
+        raise ValueError("item_bytes_dist must not be empty")
+    return tuple(out)
+
+
+def _retry_posture(fault_rate: float) -> tuple[int, float]:
+    """(retry_budget, backoff_base_s) priced from an element's observed
+    transient-fault rate (retries per item — the inverse of its MTBF in
+    items).  A fault-free element keeps the cheap default; a flapping one
+    gets budget in proportion to how often it flaps (more faults per item
+    -> more attempts funded before the failure is final) and a shorter
+    backoff base (frequent transient blips clear fast; the budget, not
+    long waits, carries the persistence risk)."""
+    if fault_rate <= 0:
+        return DEFAULT_RETRY_BUDGET, DEFAULT_BACKOFF_BASE_S
+    budget = min(MAX_RETRY_BUDGET,
+                 DEFAULT_RETRY_BUDGET + math.ceil(fault_rate / 0.05))
+    backoff = max(0.01,
+                  DEFAULT_BACKOFF_BASE_S * (1.0 - min(0.8, 10.0 * fault_rate)))
+    return budget, backoff
+
+
+def _stamp_retry_budgets(hops: list[HopPlan],
+                         priors: Mapping[str, float]) -> None:
+    """Re-price each hop's fault posture from the telemetry priors, in
+    place (hop lists are shared between ``plan.hops`` and the primary
+    branch — mutating preserves that identity)."""
+    for i, h in enumerate(hops):
+        f = priors.get(h.window_link or h.up_tier,
+                       priors.get(h.up_tier, 0.0))
+        budget, backoff = _retry_posture(f)
+        if (budget, backoff) != (h.retry_budget, h.backoff_base_s):
+            hops[i] = dataclasses.replace(h, retry_budget=budget,
+                                          backoff_base_s=backoff)
+
+
+def _shape_rate(basin: DrainageBasin, shape: str, item_bytes: float, *,
+                checksum: bool, digest_rate: float, ordered: bool,
+                max_workers: int, max_window_bytes: Optional[float],
+                rate_cap: Optional[float],
+                target: Optional[float] = None) -> float:
+    """Modeled end-to-end bytes/s of one execution shape over one linear
+    path at one item size — the pricing model behind ``path="auto"``.
+
+    The four shapes price §3.6's trade directly:
+
+    * ``direct`` — serialized cut-through: every non-staging element's
+      transmit + latency is paid per item, in sequence, plus the full
+      round trip of every link (stop-and-wait) and the serial digest when
+      integrity is on.  Interior BURST_BUFFER tiers are *bypassed* — the
+      direct stream never pays the staging copy, which is exactly how it
+      wins on a path whose staging tier is the priced bottleneck.
+    * ``staged`` — concurrent synchronous streams through the burst
+      buffer: the pool amortizes per-item latency, but each item still
+      carries its links' full round trips.
+    * ``windowed-staged`` — staged plus BDP-sized transport credit: round
+      trips amortize into the window; each windowed link instead ceilings
+      at ``window / RTT``.
+    * ``compressed`` — windowed-staged with every link's wire bytes
+      scaled by :data:`COMPRESS_WIRE_RATIO`, the whole path ceilinged at
+      :data:`COMPRESS_BYTES_PER_S` of quantize compute.
+    """
+    tiers = basin.tiers
+    links = basin.links
+    wire_ratio = COMPRESS_WIRE_RATIO if shape == "compressed" else 1.0
+
+    if shape == "direct":
+        t = 0.0
+        for i, tier in enumerate(tiers):
+            if (0 < i < len(tiers) - 1
+                    and tier.kind is TierKind.BURST_BUFFER):
+                continue
+            t += (item_bytes / tier.bandwidth_bytes_per_s
+                  + tier.latency_s + tier.jitter_s)
+        for link in links:
+            if link.bandwidth_bytes_per_s:
+                t += item_bytes / link.bandwidth_bytes_per_s
+            t += link.rtt_s * (1.0 + link.loss_rate)
+        if checksum:
+            t += item_bytes / digest_rate
+        rate = item_bytes / t
+    else:
+        rates = [tier.bandwidth_bytes_per_s for tier in tiers]
+        rates.extend((link.bandwidth_bytes_per_s or math.inf) * wire_ratio
+                     for link in links)
+        line = min(rates)
+        if shape == "compressed":
+            line = min(line, COMPRESS_BYTES_PER_S)
+        lat_total = sum(tier.latency_s + tier.jitter_s for tier in tiers)
+        if shape == "staged":
+            per_item = lat_total + sum(l.rtt_s * (1.0 + l.loss_rate)
+                                       for l in links)
+        else:
+            per_item = lat_total + sum(l.rtt_s * l.loss_rate for l in links)
+        workers = 1 if ordered else max_workers
+        worker_rate = item_bytes / (item_bytes / line + per_item)
+        rate = min(line, workers * worker_rate)
+        if shape in ("windowed-staged", "compressed"):
+            cap_bytes = min(tier.capacity_bytes for tier in tiers)
+            for link in links:
+                if link.rtt_s <= 0:
+                    continue
+                bdp_eff = link.bdp_bytes() * (1.0 + link.loss_rate)
+                wire_item = item_bytes / wire_ratio
+                win = bdp_eff * WINDOW_HEADROOM
+                if wire_item * 4 > bdp_eff:
+                    win = (bdp_eff + wire_item) * WINDOW_HEADROOM
+                if math.isfinite(cap_bytes):
+                    win = min(win, cap_bytes)
+                if max_window_bytes is not None:
+                    win = min(win, float(max_window_bytes))
+                rate = min(rate, wire_ratio * win
+                           / (link.rtt_s * (1.0 + link.loss_rate)))
+        if checksum:
+            # the staged digest overlaps transit but still ceilings the
+            # pipeline — §3.4's integrity budget, shape-priced
+            rate = min(rate, digest_rate)
+    if rate_cap is not None:
+        rate = min(rate, rate_cap)
+    if target is not None:
+        rate = min(rate, target)
+    return rate
+
+
+def _score_paths(basin: DrainageBasin,
+                 dist: Sequence[tuple[float, float]], *,
+                 checksum: bool, digest_rate: float, ordered: bool,
+                 max_workers: int, max_window_bytes: WindowClamp,
+                 rate_cap: Optional[float],
+                 compressible: bool) -> dict[str, float]:
+    """Candidate shape -> modeled end-to-end bytes/s over the item-size
+    distribution (byte-weighted harmonic mean: the rate at which the MIX
+    moves, so a small-file storm's per-item latency prices honestly
+    instead of hiding behind the mean size).  Branching basins score each
+    root->sink path at its conservation-allocated share and sum."""
+    candidates = [c for c in PATH_CHOICES
+                  if compressible or c != "compressed"]
+    if basin.is_linear:
+        paths = [tuple(t.name for t in basin.tiers)]
+        subs = {paths[0]: basin}
+        targets: dict = {paths[0]: None}
+        ids = [paths[0][-1]]
+    else:
+        paths = basin.paths()
+        subs = {p: basin.path_basin(p) for p in paths}
+        targets = basin.branch_rates()
+        ids = _branch_ids(paths)
+    scores: dict[str, float] = {}
+    for cand in candidates:
+        total = 0.0
+        for bid, p in zip(ids, paths):
+            clamp = _branch_window_clamp(max_window_bytes, bid)
+            total_bytes = sum(b * w for b, w in dist)
+            total_time = sum(
+                b * w / _shape_rate(subs[p], cand, b, checksum=checksum,
+                                    digest_rate=digest_rate,
+                                    ordered=ordered,
+                                    max_workers=max_workers,
+                                    max_window_bytes=clamp,
+                                    rate_cap=rate_cap,
+                                    target=targets[p])
+                for b, w in dist)
+            total += total_bytes / total_time
+        scores[cand] = total
+    return scores
+
+
+#: deterministic tie-break for equal scores: the historical full shape
+#: first, then the cheaper shapes — a tie must never flip behaviour away
+#: from what an un-priced plan would have built
+_PATH_PREFERENCE = {"windowed-staged": 0, "staged": 1, "compressed": 2,
+                    "direct": 3}
+
+
+def _choose_path(scores: Mapping[str, float], *,
+                 incumbent: Optional[str] = None,
+                 margin: float = 1.0) -> str:
+    """Highest-scoring candidate; with an ``incumbent`` (online
+    revision), the challenger must win by ``margin`` or the running shape
+    stands — a live rebuild is not free, and near-ties would flap."""
+    best = max(scores, key=lambda k: (scores[k], -_PATH_PREFERENCE[k]))
+    if (incumbent is not None and incumbent in scores
+            and scores[best] <= scores[incumbent] * margin):
+        return incumbent
+    return best
+
+
 def plan_transfer(
     basin: DrainageBasin,
     item_bytes: float,
@@ -716,6 +1071,10 @@ def plan_transfer(
     host_digest_bytes_per_s: float = HOST_DIGEST_BYTES_PER_S,
     accel_digest_bytes_per_s: float = ACCEL_DIGEST_BYTES_PER_S,
     rate_cap_bytes_per_s: Optional[float] = None,
+    path: Optional[str] = None,
+    item_bytes_dist: Optional[object] = None,
+    compressible: bool = False,
+    fault_priors: Optional[Mapping[str, float]] = None,
 ) -> TransferPlan:
     """Derive per-hop staging parameters from the basin model.
 
@@ -765,6 +1124,22 @@ def plan_transfer(
     own), the promise becomes the grant, and :func:`replan` will not read
     share-shaped stalls on a hop still delivering its grant as a degraded
     tier.  ``None`` (default) plans as the basin's sole occupant.
+
+    ``path`` engages the decision engine (§3.6): ``"auto"`` prices every
+    candidate shape in :data:`PATH_CHOICES` over the basin, integrity
+    placement, and item-size distribution, and parameterizes the hops for
+    the winner (recorded as :attr:`TransferPlan.path`, candidates in
+    :attr:`TransferPlan.path_scores`; :func:`replan` may later flip it —
+    the **path-revised** verdict); a concrete shape name forces it;
+    ``None`` (default) keeps the historical derivation bit for bit.
+    ``item_bytes_dist`` is an optional histogram (mapping or pairs of
+    ``bytes -> weight``) the candidates are priced over — a small-file
+    storm prices per-item latency honestly instead of at the mean.
+    ``compressible=True`` vouches the payload survives the int8 wire
+    transform, making the compressed candidate enumerable.
+    ``fault_priors`` (element -> observed transient-fault rate) prices
+    each hop's ``retry_budget``/``backoff_base_s``; absent elements keep
+    the cheap default posture.
     """
     if item_bytes <= 0:
         raise ValueError("item_bytes must be > 0")
@@ -780,12 +1155,54 @@ def plan_transfer(
     digest_rate = (host_digest_bytes_per_s if checksum_placement == "host"
                    else accel_digest_bytes_per_s)
 
+    # -- path decision (§3.6): price the candidate shapes, pick one ----------
+    compressible = bool(compressible) or path == "compressed"
+    dist = _resolve_dist(item_bytes_dist, item_bytes)
+    path_scores: dict[str, float] = {}
+    if path is not None:
+        if path != "auto" and path not in PATH_CHOICES:
+            raise ValueError(f"path must be 'auto' or one of {PATH_CHOICES},"
+                             f" got {path!r}")
+        path_scores = _score_paths(
+            basin, dist, checksum=checksum, digest_rate=digest_rate,
+            ordered=ordered, max_workers=max_workers,
+            max_window_bytes=max_window_bytes,
+            rate_cap=rate_cap_bytes_per_s, compressible=compressible)
+        shape = _choose_path(path_scores) if path == "auto" else path
+    else:
+        shape = "windowed-staged"
+    wire_ratio = COMPRESS_WIRE_RATIO if shape == "compressed" else 1.0
+
+    def _label(all_hops: Sequence[HopPlan]) -> str:
+        # legacy derivations label what they built without pricing it
+        if path is not None:
+            return shape
+        return ("windowed-staged"
+                if any(h.window_bytes > 0 for h in all_hops) else "staged")
+
+    def _compressed_target(sub: DrainageBasin,
+                           base: Optional[float]) -> Optional[float]:
+        # the compressed shape's line rate: links carry the int8 form
+        # (wire bytes / ratio), the whole path ceilings at the quantize
+        # kernel's service rate
+        if shape != "compressed":
+            return base
+        rates = [t.bandwidth_bytes_per_s for t in sub.tiers]
+        rates.extend((l.bandwidth_bytes_per_s or math.inf) * wire_ratio
+                     for l in sub.links)
+        boosted = min(min(rates), COMPRESS_BYTES_PER_S)
+        return boosted if base is None else min(base, boosted)
+
     if basin.is_linear:
         hops, headroom, planned = _plan_path(
             basin, item_bytes, stages, ordered, max_workers, max_capacity,
+            target=_compressed_target(basin, None),
             max_window_bytes=_branch_window_clamp(
                 max_window_bytes, basin.tiers[-1].name),
-            batch_items=batch, rate_cap=rate_cap_bytes_per_s)
+            batch_items=batch, rate_cap=rate_cap_bytes_per_s,
+            shape=shape, wire_ratio=wire_ratio)
+        if fault_priors:
+            _stamp_retry_budgets(hops, fault_priors)
         if rate_cap_bytes_per_s is not None:
             planned = min(planned, rate_cap_bytes_per_s)
         checksum_index = None
@@ -797,10 +1214,11 @@ def plan_transfer(
             # (host-compute-bound) apart from a slow tier
             hops[checksum_index] = dataclasses.replace(
                 hops[checksum_index], digest_bytes_per_s=digest_rate)
-        path = tuple(t.name for t in basin.tiers)
-        branch = BranchPlan(branch_id=path[-1], path=path, hops=hops,
+        tier_path = tuple(t.name for t in basin.tiers)
+        branch = BranchPlan(branch_id=tier_path[-1], path=tier_path,
+                            hops=hops,
                             rate_bytes_per_s=planned, weight=1.0,
-                            private_tiers=path)
+                            private_tiers=tier_path)
         return TransferPlan(hops=hops, item_bytes=float(item_bytes),
                             planned_bytes_per_s=planned,
                             checksum_index=checksum_index, basin=basin,
@@ -810,7 +1228,14 @@ def plan_transfer(
                             batch_policy=batch_items,
                             rate_cap_bytes_per_s=rate_cap_bytes_per_s,
                             host_digest_bytes_per_s=host_digest_bytes_per_s,
-                            accel_digest_bytes_per_s=accel_digest_bytes_per_s)
+                            accel_digest_bytes_per_s=accel_digest_bytes_per_s,
+                            path=_label(hops), path_policy=path,
+                            path_scores=path_scores,
+                            item_bytes_dist=(dist if item_bytes_dist
+                                             is not None else None),
+                            compressible=compressible,
+                            fault_priors=(dict(fault_priors)
+                                          if fault_priors else None))
 
     # -- branching basin: one plan per root->sink path -----------------------
     paths = basin.paths()
@@ -827,19 +1252,22 @@ def plan_transfer(
     crossing = {t.name: sum(1 for p in paths if t.name in p)
                 for t in basin.tiers}
     branches: list[BranchPlan] = []
-    for bid, path in zip(ids, paths):
-        sub = basin.path_basin(path)
+    for bid, tier_path in zip(ids, paths):
+        sub = basin.path_basin(tier_path)
         hops, _, planned = _plan_path(
             sub, item_bytes, stages, ordered, max_workers, max_capacity,
-            target=rates[path] * cap_scale,
+            target=_compressed_target(sub, rates[tier_path] * cap_scale),
             max_window_bytes=_branch_window_clamp(max_window_bytes, bid),
             batch_items=batch,
             rate_cap=None if rate_cap_bytes_per_s is None
-            else rates[path] * cap_scale)
+            else rates[tier_path] * cap_scale,
+            shape=shape, wire_ratio=wire_ratio)
+        if fault_priors:
+            _stamp_retry_budgets(hops, fault_priors)
         branches.append(BranchPlan(
-            branch_id=bid, path=path, hops=hops,
+            branch_id=bid, path=tier_path, hops=hops,
             rate_bytes_per_s=planned, weight=0.0,
-            private_tiers=tuple(n for n in path if crossing[n] == 1)))
+            private_tiers=tuple(n for n in tier_path if crossing[n] == 1)))
     aggregate = sum(b.rate_bytes_per_s for b in branches)
     for b in branches:
         b.weight = (b.rate_bytes_per_s / aggregate) if aggregate > 0 \
@@ -855,7 +1283,14 @@ def plan_transfer(
                         batch_policy=batch_items,
                         rate_cap_bytes_per_s=rate_cap_bytes_per_s,
                         host_digest_bytes_per_s=host_digest_bytes_per_s,
-                        accel_digest_bytes_per_s=accel_digest_bytes_per_s)
+                        accel_digest_bytes_per_s=accel_digest_bytes_per_s,
+                        path=_label([h for b in branches for h in b.hops]),
+                        path_policy=path, path_scores=path_scores,
+                        item_bytes_dist=(dist if item_bytes_dist
+                                         is not None else None),
+                        compressible=compressible,
+                        fault_priors=(dict(fault_priors)
+                                      if fault_priors else None))
 
 
 # ---------------------------------------------------------------------------
@@ -1488,6 +1923,35 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
                 for k in diag_keys:
                     diagnosis[k] = f"culprit-slow({tier_name})"
 
+    # -- fault priors: each hop's retry ledger updates its element's
+    # observed transient-fault rate (retries per item — the telemetry
+    # prior the next derivation prices retry budgets from).  A hop that
+    # went quiet decays its element's prior back toward the cheap
+    # default posture instead of holding the deep budget forever.
+    fault_priors: dict[str, float] = dict(plan.fault_priors or {})
+    by_name = {r.name: r for r in reports}
+    for branch in plan.branches:
+        for hop in branch.hops:
+            rkey = (f"{branch.branch_id}/{hop.name}" if multipath
+                    else hop.name)
+            rep = by_name.get(rkey)
+            if rep is None and multipath:
+                rep = by_name.get(hop.name)
+            if rep is None or rep.items < MIN_DIAGNOSIS_SAMPLES:
+                continue
+            element = hop.window_link or hop.up_tier
+            f_obs = rep.retries / rep.items
+            if f_obs > 0:
+                fault_priors[element] = ((1.0 - damping)
+                                         * fault_priors.get(element, 0.0)
+                                         + damping * f_obs)
+            elif element in fault_priors:
+                decayed = fault_priors[element] * (1.0 - damping)
+                if decayed < 1e-3:
+                    del fault_priors[element]
+                else:
+                    fault_priors[element] = decayed
+
     new_tiers = [dataclasses.replace(t, bandwidth_bytes_per_s=est[t.name],
                                      latency_s=lat_est[t.name],
                                      jitter_s=jit_est[t.name])
@@ -1516,22 +1980,54 @@ def replan(plan: TransferPlan, reports: Sequence[StageReport], *,
                      if k not in raise_branches} or None
         else:
             clamp = None
+    # -- path carry / revision: a forced path stays forced through every
+    # re-derivation; an "auto" plan re-prices its candidates against the
+    # REVISED basin (rtt/loss overrides, derated estimates — the very
+    # evidence that contradicts the executing shape's model) and switches
+    # only when a challenger clears PATH_REVISION_MARGIN over the
+    # incumbent's re-scored rate — the **path-revised** verdict.
+    checksum_on = plan.checksum_index is not None or plan.checksum_at_split
+    revised_placement = ("accel" if offload_digest
+                         else plan.checksum_placement)
+    path_arg = plan.path_policy
+    if plan.path_policy == "auto":
+        digest_rate = (plan.host_digest_bytes_per_s
+                       if revised_placement == "host"
+                       else plan.accel_digest_bytes_per_s)
+        scores = _score_paths(
+            new_basin, plan.item_bytes_dist or ((plan.item_bytes, 1.0),),
+            checksum=checksum_on, digest_rate=digest_rate,
+            ordered=plan.ordered, max_workers=MAX_WORKERS,
+            max_window_bytes=clamp, rate_cap=plan.rate_cap_bytes_per_s,
+            compressible=plan.compressible)
+        path_arg = _choose_path(scores, incumbent=plan.path,
+                                margin=PATH_REVISION_MARGIN)
     revised = plan_transfer(
         new_basin, plan.item_bytes, stages=plan.stages,
-        checksum=plan.checksum_index is not None or plan.checksum_at_split,
+        checksum=checksum_on,
         ordered=plan.ordered,
         max_window_bytes=clamp,
         batch_items=plan.batch_policy,
         # a host-compute-bound verdict's remedy: the rebuilt plan carries
         # the digest on the accelerator, so the checksum hop's ceiling
         # lifts from the host hash rate to the Pallas kernel's
-        checksum_placement="accel" if offload_digest
-        else plan.checksum_placement,
+        checksum_placement=revised_placement,
         host_digest_bytes_per_s=plan.host_digest_bytes_per_s,
         accel_digest_bytes_per_s=plan.accel_digest_bytes_per_s,
         # the arbiter grant survives re-derivation: a revision must never
         # silently promote a fleet member back to sole-occupant sizing
-        rate_cap_bytes_per_s=plan.rate_cap_bytes_per_s)
+        rate_cap_bytes_per_s=plan.rate_cap_bytes_per_s,
+        path=path_arg,
+        item_bytes_dist=plan.item_bytes_dist,
+        compressible=plan.compressible,
+        fault_priors=fault_priors or None)
+    if plan.path_policy == "auto":
+        # the re-derivation ran with the resolved choice pinned; the plan
+        # stays an "auto" plan so the NEXT revision may re-choose too
+        revised.path_policy = "auto"
+        if revised.path != plan.path:
+            diagnosis["path"] = (
+                f"path-revised({plan.path}->{revised.path})")
     if obs_rtt:
         # stamp the raw observed estimate on the re-timed hops (the
         # operator surface: describe() shows rtt-est= next to the damped

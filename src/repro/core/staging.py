@@ -609,7 +609,9 @@ class Stage(Generic[T, U]):
                workers: Optional[int] = None,
                window_bytes: Optional[float] = None,
                batch_items: Optional[int] = None,
-               rtt_s: Optional[float] = None) -> None:
+               rtt_s: Optional[float] = None,
+               retry_budget: Optional[int] = None,
+               backoff_base_s: Optional[float] = None) -> None:
         """Apply revised staging parameters to the *running* stage.
 
         ``capacity`` re-sizes the stage's burst buffer in place
@@ -626,9 +628,16 @@ class Stage(Generic[T, U]):
         loop head, so a replan can collapse a misbehaving batched hop to
         per-item (or vice versa) with zero drain.  ``rtt_s`` revises a
         windowed stage's ACK clock (an rtt-revised verdict); ignored on
-        queue-clocked stages."""
+        queue-clocked stages.  ``retry_budget`` / ``backoff_base_s``
+        revise the hop's fault posture live — workers read both at the
+        next transform attempt, so a fault-priced budget from telemetry
+        priors applies zero-drain."""
         if capacity is not None and capacity != self.buffer.capacity:
             self.buffer.resize(capacity)
+        if retry_budget is not None:
+            self.retry_budget = max(0, int(retry_budget))
+        if backoff_base_s is not None and backoff_base_s > 0:
+            self.backoff_base_s = float(backoff_base_s)
         if batch_items is not None:
             self.batch_items = max(1, int(batch_items))
         if workers is None:
@@ -911,7 +920,9 @@ class WindowedStage(Stage):
                workers: Optional[int] = None,
                window_bytes: Optional[float] = None,
                batch_items: Optional[int] = None,
-               rtt_s: Optional[float] = None) -> None:
+               rtt_s: Optional[float] = None,
+               retry_budget: Optional[int] = None,
+               backoff_base_s: Optional[float] = None) -> None:
         if window_bytes is not None and window_bytes > 0 \
                 and window_bytes != self.window_bytes:
             with self._win_cond:
@@ -927,7 +938,8 @@ class WindowedStage(Stage):
                 self.rtt_s = float(rtt_s)
                 self._win_cond.notify_all()
         super().resize(capacity=capacity, workers=workers,
-                       batch_items=batch_items)
+                       batch_items=batch_items, retry_budget=retry_budget,
+                       backoff_base_s=backoff_base_s)
 
 
 class StagePipeline:

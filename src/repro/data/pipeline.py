@@ -206,7 +206,7 @@ class InputPipeline:
         if self.sources is not None:
             self.shard_plan = plan_transfer(
                 self.basin, self.item_bytes, stages=("pull",),
-                ordered=ordered)
+                ordered=ordered, path="auto")
             if len(self.shard_plan.branches) != len(self.sources):
                 raise ValueError(
                     f"fan-in basin plans {len(self.shard_plan.branches)} "
@@ -223,12 +223,12 @@ class InputPipeline:
             tail_basin = self._fanin_tail_basin()
             self.plan = plan or plan_transfer(
                 tail_basin, self.item_bytes, stages=("decode", "stage"),
-                ordered=ordered)
+                ordered=ordered, path="auto")
             self._clamp_tail_promise()
         else:
             self.plan = plan or plan_transfer(
                 self.basin, self.item_bytes, stages=("decode", "stage"),
-                ordered=ordered)
+                ordered=ordered, path="auto")
         self._shard_pbp: Optional[ParallelBranchPipeline] = None
         #: per-stage totals already consumed by a shard-plan revision
         #: (see _fresh_shard_reports)

@@ -166,7 +166,8 @@ class Server:
         if sinks and len(sinks) > 1:
             plan = plan_transfer(self.fanout_basin(len(sinks)),
                                  item_bytes=max(1, n_batch * 4),
-                                 stages=("token-stream",), ordered=True)
+                                 stages=("token-stream",), ordered=True,
+                                 path="auto")
             mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
                                      telemetry=self.telemetry, layer="serve")
             # branch order follows basin link order == client order
@@ -188,7 +189,8 @@ class Server:
             one_sink = sinks[0] if sinks else sink
             plan = plan_transfer(self.stream_basin(),
                                  item_bytes=max(1, n_batch * 4),
-                                 stages=("token-stream",), ordered=True)
+                                 stages=("token-stream",), ordered=True,
+                                 path="auto")
             mover = UnifiedDataMover(MoverConfig(checksum=False), plan=plan,
                                      telemetry=self.telemetry, layer="serve")
             report = mover.streaming_transfer(

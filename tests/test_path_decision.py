@@ -1,0 +1,359 @@
+"""Stream-vs-stage decision engine: path selection, scoring properties,
+online path revision, fault-priced retry budgets, fleet re-admission.
+
+The planner's §3.6 claim is that the staged-vs-direct choice is a
+*planned* quantity: ``plan_transfer(path="auto")`` prices every
+execution shape against the basin and picks the best, records the
+scores, and revises the choice online when executed evidence
+contradicts the model.  These tests pin the decision engine's
+contract — the property that auto never scores below forced-staged,
+the per-regime winners, the histogram-honest small-file pricing, the
+``path-revised`` verdict with hysteresis, and the satellites that ride
+along (fault-priced retry budgets, fleet element re-admission)."""
+
+import pytest
+
+from repro.core.basin import DrainageBasin, Link, Tier, TierKind
+from repro.core.fleet import (DEAD_ELEMENT_BYTES_PER_S, FleetArbiter,
+                              RECOVERY_PROBE_BYTES_PER_S)
+from repro.core.planner import (DEFAULT_BACKOFF_BASE_S,
+                                DEFAULT_RETRY_BUDGET, MAX_RETRY_BUDGET,
+                                PATH_CHOICES, plan_delta, plan_transfer,
+                                replan)
+from repro.core.staging import Stage, StageReport
+
+KIB = 1 << 10
+MIB = 1 << 20
+
+
+def slow_bb_basin(bb_gbytes: float = 0.15) -> DrainageBasin:
+    """Fast endpoints around a slow staging tier — the regime where the
+    direct cut-through (which skips the staging copy) wins."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, bb_gbytes * 1e9,
+              latency_s=50e-6),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9),
+         Link("bb", "dst", 5e9, rtt_s=0.2e-3)])
+
+
+def long_fat_basin() -> DrainageBasin:
+    """Fast staging around a long-round-trip wire — the regime where
+    the windowed ledger (which hides the round trip) wins."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, 6e9, latency_s=10e-6),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9),
+         Link("bb", "dst", 12e9, rtt_s=20e-3)])
+
+
+def wire_bound_basin() -> DrainageBasin:
+    """Endpoints and staging far above the wire — the regime where
+    shrinking bytes on the wire (compressed shape) wins."""
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, 6e9, latency_s=10e-6),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9),
+         Link("bb", "dst", 0.6e9, rtt_s=1e-3)])
+
+
+BASINS = [slow_bb_basin(), long_fat_basin(), wire_bound_basin()]
+ITEM_SIZES = [16 * KIB, 256 * KIB, 4 * MIB, 64 * MIB]
+
+
+# -- selection properties -------------------------------------------------
+
+
+@pytest.mark.parametrize("item_bytes", ITEM_SIZES)
+@pytest.mark.parametrize("basin", BASINS,
+                         ids=["slow-bb", "long-fat", "wire-bound"])
+def test_auto_never_scores_below_forced_staged(basin, item_bytes):
+    """The decision-engine property: whatever shape auto picks, its
+    modeled rate is >= the forced-staged candidate's modeled rate (and
+    >= every other candidate — it is the argmax)."""
+    plan = plan_transfer(basin, item_bytes, stages=("stage", "move"),
+                         path="auto")
+    assert plan.path in PATH_CHOICES
+    assert plan.path_policy == "auto"
+    chosen = plan.path_scores[plan.path]
+    assert chosen >= plan.path_scores["staged"]
+    assert chosen == max(plan.path_scores.values())
+
+
+@pytest.mark.parametrize("checksum", [False, True])
+def test_auto_scoring_respects_integrity_budget(checksum):
+    """Scores are priced under the same integrity budget the plan
+    carries — a checksum plan's candidates all pay the digest."""
+    plan = plan_transfer(slow_bb_basin(), 4 * MIB,
+                         stages=("stage", "move"), path="auto",
+                         checksum=checksum)
+    assert plan.path_scores[plan.path] == max(plan.path_scores.values())
+
+
+def test_direct_wins_slow_burst_buffer_large_items():
+    plan = plan_transfer(slow_bb_basin(), 64 * MIB,
+                         stages=("stage", "move"), path="auto")
+    assert plan.path == "direct"
+    # the direct shape is a real parameterization: one in-flight item,
+    # stop-and-wait window
+    assert all(h.workers == 1 and h.capacity == 1 for h in plan.hops)
+
+
+def test_windowed_wins_long_fat_wire_small_items():
+    plan = plan_transfer(long_fat_basin(), 256 * KIB,
+                         stages=("stage", "move"), path="auto")
+    assert plan.path == "windowed-staged"
+    assert plan.path_scores["windowed-staged"] > \
+        plan.path_scores["direct"]
+
+
+def test_compressed_wins_wire_bound_when_compressible():
+    plan = plan_transfer(wire_bound_basin(), 4 * MIB,
+                         stages=("stage", "move"), path="auto",
+                         compressible=True)
+    assert plan.path == "compressed"
+    # compression lifts the planned rate past the raw wire
+    wire = min(l.bandwidth_bytes_per_s for l in wire_bound_basin().links)
+    assert plan.planned_bytes_per_s > wire
+    # the same basin without the transform never offers the candidate
+    plain = plan_transfer(wire_bound_basin(), 4 * MIB,
+                          stages=("stage", "move"), path="auto")
+    assert "compressed" not in plain.path_scores
+
+
+def test_item_dist_flips_choice_small_file_storm():
+    """Priced at the nominal item size alone the basin chooses direct;
+    the histogram says the byte volume is a storm of 16 KiB files, each
+    paying the full round trip in the stop-and-wait direct shape — the
+    honest per-item pricing flips the choice."""
+    basin = slow_bb_basin()
+    big = plan_transfer(basin, 64 * MIB, stages=("stage", "move"),
+                        path="auto")
+    assert big.path == "direct"
+    storm = plan_transfer(basin, 64 * MIB, stages=("stage", "move"),
+                          path="auto",
+                          item_bytes_dist=[(16 * KIB, 0.9999),
+                                           (64 * MIB, 0.0001)])
+    assert storm.path != "direct"
+    assert storm.item_bytes_dist is not None
+
+
+def test_forced_paths_parameterize_hops():
+    basin = long_fat_basin()
+    direct = plan_transfer(basin, 1 * MIB, stages=("move",),
+                           path="direct")
+    assert direct.path == "direct"
+    assert direct.hops[0].workers == 1
+    assert direct.hops[0].capacity == 1
+    staged = plan_transfer(basin, 1 * MIB, stages=("move",),
+                           path="staged")
+    windowed = plan_transfer(basin, 1 * MIB, stages=("move",),
+                             path="windowed-staged")
+    # N synchronous streams vs a BDP window: the staged window is the
+    # workers' in-flight items, the windowed window covers the pipe
+    assert windowed.hops[0].window_bytes > staged.hops[0].window_bytes
+
+
+def test_legacy_default_is_unchanged():
+    """No path= argument: the historical windowed-staged derivation,
+    no candidate scoring, describe() byte-identical."""
+    basin = long_fat_basin()
+    legacy = plan_transfer(basin, 1 * MIB, stages=("move",))
+    assert legacy.path_policy is None
+    assert legacy.path_scores == {}
+    forced = plan_transfer(basin, 1 * MIB, stages=("move",),
+                           path="windowed-staged")
+    assert [(h.workers, h.capacity, h.window_bytes) for h in legacy.hops] \
+        == [(h.workers, h.capacity, h.window_bytes) for h in forced.hops]
+    assert "path=" not in legacy.describe()
+
+
+def test_describe_prints_choice_and_scores():
+    plan = plan_transfer(slow_bb_basin(), 64 * MIB,
+                         stages=("stage", "move"), path="auto")
+    text = plan.describe()
+    assert "path=direct" in text
+    for name in plan.path_scores:
+        assert name in text
+
+
+def test_invalid_path_rejected():
+    with pytest.raises(ValueError):
+        plan_transfer(slow_bb_basin(), 1 * MIB, path="teleport")
+
+
+# -- online path revision -------------------------------------------------
+
+
+def shifted_rtt_reports(n: int = 16, rtt_s: float = 0.040,
+                        item_bytes: int = 256 * KIB) -> list:
+    per_item = rtt_s + 4e-4
+    return [StageReport(name="move", items=n, bytes=n * item_bytes,
+                        elapsed_s=n * per_item, active_s=n * per_item,
+                        stall_up_s=0.0, stall_down_s=0.0, errors=0,
+                        acks=n, rtt_sum_s=n * rtt_s)]
+
+
+def test_replan_revises_path_on_rtt_shift():
+    """The §3.6 flip: direct was right at 0.2 ms; a route change to
+    40 ms makes stop-and-wait pay the round trip per item, and the
+    replan both revises the RTT and switches the shape."""
+    plan = plan_transfer(slow_bb_basin(), 256 * KIB,
+                         stages=("stage", "move"), path="auto")
+    assert plan.path == "direct"
+    revised = replan(plan, shifted_rtt_reports(), damping=1.0)
+    assert revised.path == "windowed-staged"
+    assert revised.path_policy == "auto"
+    assert revised.diagnosis["path"] == \
+        "path-revised(direct->windowed-staged)"
+    delta = plan_delta(plan, revised)
+    assert delta
+    assert delta.path == "windowed-staged"
+    assert "move" in delta.hops
+
+
+def test_path_revision_carries_hysteresis():
+    """The incumbent stands unless a challenger clearly beats it — a
+    borderline score cannot flap the shape every boundary."""
+    plan = plan_transfer(slow_bb_basin(), 256 * KIB,
+                         stages=("stage", "move"), path="auto")
+    revised = replan(plan, shifted_rtt_reports(), damping=1.0)
+    # consistent evidence at the revised regime: the new incumbent holds
+    again = replan(revised, shifted_rtt_reports(), damping=1.0)
+    assert again.path == revised.path
+    assert not plan_delta(revised, again).path
+
+
+def test_forced_path_is_never_revised():
+    """Only the auto policy revises shape — a forced path is the
+    caller's decision and survives contradicting evidence."""
+    plan = plan_transfer(slow_bb_basin(), 256 * KIB,
+                         stages=("stage", "move"), path="direct")
+    revised = replan(plan, shifted_rtt_reports(), damping=1.0)
+    assert revised.path == "direct"
+    assert "path" not in revised.diagnosis
+
+
+# -- fault-priced retry budgets (satellite) -------------------------------
+
+
+def faulty_reports(n: int = 32, retries: int = 8) -> list:
+    return [StageReport(name="move", items=n, bytes=n * MIB,
+                        elapsed_s=n * 0.01, active_s=n * 0.01,
+                        stall_up_s=0.0, stall_down_s=0.0, errors=0,
+                        retries=retries, retry_wait_s=retries * 0.1)]
+
+
+def test_default_retry_posture_is_uniform():
+    plan = plan_transfer(slow_bb_basin(), 1 * MIB,
+                         stages=("stage", "move"))
+    for h in plan.hops:
+        assert h.retry_budget == DEFAULT_RETRY_BUDGET
+        assert h.backoff_base_s == DEFAULT_BACKOFF_BASE_S
+
+
+def test_observed_faults_price_the_budget():
+    """A flapping element earns a deeper budget and tighter backoff on
+    ITS hop only; fault-free hops keep the cheap default."""
+    plan = plan_transfer(slow_bb_basin(), 1 * MIB,
+                         stages=("stage", "move"))
+    revised = replan(plan, faulty_reports(), damping=1.0)
+    by = {h.name: h for h in revised.hops}
+    assert by["move"].retry_budget > DEFAULT_RETRY_BUDGET
+    assert by["move"].retry_budget <= MAX_RETRY_BUDGET
+    assert by["move"].backoff_base_s < DEFAULT_BACKOFF_BASE_S
+    assert by["stage"].retry_budget == DEFAULT_RETRY_BUDGET
+    assert revised.fault_priors
+
+
+def test_quiet_run_decays_the_budget():
+    plan = plan_transfer(slow_bb_basin(), 1 * MIB,
+                         stages=("stage", "move"))
+    hot = replan(plan, faulty_reports(), damping=1.0)
+    budget = {h.name: h.retry_budget for h in hot.hops}["move"]
+    cooled = hot
+    for _ in range(8):
+        cooled = replan(cooled, faulty_reports(retries=0), damping=0.5)
+    cooled_budget = {h.name: h.retry_budget for h in cooled.hops}["move"]
+    assert cooled_budget <= budget
+    assert not cooled.fault_priors or \
+        all(v < 0.25 for v in cooled.fault_priors.values())
+
+
+def test_retry_posture_rides_plan_delta_and_resize():
+    plan = plan_transfer(slow_bb_basin(), 1 * MIB,
+                         stages=("stage", "move"))
+    revised = replan(plan, faulty_reports(), damping=1.0)
+    delta = plan_delta(plan, revised)
+    assert "move" in delta.hops
+    assert delta.hops["move"].retry_budget > DEFAULT_RETRY_BUDGET
+    # the running stage absorbs the re-priced posture zero-drain
+    st = Stage("move", transform=lambda x: x)
+    st.resize(retry_budget=delta.hops["move"].retry_budget,
+              backoff_base_s=delta.hops["move"].backoff_base_s)
+    assert st.retry_budget == delta.hops["move"].retry_budget
+    assert st.backoff_base_s == pytest.approx(
+        delta.hops["move"].backoff_base_s)
+
+
+# -- fleet: path re-pricing and element re-admission (satellites) ---------
+
+
+def fleet_basin() -> DrainageBasin:
+    return DrainageBasin(
+        [Tier("src", TierKind.SOURCE, 8e9),
+         Tier("bb", TierKind.BURST_BUFFER, 2e9),
+         Tier("dst", TierKind.SINK, 8e9)],
+        [Link("src", "bb", 5e9), Link("bb", "dst", 5e9)])
+
+
+def test_granted_member_prices_paths_against_its_grant():
+    """A fleet member planning path=auto scores candidates under its
+    granted cap, not the raw line — the choice and scores live on the
+    granted plan."""
+    arb = FleetArbiter(fleet_basin())
+    a = arb.admit("a", item_bytes=4 * MIB,
+                  stages=("stage", "move"), path="auto")
+    assert a.status == "admitted"
+    assert a.plan.path_policy == "auto"
+    assert a.plan.path in PATH_CHOICES
+    assert a.plan.path_scores
+    solo_cap = a.granted_bytes_per_s
+    # a peer halves the grant; the re-granted plan re-prices
+    arb.admit("b", item_bytes=4 * MIB,
+              stages=("stage", "move"), path="auto")
+    assert a.granted_bytes_per_s < solo_cap
+    assert a.plan.path_scores[a.plan.path] <= \
+        a.granted_bytes_per_s * (1 + 1e-6)
+
+
+def test_element_recovery_restores_estimate_and_relevels():
+    arb = FleetArbiter(fleet_basin())
+    a = arb.admit("a", item_bytes=1 * MIB)
+    before = a.granted_bytes_per_s
+    arb.element_died("bb")
+    assert a.granted_bytes_per_s <= DEAD_ELEMENT_BYTES_PER_S
+    arb.element_recovered("bb")
+    assert a.granted_bytes_per_s == pytest.approx(before)
+    bb = next(t for t in arb.basin.tiers if t.name == "bb")
+    assert bb.bandwidth_bytes_per_s == pytest.approx(2e9)
+
+
+def test_recovery_probe_detects_return():
+    """The detection path: a clean post-derate probe far above the
+    obituary re-admits the element (clamped to the observation when it
+    came back weaker); a retry trickle does not."""
+    arb = FleetArbiter(fleet_basin())
+    a = arb.admit("a", item_bytes=1 * MIB)
+    arb.element_died("bb")
+    assert not arb.probe_element("bb", RECOVERY_PROBE_BYTES_PER_S / 2)
+    assert a.granted_bytes_per_s <= DEAD_ELEMENT_BYTES_PER_S
+    assert arb.probe_element("bb", 0.5e9)
+    bb = next(t for t in arb.basin.tiers if t.name == "bb")
+    assert bb.bandwidth_bytes_per_s == pytest.approx(0.5e9)
+    assert a.granted_bytes_per_s > DEAD_ELEMENT_BYTES_PER_S
+    # probing a live element is a no-op
+    assert not arb.probe_element("bb", 1e9)

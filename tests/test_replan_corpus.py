@@ -59,11 +59,21 @@ def replay(spec: dict):
     budget the plan carried (a host-compute-bound fixture captures a
     digest placed on a too-slow host).  ``rate_cap_gbps`` records an
     arbiter grant the plan ran under (a fleet fixture captures how the
-    cap gates — or deliberately does not gate — the stall verdicts)."""
+    cap gates — or deliberately does not gate — the stall verdicts).
+    ``path`` records the execution-shape policy the plan ran under
+    (``"auto"`` for the decision engine, a forced shape otherwise) and
+    ``item_bytes_dist`` the recorded item-size histogram — a path
+    fixture captures whether executed evidence flipped the chosen shape
+    (``expected_path``)."""
     basin = build_basin(spec)
     kwargs = {}
     if "rate_cap_gbps" in spec:
         kwargs["rate_cap_bytes_per_s"] = spec["rate_cap_gbps"] * GBPS
+    if "path" in spec:
+        kwargs["path"] = spec["path"]
+    if "item_bytes_dist" in spec:
+        kwargs["item_bytes_dist"] = [tuple(p)
+                                     for p in spec["item_bytes_dist"]]
     if spec.get("checksum"):
         kwargs["checksum"] = True
         kwargs["checksum_placement"] = spec.get("checksum_placement",
@@ -88,7 +98,7 @@ def replay(spec: dict):
 
 
 def test_corpus_is_present():
-    assert len(FIXTURES) >= 15, (
+    assert len(FIXTURES) >= 17, (
         f"expected the recorded-report corpus under {DATA_DIR}")
 
 
@@ -154,6 +164,13 @@ def test_replayed_verdict_is_stable(path):
         by = {b.branch_id: b for b in revised.branches}
         assert all(b.weight >= by[dead].weight
                    for bid, b in by.items() if bid != dead)
+    exp_path = spec.get("expected_path")
+    if exp_path is not None:
+        # the path decision: the revised plan executes this shape (a
+        # path-revised verdict's switch, or the incumbent that survived
+        # re-scoring under hysteresis)
+        assert revised.path == exp_path
+        assert revised.path_scores, "a path fixture must carry scores"
     window = spec.get("expected_window_relative")
     if window is not None:
         clamped = plan_transfer(build_basin(spec), spec["item_bytes"],
